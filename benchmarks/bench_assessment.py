@@ -1,0 +1,84 @@
+"""Paper Figs. 10-11 (MLOE/MMOM time breakdown) and Fig. 15 (criteria vs
+TLR accuracy)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MaternParams, uniform_locations
+from repro.core.assessment import comp_criteria, fact_matrices, gen_matrices
+
+from .common import emit, time_fn
+
+
+def bench_mloe_mmom_breakdown(quick=False):
+    """Figs. 10-11: GEN/FACT/COMP phase times, univariate + bivariate.
+
+    The paper's COMP phase dominates (per-location Level-1/2 BLAS loops);
+    our batched Level-3 formulation flips that — FACT dominates (beyond-paper
+    optimization, recorded in EXPERIMENTS.md §Perf-assessment).
+    """
+    n = 400 if quick else 900
+    npred = 50 if quick else 100
+    obs = uniform_locations(n, seed=0)
+    pred = uniform_locations(npred, seed=1)
+    for p, tag in ((1, "univariate"), (2, "bivariate")):
+        if p == 1:
+            tt = MaternParams.univariate(1.0, 0.1, 0.8)
+            ta = MaternParams.univariate(1.1, 0.12, 0.7)
+        else:
+            tt = MaternParams.bivariate(a=0.1, nu11=0.5, nu22=1.0, beta=0.5)
+            ta = tt._replace(a=jnp.asarray(0.13, jnp.float64))
+
+        gen = jax.jit(lambda: gen_matrices(obs, tt, ta, nugget=1e-8))
+        us_gen, (st, sa) = time_fn(gen, iters=2)
+        fact = jax.jit(fact_matrices)
+        us_fact, (ct, ca) = time_fn(fact, st, sa, iters=2)
+        comp = jax.jit(lambda s, c1, c2: comp_criteria(
+            obs, pred, tt, ta, s, c1, c2))
+        us_comp, res = time_fn(comp, st, ct, ca, iters=2)
+        total = us_gen + us_fact + us_comp
+        emit(f"fig10_11_{tag}_GEN", us_gen, f"frac={us_gen / total:.2f}")
+        emit(f"fig10_11_{tag}_FACT", us_fact, f"frac={us_fact / total:.2f}")
+        emit(f"fig10_11_{tag}_COMP", us_comp,
+             f"frac={us_comp / total:.2f};mloe={float(res.mloe):.4f};"
+             f"mmom={float(res.mmom):.4f}")
+
+
+def bench_criteria_vs_accuracy(quick=False):
+    """Fig. 15: MLOE/MMOM shrink as the approximated parameters approach the
+    truth (stronger dependence needs higher TLR accuracy)."""
+    from repro.core import pairwise_distances, simulate_mgrf
+    from repro.core.mle import MLEConfig, fit
+
+    n = 250 if quick else 400
+    npred = 40
+    locs = uniform_locations(n + npred, seed=2)
+    obs, pred = locs[:n], locs[n:]
+    truth = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=1.0, beta=0.5)
+    z = simulate_mgrf(jax.random.PRNGKey(0), jnp.asarray(obs), truth,
+                      nugget=1e-8)[0]
+    for name, tol in (("TLR5", 1e-5), ("TLR7", 1e-7), ("TLR9", 1e-9)):
+        cfg = MLEConfig(p=2, backend="tlr", tlr_tol=tol, tlr_max_rank=32,
+                        tile_size=max(64, 2 * n // 8), max_iters=40,
+                        nugget=1e-8)
+        import time
+        t0 = time.perf_counter()
+        res = fit(obs, z, cfg)
+        us = (time.perf_counter() - t0) * 1e6
+        from repro.core.assessment import mloe_mmom
+        crit = mloe_mmom(obs, pred, truth, res.params, nugget=1e-8)
+        emit(f"fig15_{name}", us,
+             f"mloe={float(crit.mloe):.4f};mmom={float(crit.mmom):.4f};"
+             f"a_hat={float(res.params.a):.3f}")
+
+
+def main(quick=False):
+    bench_mloe_mmom_breakdown(quick)
+    bench_criteria_vs_accuracy(quick)
+
+
+if __name__ == "__main__":
+    main()

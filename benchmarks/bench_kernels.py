@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp reference.
+
+Wall times on CPU are NOT TPU predictions — interpret mode runs the kernel
+body through the Python interpreter; the point is shape coverage plus the
+ref-path timing that the CPU benchmarks actually use.  TPU performance is
+assessed structurally in the roofline (§Perf).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import matern_tile, potrf, syrk, tlr_mm
+
+from .common import emit, time_fn
+
+
+def main(quick=False):
+    rng = np.random.default_rng(0)
+    n = 256 if quick else 512
+    la = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+
+    us, _ = time_fn(lambda: matern_tile(la, la, 10.0, 1.0, nu=1.5,
+                                        impl="ref"), iters=3)
+    flops = 8 * n * n  # dist + matern, approx
+    emit("kernel_matern_tile_ref", us, f"n={n};approx_mflops={flops / 1e6:.1f}")
+
+    b, nb, k = (4, 64, 16) if quick else (8, 128, 32)
+    ua, va, ub, vb = (jnp.asarray(rng.normal(size=(b, nb, k)), jnp.float32)
+                      for _ in range(4))
+    acc = jnp.asarray(rng.normal(size=(b, nb, nb)), jnp.float32)
+    us, _ = time_fn(lambda: tlr_mm(ua, va, ub, vb, acc, impl="ref"), iters=3)
+    emit("kernel_tlr_mm_ref", us,
+         f"batch={b};nb={nb};k={k};paper_flops_model={36 * nb * k * k * b}")
+
+    a = rng.normal(size=(b, nb, nb))
+    a = jnp.asarray(a @ np.swapaxes(a, -1, -2) + nb * np.eye(nb), jnp.float32)
+    us, _ = time_fn(lambda: potrf(a, impl="ref"), iters=3)
+    emit("kernel_potrf_ref", us, f"batch={b};nb={nb}")
+
+    us, _ = time_fn(lambda: syrk(acc, ua, impl="ref"), iters=3)
+    emit("kernel_syrk_ref", us, f"batch={b};nb={nb};k={k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Paper Figs. 5-8: rank distributions, memory footprint, one MLE iteration.
+
+Reduced-n CPU reproduction of the TLR claims; the full-scale systems numbers
+come from the dry-run roofline (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MaternParams, exact_loglik, pairwise_distances
+from repro.core import tlr as T
+from repro.core.covariance import build_sigma, morton_order
+from repro.core.simulate import grid_locations, simulate_mgrf
+
+from .common import emit, time_fn
+
+
+def _setup(n_side, a=0.09):
+    locs = grid_locations(n_side, jitter=0.2, seed=0)
+    locs = np.asarray(locs)[morton_order(locs)]
+    params = MaternParams.bivariate(a=a, nu11=0.5, nu22=1.0, beta=0.5)
+    dists = pairwise_distances(locs)
+    return locs, params, dists
+
+
+def bench_rank_distribution(quick=False):
+    """Fig. 5: off-diagonal tile ranks at TLR5/7/9 grow toward the diagonal."""
+    locs, params, dists = _setup(16 if quick else 24)
+    sigma = build_sigma(None, params, dists=dists, nugget=1e-8)
+    nb = 64 if quick else 96
+    for name, tol in (("TLR5", 1e-5), ("TLR7", 1e-7), ("TLR9", 1e-9)):
+        us, t = time_fn(functools.partial(T.tlr_compress, sigma, nb, tol,
+                                          min(nb, 64)), iters=1)
+        ranks = T.rank_distribution(t)
+        tn = t.n_tiles
+        near = np.mean([ranks[i, i - 1] for i in range(1, tn)])
+        far = np.mean([ranks[i, j] for i in range(tn) for j in range(i)
+                       if i - j >= tn // 2]) if tn >= 4 else 0.0
+        emit(f"fig5_rank_dist_{name}", us,
+             f"near_diag_rank={near:.1f};far_rank={far:.1f};dense={nb}")
+
+
+def bench_memory_footprint(quick=False):
+    """Fig. 6: TLR memory vs dense (paper: 6.68X/4.93X/3.86X at n~10^5)."""
+    for n_side in ((16, 24) if quick else (16, 24, 28)):
+        locs, params, dists = _setup(n_side)
+        sigma = build_sigma(None, params, dists=dists, nugget=1e-8)
+        m = sigma.shape[0]
+        for name, tol in (("TLR5", 1e-5), ("TLR7", 1e-7), ("TLR9", 1e-9)):
+            t = T.tlr_compress(sigma, 0, tol, 64)
+            mem = T.memory_footprint(t)
+            emit(f"fig6_memory_{name}_m{m}", 0.0,
+                 f"ratio={mem['ratio']:.2f};tlr_mb={mem['tlr_bytes']/1e6:.1f};"
+                 f"dense_mb={mem['dense_bytes']/1e6:.1f}")
+
+
+def bench_mle_iteration(quick=False):
+    """Figs. 7-8: one MLE iteration, exact vs TLR (wall time, CPU f64)."""
+    key = jax.random.PRNGKey(0)
+    for n_side in ((16,) if quick else (16, 24, 28)):
+        locs, params, dists = _setup(n_side)
+        z = simulate_mgrf(key, locs, params, nugget=1e-8)[0]
+        m = 2 * n_side * n_side
+
+        exact_fn = jax.jit(lambda d, zz: exact_loglik(
+            None, zz, params, dists=d, nugget=1e-8).loglik)
+        us_exact, _ = time_fn(exact_fn, dists, z, iters=2)
+        emit(f"fig7_exact_m{m}", us_exact, "backend=dense")
+
+        for name, tol in (("TLR5", 1e-5), ("TLR7", 1e-7), ("TLR9", 1e-9)):
+            tlr_fn = jax.jit(functools.partial(
+                T.tlr_loglik, tol=tol, max_rank=48,
+                tile_size=max(64, m // 16), nugget=1e-8))
+            us_tlr, _ = time_fn(tlr_fn, dists, z, params, iters=2)
+            emit(f"fig7_{name}_m{m}", us_tlr,
+                 f"speedup_vs_exact={us_exact / us_tlr:.2f}")
+
+
+def main(quick=False):
+    bench_rank_distribution(quick)
+    bench_memory_footprint(quick)
+    bench_mle_iteration(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Reduced-n sizes run the statistical
+reproductions on CPU in f64; the full-scale systems numbers come from
+``python -m repro.launch.dryrun`` (EXPERIMENTS.md §Roofline).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only tlr,...]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the paper's precision (CPU path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / fewer replicates")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module suffixes to run")
+    args = ap.parse_args()
+
+    from . import bench_assessment, bench_estimation, bench_kernels, bench_tlr
+    modules = dict(tlr=bench_tlr, assessment=bench_assessment,
+                   estimation=bench_estimation, kernels=bench_kernels)
+    selected = [s for s in args.only.split(",") if s] or list(modules)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        mod = modules[name]
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, str(e)))
+        print(f"# {name} finished in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

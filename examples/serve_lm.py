@@ -1,0 +1,59 @@
+"""Serve a small model with batched requests: prefill + jit'd decode loop.
+
+Demonstrates the serving engine on each cache family: dense KV (qwen3),
+ring-buffer SWA (mixtral), and O(1) recurrent state (mamba2).
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import init_model
+from repro.serving.engine import generate, make_serve_fns
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+
+    max_len = args.prompt_len + args.steps
+    prefill, serve_step = make_serve_fns(cfg, max_len)
+    t0 = time.time()
+    state, _ = prefill(params, prompts)
+    jax.block_until_ready(state.caches)
+    t_prefill = time.time() - t0
+
+    toks = []
+    t0 = time.time()
+    for _ in range(args.steps):
+        toks.append(state.last_tokens)
+        state, _ = serve_step(params, state)
+    jax.block_until_ready(state.last_tokens)
+    t_decode = time.time() - t0
+
+    out = jnp.stack(toks, axis=1)
+    print(f"arch={cfg.name} batch={args.batch}")
+    print(f"prefill {args.prompt_len} tokens: {t_prefill * 1e3:.1f} ms "
+          "(includes compile)")
+    print(f"decode {args.steps} steps: {t_decode * 1e3:.1f} ms "
+          f"({t_decode / args.steps * 1e3:.1f} ms/token incl. compile)")
+    print("generated token ids (first sequence):",
+          [int(t) for t in out[0][:12]], "...")
+
+
+if __name__ == "__main__":
+    main()

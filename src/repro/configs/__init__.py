@@ -1,0 +1,49 @@
+"""Config registry: ``get_arch(name)`` / ``get_shape(arch, name)``."""
+from __future__ import annotations
+
+from .base import (ArchConfig, GeoStatConfig, GeoStatShape, ShapeConfig,
+                   GEOSTAT_SHAPES, LM_SHAPES)
+from .qwen3_4b import QWEN3_4B
+from .granite_34b import GRANITE_34B
+from .yi_6b import YI_6B
+from .phi3_mini import PHI3_MINI
+from .musicgen_medium import MUSICGEN_MEDIUM
+from .mamba2_780m import MAMBA2_780M
+from .mixtral_8x7b import MIXTRAL_8X7B
+from .llama4_maverick import LLAMA4_MAVERICK
+from .recurrentgemma_9b import RECURRENTGEMMA_9B
+from .pixtral_12b import PIXTRAL_12B
+from .geostat import GEOSTAT_EXACT, GEOSTAT_TLR
+
+ARCHS = {
+    c.name: c for c in [
+        QWEN3_4B, GRANITE_34B, YI_6B, PHI3_MINI, MUSICGEN_MEDIUM,
+        MAMBA2_780M, MIXTRAL_8X7B, LLAMA4_MAVERICK, RECURRENTGEMMA_9B,
+        PIXTRAL_12B, GEOSTAT_EXACT, GEOSTAT_TLR,
+    ]
+}
+
+LM_ARCH_NAMES = [c for c in ARCHS if not c.startswith("geostat")]
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(arch, name: str):
+    if isinstance(arch, str):
+        arch = get_arch(arch)
+    if getattr(arch, "family", "") == "geostat":
+        return GEOSTAT_SHAPES[name]
+    return LM_SHAPES[name]
+
+
+def iter_cells():
+    """All (arch, shape) baseline cells, with skip reasons where relevant."""
+    for name, arch in ARCHS.items():
+        shapes = GEOSTAT_SHAPES if arch.family == "geostat" else LM_SHAPES
+        for sname, shape in shapes.items():
+            supported = arch.supports_shape(shape)
+            yield arch, shape, supported

@@ -1,0 +1,18 @@
+"""The paper's own workloads as first-class --arch configs."""
+from .base import GEOSTAT_SHAPES, GeoStatConfig
+
+GEOSTAT_EXACT = GeoStatConfig(
+    name="geostat-exact",
+    backend="exact",
+    tile_size=4096,              # GSPMD panel width
+    shapes=tuple(GEOSTAT_SHAPES),
+)
+
+GEOSTAT_TLR = GeoStatConfig(
+    name="geostat-tlr",
+    backend="tlr",
+    tile_size=2048,              # nb = O(sqrt(pn)) trade-off (paper §5.3)
+    max_rank=128,
+    tol=1e-7,                    # TLR7 default
+    shapes=tuple(GEOSTAT_SHAPES),
+)

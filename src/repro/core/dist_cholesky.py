@@ -1,0 +1,235 @@
+"""Distributed exact MLE: blocked right-looking Cholesky over a GSPMD-sharded
+covariance matrix (the paper's CHAMELEON/ScaLAPACK role on a TPU mesh).
+
+The paper's dynamic task DAG (Fig. 1) becomes a *static* schedule: a
+python-unrolled panel loop whose three phases per panel are
+
+  POTRF  — small (panel x panel) replicated Cholesky,
+  TRSM   — triangular solve of the (rest x panel) column panel,
+  SYRK   — rank-panel GEMM trailing update (the O(m^3) term; a fully sharded
+           distributed matmul whose collectives XLA overlaps with compute).
+
+Sharding: Sigma lives P("data", "model") — a Pr x Pc process grid exactly
+like the 2-D block distribution in the paper; the panel broadcast the DAG
+edges imply shows up as the all-gathers GSPMD inserts around the TRSM/SYRK.
+
+Note the trailing update computes the full square (not just the lower
+triangle): ~2x flops over the paper's task version, traded for SPMD shape
+regularity.  Measured and addressed in EXPERIMENTS.md §Perf (hillclimb uses
+shrinking unrolled panels, which XLA re-tightens per step).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .covariance import MaternParams, build_sigma
+from .likelihood import LoglikResult
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def blocked_cholesky_panels(a, panel: int, mesh=None, row_axes=("data",)):
+    """Lower Cholesky via an unrolled right-looking factorization in
+    *stateless* panel form: no in-place updates of the (m, m) buffer — the
+    trailing matrix shrinks each step, and the factor is returned as a list
+    of (L_kk, panel) pairs.
+
+    The first (in-place ``.at[...].set``) formulation forced XLA to
+    round-trip the full sharded Sigma every panel step: ~1e14 HBM
+    bytes/chip at m = 131k (EXPERIMENTS.md §Perf, geostat iteration).  The
+    shrinking-trail dataflow is also closer to the paper's task graph.
+    """
+    m = a.shape[0]
+    assert m % panel == 0, (m, panel)
+    nk = m // panel
+    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+    panels = []
+    trail = a
+    for k in range(nk):
+        akk = trail[:panel, :panel]
+        lkk = jnp.linalg.cholesky(akk)                      # POTRF (replicated)
+        if (k + 1) < nk:
+            rest = trail[panel:, :panel]                     # (m_k, panel)
+            pan = jax.lax.linalg.triangular_solve(           # TRSM
+                lkk, rest, left_side=False, lower=True, transpose_a=True)
+            pan = _constrain(pan, mesh, P(row, None))
+            trail = trail[panel:, panel:] - pan @ pan.T      # SYRK (dist GEMM)
+            trail = _constrain(trail, mesh, P(row, "model"))
+        else:
+            pan = None
+        panels.append((lkk, pan))
+    return panels
+
+
+def panels_logdet(panels) -> jax.Array:
+    return 2.0 * sum(jnp.sum(jnp.log(jnp.diagonal(lkk)))
+                     for lkk, _ in panels)
+
+
+def panels_forward_solve(panels, z, panel: int):
+    """Solve L alpha = z from the panel factor.  z: (m,) or (m, r)."""
+    z = jnp.asarray(z)
+    single = z.ndim == 1
+    if single:
+        z = z[:, None]
+    outs = []
+    rest = z
+    for k, (lkk, pan) in enumerate(panels):
+        blk = jax.lax.linalg.triangular_solve(
+            lkk, rest[:panel], left_side=True, lower=True)
+        outs.append(blk)
+        if pan is not None:
+            rest = rest[panel:] - pan @ blk
+    out = jnp.concatenate(outs, axis=0)
+    return out[:, 0] if single else out
+
+
+def panels_backward_solve(panels, y, panel: int):
+    """Solve L^T x = y from the panel factor (for cokriging weights)."""
+    y = jnp.asarray(y)
+    single = y.ndim == 1
+    if single:
+        y = y[:, None]
+    nk = len(panels)
+    outs = [None] * nk
+    for k in range(nk - 1, -1, -1):
+        lkk, pan = panels[k]
+        rhs = y[k * panel:(k + 1) * panel]
+        if pan is not None:
+            # subtract contributions of already-solved lower blocks.
+            x_below = jnp.concatenate(outs[k + 1:], axis=0)
+            rhs = rhs - pan.T @ x_below
+        outs[k] = jax.lax.linalg.triangular_solve(
+            lkk, rhs, left_side=True, lower=True, transpose_a=True)
+    out = jnp.concatenate(outs, axis=0)
+    return out[:, 0] if single else out
+
+
+def blocked_cholesky(a, panel: int, mesh=None, row_axes=("data",)):
+    """Dense lower Cholesky factor (assembled from the panel form; used by
+    tests and small problems — the distributed path stays in panel form)."""
+    m = a.shape[0]
+    panels = blocked_cholesky_panels(a, panel, mesh, row_axes)
+    out = jnp.zeros_like(a)
+    for k, (lkk, pan) in enumerate(panels):
+        r0 = k * panel
+        out = out.at[r0:r0 + panel, r0:r0 + panel].set(lkk)
+        if pan is not None:
+            out = out.at[r0 + panel:, r0:r0 + panel].set(pan)
+    return out
+
+
+def forward_substitution(l, z, panel: int):
+    """Blocked forward solve L alpha = z from a dense factor (test path)."""
+    m = l.shape[0]
+    nk = m // panel
+    z = jnp.asarray(z)
+    single = z.ndim == 1
+    if single:
+        z = z[:, None]
+    out = jnp.zeros_like(z)
+    for k in range(nk):
+        r0, r1 = k * panel, (k + 1) * panel
+        blk = jax.lax.linalg.triangular_solve(
+            l[r0:r1, r0:r1], z[r0:r1], left_side=True, lower=True)
+        out = out.at[r0:r1].set(blk)
+        if r1 < m:
+            z = z.at[r1:].add(-(l[r1:, r0:r1] @ blk))
+    return out[:, 0] if single else out
+
+
+def _dist_loglik_body(dists, z, params: MaternParams, nugget: float,
+                      panel: int, representation: str, mesh,
+                      row_axes=("data",)):
+    """Un-jitted body so concrete (closure) params keep the closed-form GEN
+    fast path (covariance._pair_correlations)."""
+    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+    sigma = build_sigma(None, params, representation=representation,
+                        nugget=nugget, dists=dists)
+    sigma = _constrain(sigma, mesh, P(row, "model"))
+    chol = blocked_cholesky(sigma, panel, mesh, row_axes)
+    alpha = forward_substitution(chol, z, panel)
+    quad = jnp.sum(alpha * alpha)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    m = z.shape[-1]
+    ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
+    return LoglikResult(ll, logdet, quad, None)
+
+
+@partial(jax.jit, static_argnames=("panel", "representation", "mesh",
+                                   "row_axes", "nugget"))
+def _dist_loglik_impl(dists, z, params: MaternParams, nugget: float,
+                      panel: int, representation: str, mesh,
+                      row_axes=("data",)):
+    return _dist_loglik_body(dists, z, params, nugget, panel, representation,
+                             mesh, row_axes)
+
+
+def dist_exact_loglik(dists, z, params: MaternParams, *, nugget: float = 1e-6,
+                      panel: int = 4096, mesh=None,
+                      representation: str = "I") -> LoglikResult:
+    """One distributed exact MLE iteration (GEN + POTRF + solve) — the unit
+    benchmarked in the paper's Figs. 7-9."""
+    return _dist_loglik_impl(dists, z, params, nugget, panel, representation,
+                             mesh)
+
+
+def _pair_dists(a, b):
+    d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def dist_loglik_lowerable(n: int, p: int, params: MaternParams, *,
+                          panel: int, mesh, nugget: float = 1e-6,
+                          dtype=jnp.float32, row_axes=("data",)):
+    """(fn, input ShapeDtypeStructs) for the dry-run: lowers the full
+    GEN -> Cholesky -> solve pipeline from location coordinates."""
+    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+
+    def fn(locs, z):
+        dists = _constrain(_pair_dists(locs, locs), mesh, P(row, "model"))
+        return _dist_loglik_body(dists, z, params, nugget, panel, "I", mesh,
+                                 row_axes)
+
+    specs = (jax.ShapeDtypeStruct((n, 2), dtype),
+             jax.ShapeDtypeStruct((n * p,), dtype))
+    return fn, specs
+
+
+def dist_cokrige_lowerable(n: int, n_pred: int, p: int, params: MaternParams,
+                           *, panel: int, mesh, nugget: float = 1e-6,
+                           dtype=jnp.float32, row_axes=("data",)):
+    """Dry-run cokriging (Eq. 3): GEN -> Cholesky -> batched solves ->
+    c0^T alpha for all prediction locations at once."""
+    from .covariance import build_c0
+    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+
+    def fn(obs_locs, pred_locs, z):
+        dists = _constrain(_pair_dists(obs_locs, obs_locs), mesh,
+                           P(row, "model"))
+        sigma = build_sigma(None, params, nugget=nugget, dists=dists)
+        sigma = _constrain(sigma, mesh, P(row, "model"))
+        chol = blocked_cholesky(sigma, panel, mesh, row_axes)
+        c0 = build_c0(pred_locs, obs_locs, params)        # (npred, pn, p)
+        c0 = jnp.moveaxis(c0, 0, 1).reshape(n * p, n_pred * p)
+        c0 = _constrain(c0, mesh, P(row, "model"))
+        alpha = forward_substitution(chol, z, panel)
+        beta = jax.lax.linalg.triangular_solve(chol, alpha[:, None],
+                                               left_side=True, lower=True,
+                                               transpose_a=True)[:, 0]
+        preds = beta @ c0                                  # (npred*p,)
+        return preds.reshape(n_pred, p)
+
+    specs = (jax.ShapeDtypeStruct((n, 2), dtype),
+             jax.ShapeDtypeStruct((n_pred, 2), dtype),
+             jax.ShapeDtypeStruct((n * p,), dtype))
+    return fn, specs

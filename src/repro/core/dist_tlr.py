@@ -1,0 +1,272 @@
+"""Distributed TLR Cholesky: the paper's HiCMA workload as a fori_loop SPMD
+program over a sharded tile grid.
+
+Layout (DESIGN.md §2,4): fixed-kmax UV storage
+
+    D     (T, nb, nb)        diagonal tiles,        sharded P("data")
+    U, V  (T, T, nb, kmax)   strict-lower UV tiles, sharded P("data","model")
+
+i.e. tile (i, j) lives on device grid cell (i mod Pr-block, j mod Pc-block) —
+the 2-D distribution of CHAMELEON with block (not cyclic) placement.
+
+Each fori_loop step k performs the full panel of paper-Fig.-1 tasks as
+*masked full-grid batched* kernels:
+
+    POTRF  — gather D[k] (one tile, replicated), factor
+    TRSM   — batched triangular solve of column k's V tiles  (T-batch)
+    SYRK   — batched TLR-MM onto the diagonal                (T-batch)
+    GEMM   — batched TLR-MM + QR/SVD recompression over the whole (T, T)
+             grid, masked to i > j > k                       (T^2-batch)
+
+Static shapes mean the masked grid touches all T^2 tiles every step: ~6x
+flop overcompute versus the exact triangle.  That is the paper-faithful
+*baseline* for the roofline study; EXPERIMENTS.md §Perf hillclimbs it with a
+two-level (unrolled super-panel) loop whose trailing shapes shrink.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .likelihood import LoglikResult
+from .tlr import TLRMatrix
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _batched_recompress(u1, v1, u2, v2, tol, scale):
+    """(B..., nb, k) pairs -> recompressed sum with rank <= kmax, batched."""
+    kmax = u1.shape[-1]
+    ucat = jnp.concatenate([u1, u2], axis=-1)
+    vcat = jnp.concatenate([v1, v2], axis=-1)
+    qu, ru = jnp.linalg.qr(ucat)
+    qv, rv = jnp.linalg.qr(vcat)
+    core = ru @ jnp.swapaxes(rv, -1, -2)
+    cu, cs, cvt = jnp.linalg.svd(core)
+    idx = jnp.arange(kmax)
+    mask = (cs[..., :kmax] > tol * scale)
+    s_m = jnp.where(mask, cs[..., :kmax], 0.0)
+    unew = jnp.einsum("...nk,...k->...nk", qu @ cu[..., :kmax], s_m)
+    vnew = qv @ jnp.swapaxes(cvt[..., :kmax, :], -1, -2)
+    vnew = jnp.where(mask[..., None, :], vnew, 0.0)
+    return unew, vnew
+
+
+def dist_tlr_cholesky(diag, u, v, *, tol: float = 1e-7, scale: float = 1.0,
+                      mesh=None, row_axes=("data",), super_panels: int = 1):
+    """Factor the TLR matrix in place.  Returns (diag_L, u, v).
+
+    ``super_panels = 1``: one fori_loop over all T panels with masked
+    full-grid updates — ~6x flop overcompute versus the triangle, but one
+    trace regardless of T (the paper-faithful SPMD baseline).
+
+    ``super_panels = S > 1``: python-unrolled outer loop over S shrinking
+    sub-matrices, fori_loop inside — the masked grid only spans the live
+    trailing slice, cutting the overcompute to ~2.4x at S = 8 for ~S-times
+    the trace size (the §Perf geostat-tlr hillclimb)."""
+    if super_panels > 1:
+        return _tlr_cholesky_super(diag, u, v, tol=tol, scale=scale,
+                                   mesh=mesh, row_axes=row_axes,
+                                   super_panels=super_panels)
+    T, nb = diag.shape[0], diag.shape[1]
+    kmax = u.shape[-1]
+    rows = jnp.arange(T)
+
+    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+    dspec = P(row, None, None)
+    uvspec = P(row, "model", None, None)
+
+    def body(k, carry):
+        diag, u, v = carry
+        # ---- POTRF on tile (k, k): replicated small factorization.
+        dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
+        lkk = jnp.linalg.cholesky(dkk)
+        row_is_k = (rows == k)[:, None, None]
+        # ---- TRSM on panel column k (V only; U untouched — §5.3).
+        vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)   # (T, nb, kmax)
+        vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
+            lkk, b, left_side=True, lower=True))(vk)
+        below = (rows > k)[:, None, None]
+        vk = jnp.where(below, vk_solved, vk)
+        v = lax.dynamic_update_index_in_dim(v, vk, k, 1)
+        uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)   # (T, nb, kmax)
+
+        # ---- SYRK onto diagonal tiles i > k: D_i -= U (V^T V) U^T.
+        w = jnp.einsum("tnk,tnl->tkl", vk, vk)
+        upd = jnp.einsum("tnk,tkl,tml->tnm", uk, w, uk)
+        diag = diag - jnp.where(below, upd, 0.0)
+        diag = jnp.where(row_is_k, lkk[None], diag)
+
+        # ---- GEMM + recompress over the trailing grid i > j > k.
+        wij = jnp.einsum("ink,jnl->ijkl", vk, vk)                # (T,T,k,k)
+        du = jnp.einsum("ijkl,ink->ijnl", wij, uk)               # U_ik W
+        dv = jnp.broadcast_to(-uk[None], (T, T, nb, kmax))       # dv[i,j] = -U_jk
+        # mask: active tiles get the real update, inactive get a zero update
+        act = ((rows[:, None] > rows[None, :]) &
+               (rows[None, :] > k))[..., None, None]
+        du = jnp.where(act, du, 0.0)
+        dv = jnp.where(act, dv, 0.0)
+        du = _constrain(du, mesh, uvspec)
+        un, vn = _batched_recompress(u, v, du, dv, tol, scale)
+        u = jnp.where(act, un, u)
+        v = jnp.where(act, vn, v)
+        u = _constrain(u, mesh, uvspec)
+        v = _constrain(v, mesh, uvspec)
+        diag = _constrain(diag, mesh, dspec)
+        return diag, u, v
+
+    diag, u, v = lax.fori_loop(0, T, body, (diag, u, v))
+    return diag, u, v
+
+
+def _tlr_cholesky_super(diag, u, v, *, tol, scale, mesh, row_axes,
+                        super_panels: int):
+    """Two-level variant: unrolled outer loop over shrinking trailing slices,
+    fori_loop inside each.  Factored panels are written into full-size output
+    buffers; the live state shrinks every super-step."""
+    T, nb = diag.shape[0], diag.shape[1]
+    kmax = u.shape[-1]
+    assert T % super_panels == 0, (T, super_panels)
+    chunk = T // super_panels
+
+    out_diag = jnp.zeros_like(diag)
+    out_u = jnp.zeros_like(u)
+    out_v = jnp.zeros_like(v)
+    dh, uh, vh = diag, u, v
+    for s in range(super_panels):
+        o = s * chunk
+        # factor the first `chunk` panels of the live (T-o)-tile slice
+        dh, uh, vh = dist_tlr_cholesky(dh, uh, vh, tol=tol, scale=scale,
+                                       mesh=mesh, row_axes=row_axes,
+                                       super_panels=1) \
+            if (s == super_panels - 1) else _fori_range(
+                dh, uh, vh, chunk, tol, scale, mesh, row_axes)
+        # write factored rows/columns back into the global buffers
+        out_diag = out_diag.at[o:o + chunk].set(dh[:chunk])
+        out_u = out_u.at[o:, o:o + chunk].set(uh[:, :chunk])
+        out_v = out_v.at[o:, o:o + chunk].set(vh[:, :chunk])
+        if s < super_panels - 1:
+            dh = dh[chunk:]
+            uh = uh[chunk:, chunk:]
+            vh = vh[chunk:, chunk:]
+    return out_diag, out_u, out_v
+
+
+def _fori_range(diag, u, v, k_hi, tol, scale, mesh, row_axes):
+    """Run the masked-grid panel loop for k in [0, k_hi) on the live slice
+    (same body as dist_tlr_cholesky's single-level path)."""
+    T, nb = diag.shape[0], diag.shape[1]
+    kmax = u.shape[-1]
+    rows = jnp.arange(T)
+    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+    dspec = P(row, None, None)
+    uvspec = P(row, "model", None, None)
+
+    def body(k, carry):
+        diag, u, v = carry
+        dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
+        lkk = jnp.linalg.cholesky(dkk)
+        row_is_k = (rows == k)[:, None, None]
+        vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)
+        vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
+            lkk, b, left_side=True, lower=True))(vk)
+        below = (rows > k)[:, None, None]
+        vk = jnp.where(below, vk_solved, vk)
+        v = lax.dynamic_update_index_in_dim(v, vk, k, 1)
+        uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)
+        w = jnp.einsum("tnk,tnl->tkl", vk, vk)
+        upd = jnp.einsum("tnk,tkl,tml->tnm", uk, w, uk)
+        diag = diag - jnp.where(below, upd, 0.0)
+        diag = jnp.where(row_is_k, lkk[None], diag)
+        wij = jnp.einsum("ink,jnl->ijkl", vk, vk)
+        du = jnp.einsum("ijkl,ink->ijnl", wij, uk)
+        dv = jnp.broadcast_to(-uk[None], (T, T, nb, kmax))
+        act = ((rows[:, None] > rows[None, :]) &
+               (rows[None, :] > k))[..., None, None]
+        du = jnp.where(act, du, 0.0)
+        dv = jnp.where(act, dv, 0.0)
+        du = _constrain(du, mesh, uvspec)
+        un, vn = _batched_recompress(u, v, du, dv, tol, scale)
+        u = jnp.where(act, un, u)
+        v = jnp.where(act, vn, v)
+        u = _constrain(u, mesh, uvspec)
+        v = _constrain(v, mesh, uvspec)
+        diag = _constrain(diag, mesh, dspec)
+        return diag, u, v
+
+    return lax.fori_loop(0, k_hi, body, (diag, u, v))
+
+
+def dist_tlr_solve_lower(diag_l, u, v, z):
+    """Forward substitution with the TLR factor (fori_loop, masked)."""
+    T, nb = diag_l.shape[0], diag_l.shape[1]
+    z = z.reshape(T, nb)
+    rows = jnp.arange(T)
+
+    def body(k, carry):
+        z, out = carry
+        lkk = lax.dynamic_index_in_dim(diag_l, k, 0, keepdims=False)
+        zk = lax.dynamic_index_in_dim(z, k, 0, keepdims=False)
+        ak = lax.linalg.triangular_solve(lkk, zk[:, None], left_side=True,
+                                         lower=True)[:, 0]
+        out = lax.dynamic_update_index_in_dim(out, ak, k, 0)
+        # z_i -= U_ik (V_ik^T a_k) for i > k  (masked batched).
+        uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)
+        vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)
+        wk = jnp.einsum("tnk,n->tk", vk, ak)
+        delta = jnp.einsum("tnk,tk->tn", uk, wk)
+        below = (rows > k)[:, None]
+        z = z - jnp.where(below, delta, 0.0)
+        return z, out
+
+    _, out = lax.fori_loop(0, T, body, (z, jnp.zeros_like(z)))
+    return out.reshape(-1)
+
+
+def dist_tlr_loglik(t: TLRMatrix, z, *, tol: float = 1e-7, scale: float = 1.0,
+                    mesh=None, row_axes=("data",),
+                    super_panels: int = 1) -> LoglikResult:
+    diag_l, u, v = dist_tlr_cholesky(t.diag, t.u, t.v, tol=tol, scale=scale,
+                                     mesh=mesh, row_axes=row_axes,
+                                     super_panels=super_panels)
+    alpha = dist_tlr_solve_lower(diag_l, u, v, z)
+    quad = jnp.sum(alpha * alpha)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(diag_l, axis1=-2, axis2=-1)))
+    m = t.shape[0]
+    ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
+    return LoglikResult(ll, logdet, quad, None)
+
+
+def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
+                       mesh, dtype=jnp.float32, row_axes=("data",),
+                       super_panels: int = 1):
+    """(fn, input specs) for the dry-run: TLR Cholesky + solve from
+    pre-compressed tiles (generation/compression is a separate pipeline
+    stage; its cost is benchmarked by the matern_tile kernel)."""
+    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+
+    def fn(diag, u, v, z):
+        diag = _constrain(diag, mesh, P(row, None, None))
+        u = _constrain(u, mesh, P(row, "model", None, None))
+        v = _constrain(v, mesh, P(row, "model", None, None))
+        t = TLRMatrix(diag=diag, u=u, v=v,
+                      ranks=jnp.zeros((n_tiles, n_tiles), jnp.int32))
+        return dist_tlr_loglik(t, z, tol=tol, scale=1.0, mesh=mesh,
+                               row_axes=row_axes, super_panels=super_panels)
+
+    T, nb = n_tiles, tile_size
+    specs = (jax.ShapeDtypeStruct((T, nb, nb), dtype),
+             jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
+             jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
+             jax.ShapeDtypeStruct((T * nb,), dtype))
+    return fn, specs

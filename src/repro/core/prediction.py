@@ -1,0 +1,66 @@
+"""Cokriging prediction (Eq. 3) and prediction-error metrics (§4.5).
+
+Z_hat(s0) = c0^T Sigma(theta)^{-1} Z
+
+All n_pred prediction locations are solved in ONE batched triangular solve
+(Level-3 BLAS) instead of the per-location Level-2 loop the paper times as
+COMP_TIME — this is the first beyond-paper optimization (see EXPERIMENTS.md
+§Perf-assessment).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .covariance import MaternParams, build_c0, build_sigma
+
+
+class CokrigingResult(NamedTuple):
+    predictions: jax.Array   # (npred, p)
+    mspe: jax.Array          # scalar: mean over locations of ||Zhat - Z||^2
+    mspe_per_var: jax.Array  # (p,)
+
+
+def cokrige(obs_locs, z_obs, pred_locs, params: MaternParams,
+            representation: str = "I", nugget: float = 0.0, chol=None):
+    """Best linear unbiased cokriging predictor at ``pred_locs``.
+
+    Returns (npred, p) predictions for all p variables at each location.
+    """
+    if chol is None:
+        sigma = build_sigma(obs_locs, params, representation=representation,
+                            nugget=nugget)
+        chol = jnp.linalg.cholesky(sigma)
+    c0 = build_c0(pred_locs, obs_locs, params, representation=representation)
+    npred, pn, p = c0.shape
+    # Solve Sigma^{-1} Z once, then contract with all c0 blocks at once.
+    alpha = jax.scipy.linalg.cho_solve((chol, True), z_obs)
+    return jnp.einsum("lrp,r->lp", c0, alpha)
+
+
+def mspe(pred, truth):
+    """Mean square prediction error, total and per variable.
+
+    pred/truth: (npred, p).
+    """
+    err2 = (pred - truth) ** 2
+    return jnp.mean(jnp.sum(err2, axis=-1)), jnp.mean(err2, axis=0)
+
+
+def msrp(pred, truth, eps: float = 1e-12):
+    """Mean square relative prediction error (Yan & Genton 2018)."""
+    rel = (pred - truth) / jnp.where(jnp.abs(truth) < eps, eps, truth)
+    return jnp.mean(rel ** 2)
+
+
+def cokrige_and_score(obs_locs, z_obs, pred_locs, z_pred_true, params: MaternParams,
+                      representation: str = "I", nugget: float = 0.0) -> CokrigingResult:
+    pred = cokrige(obs_locs, z_obs, pred_locs, params,
+                   representation=representation, nugget=nugget)
+    p = params.p
+    truth = z_pred_true.reshape(-1, p) if representation.upper() == "I" else \
+        z_pred_true.reshape(p, -1).T
+    total, per_var = mspe(pred, truth)
+    return CokrigingResult(pred, total, per_var)

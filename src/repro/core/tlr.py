@@ -1,0 +1,330 @@
+"""Tile Low-Rank (TLR) covariance computations (§5.3 of the paper).
+
+The matrix is split into T x T tiles of size nb.  Diagonal tiles stay dense;
+each strict-lower off-diagonal tile A[i,j] is stored as U V^T with rank k(i,j)
+determined by the accuracy threshold (TLR5/TLR7/TLR9 <-> 1e-5/1e-7/1e-9).
+
+TPU adaptation (DESIGN.md §2): variable per-tile ranks become a *fixed* kmax
+with zero-padded columns and an integer rank array — static shapes feed the
+MXU; reported memory uses actual ranks, compute uses the padded rank.
+
+Operations implemented directly on the compressed representation:
+
+  * tlr_compress / tlr_to_dense      (SVD per tile)
+  * tlr_cholesky                     (right-looking: POTRF/TRSM/GEMM+recompress)
+  * tlr_solve_lower                  (forward substitution with UV tiles)
+  * tlr_loglik                       (Eq. 1 through the TLR factor)
+  * memory_footprint                 (Fig. 6 model)
+  * rank_distribution                (Fig. 5 report)
+
+Complexity: the dominant kernel is the TLR-MM chain U_ik (V_ik^T V_jk) U_jk^T
+(36 nb k^2 flops, paper §5.3); total O(n^2 k) at nb = O(sqrt(n)) versus the
+exact path's O(n^3).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .covariance import MaternParams, build_sigma
+from .likelihood import LoglikResult
+
+
+class TLRMatrix(NamedTuple):
+    """Symmetric positive-definite matrix in TLR form (lower storage)."""
+
+    diag: jax.Array    # (T, nb, nb) dense diagonal tiles
+    u: jax.Array       # (T, T, nb, kmax); [i, j] valid for i > j
+    v: jax.Array       # (T, T, nb, kmax)
+    ranks: jax.Array   # (T, T) int32 actual ranks (0 outside strict lower)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.diag.shape[0]
+
+    @property
+    def tile_size(self) -> int:
+        return self.diag.shape[1]
+
+    @property
+    def max_rank(self) -> int:
+        return self.u.shape[-1]
+
+    @property
+    def shape(self):
+        m = self.n_tiles * self.tile_size
+        return (m, m)
+
+
+def choose_tile_size(m: int, target: int = 0) -> int:
+    """nb = O(sqrt(m)) per the paper's complexity trade-off, rounded to a
+    divisor of m."""
+    if target <= 0:
+        target = max(32, int(math.sqrt(m)) // 32 * 32 or 32)
+    best, best_gap = 1, m
+    for nb in range(1, m + 1):
+        if m % nb == 0:
+            gap = abs(nb - target)
+            if gap < best_gap:
+                best, best_gap = nb, gap
+    return best
+
+
+def _truncate_svd(u, s, vt, tol: float, kmax: int, scale: float):
+    """Zero-pad a truncated SVD to kmax columns; returns (U, V, rank)."""
+    k = s.shape[0]
+    keep = s > (tol * scale)
+    rank = jnp.minimum(jnp.sum(keep), kmax)
+    idx = jnp.arange(min(k, kmax))
+    mask = (idx < rank)[None, :]
+    uu = u[:, : len(idx)] * jnp.where(mask, s[None, : len(idx)], 0.0)
+    vv = jnp.where(mask, vt[: len(idx), :].T, 0.0)
+    pad = kmax - len(idx)
+    if pad > 0:
+        uu = jnp.pad(uu, ((0, 0), (0, pad)))
+        vv = jnp.pad(vv, ((0, 0), (0, pad)))
+    return uu, vv, rank.astype(jnp.int32)
+
+
+def tlr_compress(sigma, tile_size: int = 0, tol: float = 1e-7,
+                 max_rank: int = 0, scale=None) -> TLRMatrix:
+    """Compress a dense SPD matrix to TLR (validation path).
+
+    The production path compresses tiles straight from the generator without
+    materializing sigma (see tlr_compress_tiles / kernels.matern_tile).
+    ``scale`` may be a traced scalar (jit-safe); accuracy is absolute w.r.t.
+    the matrix's diagonal scale, matching HiCMA's fixed-accuracy mode.
+    """
+    sigma = jnp.asarray(sigma)
+    m = sigma.shape[0]
+    nb = choose_tile_size(m, tile_size)
+    T = m // nb
+    if max_rank <= 0:
+        max_rank = max(8, nb // 4)
+    kmax = min(max_rank, nb)
+    if scale is None:
+        scale = jnp.max(jnp.abs(jnp.diagonal(sigma)))
+
+    tiles = sigma.reshape(T, nb, T, nb).transpose(0, 2, 1, 3)  # (T,T,nb,nb)
+    diag = jnp.stack([tiles[t, t] for t in range(T)])
+
+    u = jnp.zeros((T, T, nb, kmax), sigma.dtype)
+    v = jnp.zeros((T, T, nb, kmax), sigma.dtype)
+    ranks = jnp.zeros((T, T), jnp.int32)
+    il, jl = np.tril_indices(T, k=-1)
+    if len(il):
+        low = tiles[il, jl]                                  # (L, nb, nb)
+        uu, ss, vvt = jnp.linalg.svd(low, full_matrices=False)
+        U, V, R = jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
+                                                         scale))(uu, ss, vvt)
+        u = u.at[il, jl].set(U)
+        v = v.at[il, jl].set(V)
+        ranks = ranks.at[il, jl].set(R)
+    return TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
+
+
+def tlr_to_dense(t: TLRMatrix, symmetric: bool = True) -> jax.Array:
+    T, nb = t.n_tiles, t.tile_size
+    m = T * nb
+    out = jnp.zeros((m, m), t.diag.dtype)
+    for i in range(T):
+        out = out.at[i * nb:(i + 1) * nb, i * nb:(i + 1) * nb].set(t.diag[i])
+        for j in range(i):
+            block = t.u[i, j] @ t.v[i, j].T
+            out = out.at[i * nb:(i + 1) * nb, j * nb:(j + 1) * nb].set(block)
+            if symmetric:
+                out = out.at[j * nb:(j + 1) * nb, i * nb:(i + 1) * nb].set(block.T)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recompression (the "GEMM + SVD" task of HiCMA)
+# ---------------------------------------------------------------------------
+
+
+def recompress(u1, v1, u2, v2, tol: float, scale: float):
+    """(u1 v1^T + u2 v2^T) -> (U, V, rank) with rank <= kmax (= u1 cols).
+
+    QR(U')·QR(V') then SVD of the small core; batched-friendly (vmap).
+    """
+    kmax = u1.shape[-1]
+    ucat = jnp.concatenate([u1, u2], axis=-1)       # (nb, 2k)
+    vcat = jnp.concatenate([v1, v2], axis=-1)
+    qu, ru = jnp.linalg.qr(ucat)                    # (nb, 2k), (2k, 2k)
+    qv, rv = jnp.linalg.qr(vcat)
+    core = ru @ rv.T
+    cu, cs, cvt = jnp.linalg.svd(core)
+    keep = cs > (tol * scale)
+    rank = jnp.minimum(jnp.sum(keep), kmax).astype(jnp.int32)
+    idx = jnp.arange(kmax)
+    mask = idx < rank
+    s_m = jnp.where(mask, cs[:kmax], 0.0)
+    unew = (qu @ cu[:, :kmax]) * s_m[None, :]
+    vnew = jnp.where(mask[None, :], qv @ cvt[:kmax, :].T, 0.0)
+    return unew, vnew, rank
+
+
+# ---------------------------------------------------------------------------
+# TLR Cholesky (right-looking; the paper's Fig. 1 dataflow on UV tiles)
+# ---------------------------------------------------------------------------
+
+
+class TLRCholesky(NamedTuple):
+    diag: jax.Array    # (T, nb, nb) lower Cholesky factors of diagonal tiles
+    u: jax.Array       # (T, T, nb, kmax) factor tiles  L[i,j] = u v^T
+    v: jax.Array
+    ranks: jax.Array
+
+
+def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRCholesky:
+    """Factor A = L L^T keeping off-diagonal tiles compressed.
+
+    Python-unrolled over tiles (single-host path; the distributed fori_loop
+    variant lives in core/dist_tlr.py).  Row ranges are contiguous, so every
+    inner task batch is a single vmapped Level-3 call — the paper's DAG tasks
+    become static batched kernels (DESIGN.md §2).
+    """
+    T, nb, kmax = t.n_tiles, t.tile_size, t.max_rank
+    diag, u, v, ranks = t.diag, t.u, t.v, t.ranks
+
+    for k in range(T):
+        lkk = jnp.linalg.cholesky(diag[k])                       # POTRF
+        diag = diag.at[k].set(lkk)
+        if k + 1 >= T:
+            break
+        # TRSM on the k-th panel: V[i,k] <- L_kk^{-1} V[i,k] for i > k.
+        vpanel = v[k + 1:, k]                                     # (r, nb, kmax)
+        vpanel = jax.vmap(lambda vv: jax.scipy.linalg.solve_triangular(
+            lkk, vv, lower=True))(vpanel)
+        v = v.at[k + 1:, k].set(vpanel)
+        upanel = u[k + 1:, k]                                     # (r, nb, kmax)
+
+        # SYRK on diagonal tiles: D[i] -= U (V^T V) U^T.
+        w = jnp.einsum("rnk,rnl->rkl", vpanel, vpanel)            # (r,kmax,kmax)
+        upd = jnp.einsum("rnk,rkl,rml->rnm", upanel, w, upanel)
+        diag = diag.at[k + 1:].add(-upd)
+
+        # GEMM + recompression on the trailing tiles, column by column
+        # (rows i > j are contiguous for each j).
+        for j in range(k + 1, T):
+            rows = slice(j + 1, T)
+            nrows = T - (j + 1)
+            if nrows <= 0:
+                continue
+            w = jnp.einsum("rnk,nl->rkl", v[rows, k], v[j, k])    # V_ik^T V_jk
+            du = jnp.einsum("rnk,rkl->rnl", u[rows, k], w)        # U_ik W
+            dv = jnp.broadcast_to(-u[j, k], (nrows, nb, kmax))
+            un, vn, rn = jax.vmap(
+                lambda a, b, c, d: recompress(a, b, c, d, tol, scale)
+            )(u[rows, j], v[rows, j], du, dv)
+            u = u.at[rows, j].set(un)
+            v = v.at[rows, j].set(vn)
+            ranks = ranks.at[rows, j].set(rn)
+
+    return TLRCholesky(diag=diag, u=u, v=v, ranks=ranks)
+
+
+def tlr_solve_lower(chol: TLRCholesky, z) -> jax.Array:
+    """Solve L alpha = z with L in TLR form (forward substitution)."""
+    T, nb = chol.diag.shape[0], chol.diag.shape[1]
+    z = jnp.asarray(z).reshape(T, nb)
+    out = jnp.zeros_like(z)
+    for k in range(T):
+        rhs = z[k]
+        alpha_k = jax.scipy.linalg.solve_triangular(chol.diag[k], rhs, lower=True)
+        out = out.at[k].set(alpha_k)
+        if k + 1 < T:
+            # z_i -= U_ik (V_ik^T alpha_k) for i > k.
+            w = jnp.einsum("rnk,n->rk", chol.v[k + 1:, k], alpha_k)
+            z = z.at[k + 1:].add(-jnp.einsum("rnk,rk->rn", chol.u[k + 1:, k], w))
+    return out.reshape(-1)
+
+
+def tlr_logdet(chol: TLRCholesky) -> jax.Array:
+    diags = jnp.diagonal(chol.diag, axis1=-2, axis2=-1)
+    return 2.0 * jnp.sum(jnp.log(diags))
+
+
+def tlr_matvec(t: TLRMatrix, x) -> jax.Array:
+    """y = A x with A symmetric in TLR form."""
+    T, nb = t.n_tiles, t.tile_size
+    x = jnp.asarray(x).reshape(T, nb)
+    y = jnp.einsum("tnm,tm->tn", t.diag, x)
+    for i in range(T):
+        for j in range(i):
+            uij, vij = t.u[i, j], t.v[i, j]
+            y = y.at[i].add(uij @ (vij.T @ x[j]))
+            y = y.at[j].add(vij @ (uij.T @ x[i]))
+    return y.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Log-likelihood through the TLR factorization (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def tlr_loglik_from_matrix(t: TLRMatrix, z, tol: float = 1e-9,
+                           scale: float = 1.0) -> LoglikResult:
+    chol = tlr_cholesky(t, tol=tol, scale=scale)
+    alpha = tlr_solve_lower(chol, z)
+    quad = jnp.sum(alpha * alpha)
+    logdet = tlr_logdet(chol)
+    m = t.shape[0]
+    ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
+    return LoglikResult(ll, logdet, quad, None)
+
+
+def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
+               max_rank: int = 64, tile_size: int = 0,
+               nugget: float = 0.0) -> LoglikResult:
+    """End-to-end TLR likelihood: GEN -> compress -> TLR Cholesky -> solve.
+
+    Locations must be Morton-ordered by the caller for good rank decay
+    (Representation I interleaving happens inside build_sigma).
+    """
+    sigma = build_sigma(None, params, representation="I", nugget=nugget,
+                        dists=dists)
+    scale = jnp.max(jnp.abs(jnp.diagonal(sigma)))
+    t = tlr_compress(sigma, tile_size=tile_size, tol=tol, max_rank=max_rank,
+                     scale=scale)
+    return tlr_loglik_from_matrix(t, z, tol=tol, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Reports: memory footprint (Fig. 6) and rank distribution (Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+def memory_footprint(t: TLRMatrix, itemsize: int | None = None) -> dict:
+    """Bytes for the TLR representation (actual ranks) vs dense."""
+    T, nb = t.n_tiles, t.tile_size
+    if itemsize is None:
+        itemsize = t.diag.dtype.itemsize
+    ranks = np.asarray(t.ranks)
+    il, jl = np.tril_indices(T, k=-1)
+    lowrank_entries = int(2 * nb * ranks[il, jl].sum())
+    diag_entries = T * nb * nb
+    m = T * nb
+    tlr_bytes = (lowrank_entries + diag_entries) * itemsize
+    dense_bytes = m * m * itemsize
+    return dict(tlr_bytes=tlr_bytes, dense_bytes=dense_bytes,
+                ratio=dense_bytes / max(tlr_bytes, 1),
+                diag_bytes=diag_entries * itemsize,
+                lowrank_bytes=lowrank_entries * itemsize)
+
+
+def rank_distribution(t: TLRMatrix) -> np.ndarray:
+    """(T, T) array: off-diagonal actual ranks, diagonal = nb (dense)."""
+    ranks = np.asarray(t.ranks).copy()
+    ranks = ranks + ranks.T
+    np.fill_diagonal(ranks, t.tile_size)
+    return ranks
+
+
+def tlr_mm_flops(nb: int, k: int) -> int:
+    """The paper's §5.3 model: one TLR-MM costs 36 nb k^2 flops."""
+    return 36 * nb * k * k

@@ -1,0 +1,88 @@
+"""Sharding rules: how every parameter/activation maps onto the mesh.
+
+Axes (launch/mesh.py): ("data", "model") per pod, plus "pod" across pods.
+
+  * "data"  — FSDP axis: parameters, gradients and optimizer states are
+    *sharded* along d_model-like dimensions (ZeRO-3 equivalent); compute
+    gathers them just-in-time (models/shardspecs.compute_spec) and XLA's
+    latency-hiding scheduler overlaps the gathers with the scanned layers.
+  * "model" — tensor/expert parallel axis: attention heads, FFN width, MoE
+    experts, vocab.
+  * "pod"   — pure data parallelism over the DCN; parameters are replicated
+    across pods, gradients reduce across pods (optionally compressed — see
+    distribution/compression.py).
+
+``param_specs(cfg)`` mirrors models/transformer.init_model structurally so
+the spec pytree has exactly the treedef of the parameter pytree.  The
+per-module spec builders live in models/shardspecs.py (shared with the
+FSDP gather path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.shardspecs import layer_specs
+from ..models.transformer import block_spec, layer_counts
+
+
+def param_specs(cfg):
+    """PartitionSpec pytree with the exact structure of init_model(...)."""
+    spec = block_spec(cfg)
+    nblocks, tail = layer_counts(cfg)
+    one_block = [layer_specs(cfg, kind, moe) for kind, moe in spec]
+    stacked = jax.tree.map(
+        lambda p: P(None, *p) if isinstance(p, P) else p, one_block,
+        is_leaf=lambda x: isinstance(x, P) or x is None) if nblocks else None
+    tails = [layer_specs(cfg, spec[t % len(spec)][0], spec[t % len(spec)][1])
+             for t in range(tail)]
+    from ..models.shardspecs import PRODUCTION_TP
+    vocab_ok = cfg.vocab_size % PRODUCTION_TP == 0
+    out = {
+        "blocks": stacked,
+        "tail": tails,
+        "final_norm": P(None),
+        # vocab-parallel embedding; column-parallel head: both avoid any
+        # "data"-axis conflict with the batch (models/shardspecs.py).  When
+        # the vocab does not divide the TP degree (mamba2: 50280), fall back
+        # to sharding d_model over "model" instead.
+        "embed": P("model", None) if vocab_ok else P(None, "model"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = P(None, "model") if vocab_ok else P("model", None)
+    return out
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over (DP axes)."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def data_specs(cfg, mesh, shape_kind: str, with_embeds: bool):
+    dp = batch_axes(mesh)
+    specs = {}
+    if with_embeds:
+        specs["embeds"] = P(dp, None, None)
+    else:
+        specs["tokens"] = P(dp, None)
+    if shape_kind == "train":
+        specs["targets"] = P(dp, None)
+    return specs
+
+
+def shardings_of(specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def shard_params(params, cfg, mesh):
+    """Place an (unsharded) parameter pytree onto the mesh."""
+    sh = shardings_of(param_specs(cfg), mesh)
+    return jax.tree.map(jax.device_put, params, sh)
+
+
+def constrain(x, mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,129 @@
+"""Pallas TPU kernels: the tile tasks of the blocked Cholesky (paper Fig. 1).
+
+The paper's task-based Cholesky decomposes into POTRF (diagonal tile
+factorization), TRSM (panel solve), and SYRK/GEMM (trailing update).  These
+are the StarPU task bodies; here each becomes a Pallas kernel operating on a
+VMEM-resident tile, batched over the tiles of a panel step.
+
+TPU adaptation: POTRF/TRSM are inherently sequential in the tile column, so
+they are written as fori_loops of *vectorized full-tile masked updates* —
+each of the nb steps does O(nb) or O(nb^2) VPU work on static shapes rather
+than scalar indexing, which is the TPU-idiomatic unblocked factorization.
+SYRK is a single MXU matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# POTRF: in-VMEM unblocked Cholesky of one nb x nb tile.
+# ---------------------------------------------------------------------------
+
+
+def _potrf_kernel(a_ref, out_ref):
+    a = a_ref[0].astype(jnp.promote_types(a_ref.dtype, jnp.float32))
+    nb = a.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (nb, nb), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (nb, nb), 1)
+
+    def step(j, a):
+        pivot = jnp.sqrt(a[j, j])
+        colj = a[:, j] / pivot                      # L[:, j] (valid for rows >= j)
+        colj = jnp.where(lax.iota(jnp.int32, nb) >= j, colj, 0.0)
+        # Rank-1 trailing update on columns > j.
+        upd = colj[:, None] * colj[None, :]
+        mask = (cols > j) & (rows >= cols)
+        a = jnp.where(mask, a - upd, a)
+        # Write column j of L in place.
+        a = a.at[:, j].set(colj.at[j].set(pivot))
+        return a
+
+    l = lax.fori_loop(0, nb, step, a)
+    out_ref[0] = jnp.where(rows >= cols, l, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def potrf(a, *, interpret: bool = True):
+    """Batched lower Cholesky of SPD tiles: (B, nb, nb) -> (B, nb, nb)."""
+    b, nb, _ = a.shape
+    spec = pl.BlockSpec((1, nb, nb), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _potrf_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        grid=(b,),
+        in_specs=[spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(a)
+
+
+# ---------------------------------------------------------------------------
+# TRSM: X = L^{-1} B (left, lower, no-transpose) — the panel task.
+# ---------------------------------------------------------------------------
+
+
+def _trsm_kernel(l_ref, b_ref, out_ref):
+    ct = jnp.promote_types(b_ref.dtype, jnp.float32)
+    l = l_ref[0].astype(ct)             # (nb, nb) lower
+    x = b_ref[0].astype(ct)             # (nb, m)
+    nb = l.shape[0]
+
+    def step(i, x):
+        # l is lower triangular, so l[i] @ x = sum_{j<=i} l[i,j] x[j]; remove
+        # the diagonal term to get the strict forward-substitution sum.
+        xi = (x[i] - (l[i] @ x - l[i, i] * x[i])) / l[i, i]
+        return x.at[i].set(xi)
+
+    x = lax.fori_loop(0, nb, step, x)
+    out_ref[0] = x.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trsm(l, b, *, interpret: bool = True):
+    """Batched solve L X = B: l (B, nb, nb) lower, b (B, nb, m)."""
+    bsz, nb, m = b.shape
+    spec_l = pl.BlockSpec((1, nb, nb), lambda i: (i, 0, 0))
+    spec_b = pl.BlockSpec((1, nb, m), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _trsm_kernel,
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        grid=(bsz,),
+        in_specs=[spec_l, spec_b],
+        out_specs=spec_b,
+        interpret=interpret,
+    )(l, b)
+
+
+# ---------------------------------------------------------------------------
+# SYRK: C - A A^T — the trailing-update task (one MXU matmul).
+# ---------------------------------------------------------------------------
+
+
+def _syrk_kernel(c_ref, a_ref, out_ref):
+    ct = jnp.promote_types(a_ref.dtype, jnp.float32)
+    a = a_ref[0]
+    y = jax.lax.dot_general(a, a, (((1,), (1,)), ((), ())),
+                            preferred_element_type=ct)
+    out_ref[0] = (c_ref[0].astype(ct) - y).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def syrk(c, a, *, interpret: bool = True):
+    """Batched C - A A^T: c (B, nb, nb), a (B, nb, k)."""
+    bsz, nb, k = a.shape
+    spec_c = pl.BlockSpec((1, nb, nb), lambda i: (i, 0, 0))
+    spec_a = pl.BlockSpec((1, nb, k), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _syrk_kernel,
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        grid=(bsz,),
+        in_specs=[spec_c, spec_a],
+        out_specs=spec_c,
+        interpret=interpret,
+    )(c, a)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: causal GQA flash attention (online-softmax, chunked).
+
+The LM-side compute hot spot.  Blocked attention with running max/denominator
+so the (Sq x Skv) score matrix never materializes in HBM — the same
+tile-and-accumulate insight the paper applies to Cholesky, applied to the
+attention layer (beyond-paper transfer, DESIGN.md §5).
+
+Layout: q (BH, Sq, D), k/v (BKV, Skv, D) with BH = BKV * group (GQA: the
+index_map folds the query head onto its kv head, so kv tiles are fetched
+once per group).  Grid (BH, Sq/bq, Skv/bk); the kv axis is the innermost
+(sequential) dimension and accumulates into VMEM scratch.
+
+VMEM per instance: bq*D (q) + 2*bk*D (k,v) + bq*D f32 acc + 2*bq stats;
+at bq = bk = 512, D = 128 in bf16/f32 that is ~0.8 MB.
+
+Supports: causal masking (right-aligned for decode), sliding windows
+(Mixtral SWA / RecurrentGemma local attention), and GQA groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, sq: int, skv: int,
+                  bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale
+
+    # Absolute positions; queries are right-aligned against the kv axis so a
+    # single-token decode step (sq=1) attends to the full cache.
+    qpos = qi * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (skv - sq)
+    kpos = ki * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                        # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                     # (bq, bk)
+    correction = jnp.exp(m_prev - m_new)       # (bq, 1)
+    l_new = correction * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    pv = lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                         (((1,), (0,)), ((), ())),
+                         preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * correction + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret", "scale"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """Online-softmax attention.  q: (BH, Sq, D); k, v: (BKV, Skv, D)."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    assert bh % bkv == 0, "query heads must be a multiple of kv heads"
+    group = bh // bkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq lens ({sq},{skv}) not divisible by blocks "
+                         f"({bq},{bk})")
+
+    grid = (bh, sq // bq, skv // bk)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, sq=sq, skv=skv, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)

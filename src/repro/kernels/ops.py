@@ -1,0 +1,78 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Each op picks between the Pallas kernel (TPU), the interpret-mode kernel
+(CPU validation — executes the kernel body in Python), and the pure-jnp
+reference.  The dry-run/roofline path lowers the XLA reference
+implementations (Pallas cannot compile on the CPU backend); the Pallas
+kernels are the TPU deploy path, validated kernel-for-kernel against ref.py
+in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .chol_tiles import potrf as _potrf_pallas
+from .chol_tiles import syrk as _syrk_pallas
+from .chol_tiles import trsm as _trsm_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .matern_tile import matern_tile as _matern_pallas
+from .tlr_mm import tlr_mm as _tlr_mm_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(impl: str | None) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if on_tpu() else "ref"
+
+
+def matern_tile(locs_a, locs_b, inv_range, amp, *, nu: float,
+                impl: str | None = None, **kw):
+    mode = _mode(impl)
+    if mode == "ref":
+        return ref.matern_tile_ref(locs_a, locs_b, inv_range, amp, nu)
+    return _matern_pallas(locs_a, locs_b, inv_range, amp, nu=nu,
+                          interpret=(mode == "interpret"), **kw)
+
+
+def tlr_mm(u_a, v_a, u_b, v_b, acc, *, impl: str | None = None):
+    mode = _mode(impl)
+    if mode == "ref":
+        return ref.tlr_mm_ref(u_a, v_a, u_b, v_b, acc)
+    return _tlr_mm_pallas(u_a, v_a, u_b, v_b, acc,
+                          interpret=(mode == "interpret"))
+
+
+def potrf(a, *, impl: str | None = None):
+    mode = _mode(impl)
+    if mode == "ref":
+        return ref.potrf_ref(a)
+    return _potrf_pallas(a, interpret=(mode == "interpret"))
+
+
+def trsm(l, b, *, impl: str | None = None):
+    mode = _mode(impl)
+    if mode == "ref":
+        return ref.trsm_ref(l, b)
+    return _trsm_pallas(l, b, interpret=(mode == "interpret"))
+
+
+def syrk(c, a, *, impl: str | None = None):
+    mode = _mode(impl)
+    if mode == "ref":
+        return ref.syrk_ref(c, a)
+    return _syrk_pallas(c, a, interpret=(mode == "interpret"))
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              scale: float | None = None, impl: str | None = None, **kw):
+    mode = _mode(impl)
+    if mode == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    return _flash_pallas(q, k, v, causal=causal, window=window, scale=scale,
+                         interpret=(mode == "interpret"), **kw)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.matern import matern_correlation_halfint
+
+
+def matern_tile_ref(locs_a, locs_b, inv_range, amp, nu: float):
+    """Covariance tile C[r, c] = amp * M_nu(||a_r - b_c|| * inv_range).
+
+    nu is a static half-integer in {0.5, 1.5, 2.5}.
+    """
+    d2 = jnp.sum((locs_a[:, None, :] - locs_b[None, :, :]) ** 2, axis=-1)
+    u = jnp.sqrt(jnp.maximum(d2, 0.0)) * inv_range
+    return amp * matern_correlation_halfint(u, nu)
+
+
+def tlr_mm_ref(u_a, v_a, u_b, v_b, acc):
+    """acc - U_a (V_a^T V_b) U_b^T, batched over the leading dim."""
+    w = jnp.einsum("bnk,bnl->bkl", v_a, v_b)
+    upd = jnp.einsum("bnk,bkl,bml->bnm", u_a, w, u_b)
+    return acc - upd
+
+
+def potrf_ref(a):
+    """Lower Cholesky factor of a batched SPD tile."""
+    return jnp.linalg.cholesky(a)
+
+
+def trsm_ref(l, b):
+    """X = L^{-1} B (batched): forward substitution on tile columns."""
+    return jax.vmap(lambda ll, bb: jax.scipy.linalg.solve_triangular(
+        ll, bb, lower=True))(l, b)
+
+
+def syrk_ref(c, a):
+    """C - A A^T (batched trailing symmetric update)."""
+    return c - jnp.einsum("bik,bjk->bij", a, a)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """Reference multi-head attention.
+
+    q: (BH, Sq, D); k, v: (BKV, Skv, D) with BH = BKV * group.
+    Returns (BH, Sq, D).  f32 accumulation regardless of input dtype.
+    """
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    group = bh // bkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned queries
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,429 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step, in_shardings=..., out_shardings=...).lower(**input_specs())
+  .compile() must SUCCEED on the 16x16 single-pod mesh AND the 2x16x16
+  multi-pod mesh; we print memory_analysis() (fits) and cost_analysis()
+  (FLOPs/bytes) and derive the §Roofline terms.
+
+The two lines above MUST precede any jax import: jax locks the device count
+on first init, and the production mesh needs 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import (ARCHS, GEOSTAT_SHAPES, LM_SHAPES, get_arch, get_shape,
+                       iter_cells)
+from ..configs.base import ArchConfig, GeoStatConfig
+from . import roofline as rl
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _dp_axes(mesh, batch: int):
+    names = mesh.axis_names
+    dp = ("pod", "data") if "pod" in names else ("data",)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    if batch % total != 0:
+        dp = ("data",) if batch % mesh.shape["data"] == 0 else ()
+    return dp
+
+
+def _row_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# input_specs (deliverable: ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch_name: str, shape_name: str) -> dict:
+    """ShapeDtypeStructs for every model input of the given cell."""
+    cfg = get_arch(arch_name)
+    shape = get_shape(cfg, shape_name)
+    if isinstance(cfg, GeoStatConfig):
+        m = shape.matrix_dim
+        if cfg.backend == "exact" or shape.kind == "predict":
+            return dict(locs=jax.ShapeDtypeStruct((shape.n_locations, 2),
+                                                  jnp.float32),
+                        z=jax.ShapeDtypeStruct((m,), jnp.float32))
+        nb, kmax = cfg.tile_size, cfg.max_rank
+        t = m // nb
+        return dict(diag=jax.ShapeDtypeStruct((t, nb, nb), jnp.float32),
+                    u=jax.ShapeDtypeStruct((t, t, nb, kmax), jnp.float32),
+                    v=jax.ShapeDtypeStruct((t, t, nb, kmax), jnp.float32),
+                    z=jax.ShapeDtypeStruct((m,), jnp.float32))
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if shape.kind == "decode":
+        if cfg.frontend == "none":
+            specs["tokens"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        else:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, cfg.d_model),
+                                                   jnp.bfloat16)
+        return specs
+    if cfg.frontend == "none":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.bfloat16)
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (lowered, model_flops)
+# ---------------------------------------------------------------------------
+
+
+def _cache_specs_tree(cfg, caches_shape, mesh, batch):
+    dp = _dp_axes(mesh, batch)
+
+    def leaf_spec(path, leaf):
+        name = None
+        for pk in reversed(path):
+            if hasattr(pk, "key"):
+                name = pk.key
+                break
+        nd = leaf.ndim
+        none = (None,) * nd
+        if name in ("k", "v"):
+            spec = list(none)
+            spec[nd - 4] = dp if dp else None
+            return P(*spec)
+        if name == "kpos":
+            return P(*none)
+        if name == "conv":
+            spec = list(none)
+            spec[nd - 3] = dp if dp else None
+            if leaf.shape[-1] % mesh.shape["model"] == 0:
+                spec[nd - 1] = "model"
+            return P(*spec)
+        if name == "ssm":
+            spec = list(none)
+            spec[nd - 4] = dp if dp else None
+            if leaf.shape[nd - 3] % mesh.shape["model"] == 0:
+                spec[nd - 3] = "model"
+            return P(*spec)
+        if name == "h":
+            spec = list(none)
+            spec[nd - 2] = dp if dp else None
+            if leaf.shape[-1] % mesh.shape["model"] == 0:
+                spec[nd - 1] = "model"
+            return P(*spec)
+        return P(*none)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_shape)
+    specs = [leaf_spec(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def build_lm_cell(cfg: ArchConfig, shape, mesh, attn_impl: str,
+                  microbatches: int = 1):
+    from ..distribution.sharding import (data_specs, param_specs,
+                                         shardings_of)
+    from ..models.transformer import decode_step, forward, init_caches, \
+        init_model
+    from ..training.optimizer import adamw_init, opt_state_specs
+    from ..training.train_step import TrainConfig, make_train_step
+
+    with_embeds = cfg.frontend != "none"
+    p_specs = param_specs(cfg)
+    p_sh = shardings_of(p_specs, mesh)
+    params_shape = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    specs = input_specs(cfg.name, shape.name)
+    mf = rl.lm_model_flops(cfg, shape)
+    dp = _dp_axes(mesh, shape.global_batch)
+
+    from ..models import settings
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(remat=True, attn_impl=attn_impl,
+                           microbatches=microbatches)
+        step = make_train_step(cfg, mesh, tcfg, with_embeds=with_embeds)
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        lowered = step.lower(params_shape, opt_shape, None, specs)
+        return lowered, mf
+
+    is_embeds = "embeds" in specs
+    x_spec = specs["embeds"] if is_embeds else specs["tokens"]
+    x_sh = NamedSharding(mesh, P(dp if dp else None,
+                                 *(None,) * (len(x_spec.shape) - 1)))
+
+    if shape.kind == "prefill":
+        def prefill(params, x):
+            out = forward(params, cfg,
+                          tokens=None if is_embeds else x,
+                          embeds=x if is_embeds else None,
+                          attn_impl=attn_impl)
+            return out.logits[:, -1]
+
+        fn = jax.jit(prefill, in_shardings=(p_sh, x_sh))
+        with settings.fsdp_gather(mesh):
+            lowered = fn.lower(params_shape, x_spec)
+        return lowered, mf
+
+    # decode: one new token against a seq_len cache.
+    caches_shape = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+    c_specs = _cache_specs_tree(cfg, caches_shape, mesh, shape.global_batch)
+    c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+    def dec(params, caches, x):
+        return decode_step(params, cfg, caches,
+                           tokens=None if is_embeds else x,
+                           embeds=x if is_embeds else None,
+                           pos=jnp.asarray(shape.seq_len - 1, jnp.int32),
+                           attn_impl=attn_impl)
+
+    fn = jax.jit(dec, in_shardings=(p_sh, c_sh, x_sh), donate_argnums=(1,))
+    with settings.fsdp_gather(mesh):
+        lowered = fn.lower(params_shape, caches_shape, x_spec)
+    return lowered, mf
+
+
+def build_geostat_cell(cfg: GeoStatConfig, shape, mesh, variant: str = ""):
+    from ..core.covariance import MaternParams
+    from ..core.dist_cholesky import (dist_cokrige_lowerable,
+                                      dist_loglik_lowerable)
+    from ..core.dist_tlr import dist_tlr_lowerable
+
+    # nu = (0.5, 2.5) -> all pair orders {0.5, 1.5, 2.5} take the closed-form
+    # GEN path (the production hot path; general nu stays on the CPU/XLA MLE
+    # path — DESIGN.md §2).
+    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=2.5, beta=0.5,
+                                    dtype=jnp.float32)
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    mf = rl.geostat_model_flops(shape, cfg.backend, cfg.tile_size,
+                                cfg.max_rank)
+
+    if shape.kind == "predict":
+        panel = max(4096, m // 64)
+        fn, specs = dist_cokrige_lowerable(
+            shape.n_locations, shape.n_pred, shape.p, params, panel=panel,
+            mesh=mesh, row_axes=row)
+        sh = (NamedSharding(mesh, P(row, None)),
+              NamedSharding(mesh, P(None, None)),
+              NamedSharding(mesh, P(row)))
+        lowered = jax.jit(fn, in_shardings=sh).lower(*specs)
+        return lowered, mf
+
+    if cfg.backend == "exact":
+        panel = max(4096, m // 64)
+        fn, specs = dist_loglik_lowerable(shape.n_locations, shape.p, params,
+                                          panel=panel, mesh=mesh,
+                                          row_axes=row)
+        sh = (NamedSharding(mesh, P(row, None)),
+              NamedSharding(mesh, P(row)))
+        lowered = jax.jit(fn, in_shardings=sh).lower(*specs)
+        return lowered, mf
+
+    nb, kmax = cfg.tile_size, cfg.max_rank
+    t = m // nb
+    fn, specs = dist_tlr_lowerable(t, nb, kmax, tol=cfg.tol, mesh=mesh,
+                                   row_axes=row,
+                                   super_panels=cfg.super_panels)
+    sh = (NamedSharding(mesh, P(row, None, None)),
+          NamedSharding(mesh, P(row, "model", None, None)),
+          NamedSharding(mesh, P(row, "model", None, None)),
+          NamedSharding(mesh, P(row)))
+    lowered = jax.jit(fn, in_shardings=sh).lower(*specs)
+    return lowered, mf
+
+
+# ---------------------------------------------------------------------------
+# Loop-trip cost correction (XLA cost_analysis counts while bodies ONCE;
+# verified in DESIGN.md §8).  Compile scan-unrolled 1x- and 2x-period models
+# and fit cost = outside + n_blocks * per_block exactly.
+# ---------------------------------------------------------------------------
+
+
+def cost_extrapolated(cfg, shape, mesh, attn_impl: str) -> dict:
+    import dataclasses
+
+    from ..models import settings
+    from ..models.transformer import layer_counts
+
+    period = cfg.pattern_period
+    vals = {}
+    with settings.unrolled_scans():
+        for mult in (1, 2):
+            cfg_r = dataclasses.replace(cfg, num_layers=period * mult)
+            lowered, _ = build_lm_cell(cfg_r, shape, mesh, attn_impl)
+            comp = lowered.compile()
+            ca = comp.cost_analysis() or {}
+            coll = rl.collective_bytes(comp.as_text())
+            vals[mult] = (float(ca.get("flops", 0.0)),
+                          float(ca.get("bytes accessed", 0.0)),
+                          float(coll["total"]))
+    per_block = tuple(vals[2][i] - vals[1][i] for i in range(3))
+    outside = tuple(vals[1][i] - per_block[i] for i in range(3))
+    nblocks, tail = layer_counts(cfg)
+    scale = nblocks + (tail / period if period else 0.0)
+    tot = tuple(outside[i] + per_block[i] * scale for i in range(3))
+    return dict(flops=tot[0], bytes=tot[1], coll=tot[2],
+                per_block_flops=per_block[0], outside_flops=outside[0])
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             attn_impl: str = "naive", out_dir: str = RESULTS_DIR,
+             variant: str = "baseline", correct_costs: bool = True,
+             cfg_overrides: dict | None = None,
+             microbatches: int = 1) -> dict:
+    import dataclasses as _dc
+    cfg = get_arch(arch_name)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = get_shape(cfg, shape_name)
+    multi = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    if isinstance(cfg, GeoStatConfig):
+        lowered, mf = build_geostat_cell(cfg, shape, mesh)
+    else:
+        lowered, mf = build_lm_cell(cfg, shape, mesh, attn_impl,
+                                    microbatches=microbatches)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # Trip-count-corrected per-device costs.
+    override = None
+    correction = "none"
+    if correct_costs and isinstance(cfg, GeoStatConfig):
+        if cfg.backend == "tlr" and shape.kind != "predict":
+            # fori bodies are counted once; with S super-panels each inner
+            # loop runs T/S trips (S=1: plain xT; outside part negligible).
+            t_tiles = shape.matrix_dim // cfg.tile_size
+            trips = max(t_tiles // max(cfg.super_panels, 1), 1)
+            ca = compiled.cost_analysis() or {}
+            coll = rl.collective_bytes(compiled.as_text())
+            override = dict(flops=float(ca.get("flops", 0)) * trips,
+                            bytes=float(ca.get("bytes accessed", 0)) * trips,
+                            coll=float(coll["total"]) * trips)
+            correction = f"fori_x{trips}"
+        # exact/predict paths are python-unrolled: measured is exact.
+    elif correct_costs:
+        override = cost_extrapolated(cfg, shape, mesh, attn_impl)
+        correction = "two-point-layer-extrapolation"
+
+    report = rl.analyze(arch_name, shape_name, mesh_name, chips, compiled, mf,
+                        override=override)
+    rec = report.to_dict()
+    rec.update(lower_s=t_lower, compile_s=t_compile, attn_impl=attn_impl,
+               variant=variant, status="ok", cost_correction=correction)
+
+    print(f"== {arch_name} x {shape_name} x {mesh_name} [{variant}] ==")
+    print("memory_analysis:", compiled.memory_analysis())
+    ca = compiled.cost_analysis() or {}
+    print("cost_analysis (raw, scan bodies once): flops=%.4g bytes=%.4g" %
+          (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
+    print(rl.format_report_row(report))
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch_name}__{shape_name}__{mesh_name}__{variant}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--attn-impl", default="naive",
+                    choices=["naive", "chunked"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tlr-super-panels", type=int, default=0,
+                    help="override GeoStatConfig.super_panels for TLR cells")
+    ap.add_argument("--no-correct", action="store_true",
+                    help="skip the trip-count cost-correction compiles "
+                         "(multipod fit-proof pass; roofline is pod-only)")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape, ok in iter_cells():
+            print(f"{arch.name:28s} {shape.name:12s} "
+                  f"{'run' if ok else 'SKIP (full attention @500k)'}")
+        return
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch, shape, ok in iter_cells():
+            if ok:
+                cells.append((arch.name, shape.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for arch_name, shape_name in cells:
+        for mesh_name in meshes:
+            fname = os.path.join(
+                args.out_dir,
+                f"{arch_name}__{shape_name}__{mesh_name}__{args.variant}.json")
+            if args.skip_existing and os.path.exists(fname):
+                print(f"skip existing {fname}")
+                continue
+            try:
+                overrides = ({"super_panels": args.tlr_super_panels}
+                             if (args.tlr_super_panels and
+                                 arch_name == "geostat-tlr") else None)
+                run_cell(arch_name, shape_name, mesh_name, args.attn_impl,
+                         args.out_dir, args.variant,
+                         correct_costs=not args.no_correct,
+                         cfg_overrides=overrides,
+                         microbatches=args.microbatches)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                failures.append((arch_name, shape_name, mesh_name, str(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("dry-run complete: all cells lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

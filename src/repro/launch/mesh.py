@@ -1,0 +1,31 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n_devices: int | None = None, model_parallel: int = 0):
+    """Best-effort mesh for whatever devices exist (tests / local runs)."""
+    n = n_devices or len(jax.devices())
+    if model_parallel <= 0:
+        model_parallel = 1
+        while (model_parallel * 2) ** 2 <= n:
+            model_parallel *= 2
+        model_parallel = min(model_parallel, n)
+    data = max(n // model_parallel, 1)
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    return mesh.devices.size

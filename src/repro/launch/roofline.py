@@ -1,0 +1,258 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs / (chips x peak)          [cost_analysis, per-device,
+                                                    so chips cancels: /peak]
+  memory     = HLO_bytes / (chips x HBM_bw)        [same]
+  collective = collective_bytes / (chips x link_bw)
+
+cost_analysis() on an SPMD-partitioned executable reports the PER-DEVICE
+program (verified empirically: a (1024,1024,1024) matmul on 16 devices
+reports 2MNK/16 flops), so the per-chip time is value/peak directly.
+collective_bytes is parsed from the compiled HLO text: the summed operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (also per-device).
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+CPU-backend caveat (DESIGN.md §8): HLO_bytes reflects the CPU lowering's
+fusion decisions, which differ from TPU's in the tail ops; flops and
+collective bytes are partitioning-determined and transfer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                       r"([\w\-]+)\((.*)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def bytes_of_type(type_str: str) -> int:
+    """Total bytes of all dtype[dims] shapes in a (possibly tuple) type."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dtype])
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective family (operand sizes)."""
+    sizes: dict[str, int] = {}
+    per_op = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, operands = m.groups()
+        sizes[name] = bytes_of_type(rtype)
+        base = op
+        for c in _COLLECTIVES:
+            if base == c or base.startswith(c + "-start") or \
+                    base.startswith(c + "."):
+                opnames = _OPERAND_RE.findall(operands)
+                ob = sum(sizes.get(o, 0) for o in opnames)
+                if ob == 0:          # fallback: result size
+                    ob = sizes[name]
+                per_op[c] += ob
+                counts[c] += 1
+                break
+    per_op["total"] = sum(per_op[c] for c in _COLLECTIVES)
+    per_op["counts"] = counts
+    return per_op
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: dict
+    model_flops_global: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    useful_flops_ratio: float     # MODEL_FLOPS / (chips * HLO_FLOPs)
+    memory_stats: dict
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int, compiled,
+            model_flops_global: float, override: dict | None = None
+            ) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    if override is not None:
+        # Trip-count-corrected values (see dryrun.cost_extrapolated).
+        flops = float(override["flops"])
+        byts = float(override["bytes"])
+        coll = dict(coll, total=float(override["coll"]))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    ms = compiled.memory_analysis()
+    mem_stats = dict(
+        argument_bytes=int(getattr(ms, "argument_size_in_bytes", 0)),
+        output_bytes=int(getattr(ms, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(ms, "temp_size_in_bytes", 0)),
+        code_bytes=int(getattr(ms, "generated_code_size_in_bytes", 0)),
+        alias_bytes=int(getattr(ms, "alias_size_in_bytes", 0)),
+    )
+    useful = model_flops_global / max(flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=byts,
+        collective_bytes_per_chip=float(coll["total"]),
+        collective_breakdown={k: v for k, v in coll.items() if k != "counts"},
+        model_flops_global=model_flops_global,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, useful_flops_ratio=useful, memory_stats=mem_stats)
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (the "useful work" yardstick)
+# ---------------------------------------------------------------------------
+
+
+def lm_param_counts(cfg) -> dict:
+    """Analytic parameter counts (total and active-per-token)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    per_layer_attn = d * hd * (h + 2 * kv) + h * hd * d
+    mlp_dense = d * cfg.d_ff * (3 if cfg.mlp_kind == "swiglu" else 2)
+    total = 0
+    active = 0
+    from ..models.transformer import block_spec, layer_counts
+    spec = block_spec(cfg)
+    nblocks, tail = layer_counts(cfg)
+    seq = [spec[i % len(spec)] for i in range(cfg.num_layers)]
+    for kind, use_moe in seq:
+        if kind in ("attn", "swa", "local"):
+            total += per_layer_attn
+            active += per_layer_attn
+            if use_moe:
+                expert = mlp_dense
+                total += cfg.num_experts * expert + d * cfg.num_experts
+                active += cfg.experts_per_token * expert
+                if cfg.moe_shared_expert:
+                    total += expert
+                    active += expert
+            else:
+                total += mlp_dense
+                active += mlp_dense
+        elif kind == "ssd":
+            d_in = cfg.ssm_expand * d
+            heads = d_in // cfg.ssm_head_dim
+            proj = d * (2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + heads)
+            ssm = proj + d_in * d
+            total += ssm
+            active += ssm
+        elif kind == "rglru":
+            lw = cfg.lru_width or d
+            rec = 2 * d * lw + 2 * lw * lw + lw * d
+            total += rec + mlp_dense
+            active += rec + mlp_dense
+    embed = cfg.vocab_size * d
+    total += embed if cfg.tie_embeddings else 2 * embed
+    active += embed if cfg.tie_embeddings else 2 * embed
+    return dict(total=total, active=active)
+
+
+def lm_model_flops(cfg, shape) -> float:
+    """Global useful flops for one step of the given shape.
+
+    train: 6 * N_active * tokens  (fwd 2N + bwd 4N)
+    prefill: 2 * N_active * tokens + attention term
+    decode: 2 * N_active * batch + attention-over-cache term
+    """
+    counts = lm_param_counts(cfg)
+    n_act = counts["active"]
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    attn_layers = sum(1 for k in
+                      (cfg.layer_pattern[i % len(cfg.layer_pattern)]
+                       for i in range(cfg.num_layers))
+                      if k in ("attn", "swa", "local"))
+    if shape.kind == "train":
+        flops = 6.0 * n_act * b * s
+        eff_s = min(s, cfg.window) if cfg.window else s
+        flops += 3 * 2 * 2 * b * s * eff_s * cfg.num_heads * hd * attn_layers / 2
+        return flops
+    if shape.kind == "prefill":
+        flops = 2.0 * n_act * b * s
+        eff_s = min(s, cfg.window) if cfg.window else s
+        flops += 2 * 2 * b * s * eff_s * cfg.num_heads * hd * attn_layers / 2
+        return flops
+    # decode: one token against a seq_len cache
+    flops = 2.0 * n_act * b
+    eff_s = min(s, cfg.window) if cfg.window else s
+    flops += 2 * 2 * b * eff_s * cfg.num_heads * hd * attn_layers
+    return flops
+
+
+def geostat_model_flops(shape, backend: str, tile_size: int, max_rank: int) -> float:
+    """Useful flops of one MLE iteration (or a cokriging prediction batch).
+
+    exact: (1/3) m^3 Cholesky + m^2 solve     (m = p*n)
+    tlr:   T^3/6 TLR-MM-chain tasks of 36 nb kmax^2 each (paper §5.3 model)
+           + T dense POTRFs + recompression QR/SVD (2 QRs of (nb, 2k)).
+    predict: exact Cholesky + 2 triangular solves for 1 + npred*p RHS.
+    """
+    m = shape.matrix_dim
+    if shape.kind == "predict":
+        nrhs = 1 + shape.n_pred * shape.p
+        return m ** 3 / 3.0 + 2.0 * m * m * nrhs
+    if backend == "exact":
+        return m ** 3 / 3.0 + 2.0 * m * m
+    nb, k = tile_size, max_rank
+    t = m // nb
+    tlr_mm = (t ** 3 / 6.0) * 36.0 * nb * k * k
+    potrf = t * nb ** 3 / 3.0
+    recompress = (t ** 3 / 6.0) * 2 * (2 * nb * (2 * k) ** 2)
+    return tlr_mm + potrf + recompress
+
+
+def format_report_row(r: RooflineReport) -> str:
+    return (f"{r.arch:28s} {r.shape:12s} {r.mesh:8s} "
+            f"compute={r.compute_s:9.3e}s memory={r.memory_s:9.3e}s "
+            f"collective={r.collective_s:9.3e}s dominant={r.dominant:10s} "
+            f"useful={r.useful_flops_ratio:6.3f}")

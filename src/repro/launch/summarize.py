@@ -1,0 +1,61 @@
+"""Summarize dry-run JSON records into the EXPERIMENTS.md roofline table.
+
+  PYTHONPATH=src python -m repro.launch.summarize [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(directory: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fraction(rec):
+    """Roofline fraction: useful-time / modeled-execution-time.
+
+    Modeled execution time = max of the three terms (perfect overlap
+    assumption); useful time = MODEL_FLOPS / (chips * peak)."""
+    from .roofline import PEAK_FLOPS
+    t_exec = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+    t_useful = rec["model_flops_global"] / (rec["chips"] * PEAK_FLOPS)
+    return t_useful / t_exec if t_exec > 0 else 0.0
+
+
+def markdown_table(recs, mesh: str = "pod", variant: str | None = None):
+    rows = [r for r in recs if r["mesh"] == mesh
+            and (variant is None or r.get("variant") == variant)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | variant | compute s | memory s | collective s "
+           "| dominant | useful flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('variant','?')} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.3f} | {fraction(r):.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(f"{len(recs)} records")
+    print(markdown_table(recs, args.mesh, args.variant))
+
+
+if __name__ == "__main__":
+    main()

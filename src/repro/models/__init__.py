@@ -1,0 +1,2 @@
+from .transformer import (block_spec, decode_step, forward,  # noqa: F401
+                          init_caches, init_model, layer_counts)

@@ -1,0 +1,219 @@
+"""Attention layer: GQA/MQA/MHA, RoPE, qk-norm, sliding/local windows.
+
+Three interchangeable inner implementations (config/runtime selectable):
+
+* ``naive``   — materializes the (Sq, Skv) score matrix.  This is the
+  paper-faithful "dense" baseline for the roofline study: its HBM traffic is
+  O(S^2) per head.
+* ``chunked`` — XLA-level online-softmax over KV chunks (lax.scan); the
+  flash-attention algorithm expressed in pure JAX so the dry-run can lower it
+  on any backend.  This is the beyond-paper optimized path (§Perf).
+* ``pallas``  — the Pallas flash kernel (TPU deploy path; interpret-mode
+  validated, not lowered in the CPU dry-run).
+
+Decode steps (Sq == 1 with a cache) use an explicit-position masked path that
+supports ring-buffer (windowed) caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from . import settings
+from .common import apply_rope, dense_init, rms_norm
+
+
+class AttentionParams(NamedTuple):
+    wq: jax.Array          # (d, H * hd)
+    wk: jax.Array          # (d, KV * hd)
+    wv: jax.Array          # (d, KV * hd)
+    wo: jax.Array          # (H * hd, d)
+    q_norm: jax.Array | None   # (hd,) qk-norm scales (qwen3)
+    k_norm: jax.Array | None
+
+
+def init_attention(key, cfg, dtype) -> AttentionParams:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    qn = kn = None
+    if cfg.qk_norm:
+        qn = jnp.zeros((hd,), dtype)
+        kn = jnp.zeros((hd,), dtype)
+    return AttentionParams(
+        wq=dense_init(kq, (d, cfg.num_heads * hd), dtype),
+        wk=dense_init(kk, (d, cfg.num_kv_heads * hd), dtype),
+        wv=dense_init(kv, (d, cfg.num_kv_heads * hd), dtype),
+        wo=dense_init(ko, (cfg.num_heads * hd, d), dtype),
+        q_norm=qn, k_norm=kn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Inner attention implementations (q: (B, S, H, hd), k/v: (B, Skv, KV, hd))
+# ---------------------------------------------------------------------------
+
+
+def _naive_attention(q, k, v, *, causal, window, kv_positions=None,
+                     q_positions=None):
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    scale = jnp.float32(hd) ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    # GQA einsum: fold heads onto kv heads.
+    qf = qf.reshape(b, sq, kvh, group, hd)
+    scores = jnp.einsum("bqmgd,bkmd->bmgqk", qf, k.astype(jnp.float32))
+    if q_positions is None:
+        q_positions = jnp.arange(sq, dtype=jnp.int32) + (skv - sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv, dtype=jnp.int32)
+    qpos = jnp.asarray(q_positions)
+    kpos = jnp.asarray(kv_positions)
+    if qpos.ndim == 1:
+        qpos = qpos[None]
+    if kpos.ndim == 1:
+        kpos = kpos[None]
+    qpos = jnp.broadcast_to(qpos, (b, sq))
+    kpos = jnp.broadcast_to(kpos, (b, skv))
+    mask = jnp.ones((b, sq, skv), bool)
+    if causal:
+        mask &= kpos[:, None, :] <= qpos[:, :, None]
+    if window and window > 0:
+        mask &= kpos[:, None, :] > qpos[:, :, None] - window
+    mask &= (kpos >= 0)[:, None, :]          # ring-buffer slots not yet filled
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isfinite(scores).any(-1, keepdims=True), probs, 0.0)
+    out = jnp.einsum("bmgqk,bkmd->bqmgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal, window, chunk: int = 1024):
+    """Online-softmax over KV chunks (flash algorithm at the XLA level)."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    nchunks = max(skv // chunk, 1)
+    chunk = skv // nchunks
+    scale = jnp.float32(hd) ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, group, hd) * scale
+    kc = k.astype(jnp.float32).reshape(b, nchunks, chunk, kvh, hd)
+    vc = v.astype(jnp.float32).reshape(b, nchunks, chunk, kvh, hd)
+    qpos = jnp.arange(sq, dtype=jnp.int32) + (skv - sq)
+
+    def step(carry, inputs):
+        acc, m, l = carry
+        kblk, vblk, ki = inputs
+        kpos = ki * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        s = jnp.einsum("bqmgd,bkmd->bmgqk", qf, kblk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window and window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bmgqk,bkmd->bmgqd", p, vblk)
+        acc_new = acc * corr[..., 0][..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kvh, group, sq, hd), jnp.float32)
+    m0 = jnp.full((b, kvh, group, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group, sq, 1), jnp.float32)
+    ks = jnp.moveaxis(kc, 1, 0)
+    vs = jnp.moveaxis(vc, 1, 0)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (ks, vs, jnp.arange(nchunks, dtype=jnp.int32)),
+        unroll=settings.scan_unroll())
+    out = acc / jnp.maximum(l[..., 0][..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def _pallas_attention(q, k, v, *, causal, window):
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kvh, skv, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kvh, skv, hd)
+    out = kops.attention(qf, kf, vf, causal=causal, window=window,
+                         impl="interpret" if not kops.on_tpu() else "pallas")
+    return jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2)
+
+
+def init_attention_cache(cfg, batch: int, max_len: int, layer_window: int,
+                         dtype):
+    """Unified (ring-buffer) KV cache.
+
+    Global attention: slots == max_len (ring degenerates to a dense cache).
+    Windowed attention: slots == window — memory stays O(window) no matter
+    how long the stream runs (the Mixtral-SWA / RecurrentGemma-local case;
+    this is what makes decode_32k/long_500k caches bounded).
+    """
+    slots = min(layer_window, max_len) if layer_window else max_len
+    hd = cfg.resolved_head_dim
+    return dict(
+        k=jnp.zeros((batch, slots, cfg.num_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, slots, cfg.num_kv_heads, hd), dtype),
+        kpos=jnp.full((slots,), -1, jnp.int32),   # -1 -> slot empty (masked)
+    )
+
+
+def _cache_insert(cache, k, v, positions):
+    """Insert s new steps at slots positions % W.  positions: (1, s) int32."""
+    slots_n = cache["k"].shape[1]
+    pos = positions[0]                                   # (s,)
+    slot = (pos % slots_n).astype(jnp.int32)
+    kc = cache["k"].at[:, slot].set(k)
+    vc = cache["v"].at[:, slot].set(v)
+    kpos = cache["kpos"].at[slot].set(pos)
+    return dict(k=kc, v=vc, kpos=kpos)
+
+
+def multihead_attention(params: AttentionParams, x, cfg, *, layer_window: int,
+                        impl: str = "naive", positions=None, cache=None):
+    """Full attention layer.  x: (B, S, d).
+
+    With ``cache`` (decode/prefill-into-cache): new K/V are inserted at their
+    ring slots and attention runs over the cache with explicit positions.
+    Returns (out, new_cache_or_None).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+
+    q = (x @ params.wq).reshape(b, s, h, hd)
+    k = (x @ params.wk).reshape(b, s, kvh, hd)
+    v = (x @ params.wv).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params.q_norm, cfg.norm_eps)
+        k = rms_norm(k, params.k_norm, cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = _cache_insert(cache, k, v, positions)
+        out = _naive_attention(q, new_cache["k"], new_cache["v"], causal=True,
+                               window=layer_window,
+                               kv_positions=new_cache["kpos"],
+                               q_positions=positions)
+    elif impl == "chunked":
+        out = _chunked_attention(q, k, v, causal=True, window=layer_window)
+    elif impl == "pallas":
+        out = _pallas_attention(q, k, v, causal=True, window=layer_window)
+    else:
+        out = _naive_attention(q, k, v, causal=True, window=layer_window)
+
+    out = out.reshape(b, s, h * hd) @ params.wo
+    return out, new_cache

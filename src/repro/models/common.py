@@ -1,0 +1,66 @@
+"""Shared model building blocks (pure JAX; params are pytrees of arrays).
+
+Dtype policy: parameters and activations use the config dtype (bf16 on TPU,
+f32 for CPU smoke tests); normalization statistics and softmax always
+accumulate in f32.  All constants are pinned so the geostat f64 mode never
+leaks into model code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + jnp.float32(eps))
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / jnp.float32(head_dim)
+    return jnp.float32(theta) ** -exponent               # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: broadcastable (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                   # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]                         # (..., seq, 1, hd/2)
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    return jnp.float32(cap) * jnp.tanh(x / jnp.float32(cap))
+
+
+def take_embedding(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,34 @@
+"""Modality frontend STUBS for backbone-only architectures.
+
+Per the assignment spec, ``[audio]`` (musicgen) and ``[vlm]`` (pixtral)
+entries specify the transformer BACKBONE only; the modality frontend is a
+stub whose job is to make ``input_specs()`` produce precomputed frame/patch
+embeddings of the right shape/dtype.  For runnable smoke tests we synthesize
+embeddings with a fixed random projection of token ids (deterministic,
+shape-correct, gradient-free).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frame_embeddings(key, batch: int, seq: int, d_model: int, dtype):
+    """Stand-in for EnCodec frame embeddings (musicgen)."""
+    return jax.random.normal(key, (batch, seq, d_model), jnp.float32) \
+        .astype(dtype) * 0.02
+
+
+def vision_patch_embeddings(key, batch: int, seq: int, d_model: int, dtype):
+    """Stand-in for Pixtral-ViT patch embeddings interleaved with text."""
+    return jax.random.normal(key, (batch, seq, d_model), jnp.float32) \
+        .astype(dtype) * 0.02
+
+
+def frontend_embeddings(frontend: str, key, batch: int, seq: int,
+                        d_model: int, dtype):
+    if frontend == "audio_stub":
+        return audio_frame_embeddings(key, batch, seq, d_model, dtype)
+    if frontend == "vision_stub":
+        return vision_patch_embeddings(key, batch, seq, d_model, dtype)
+    raise ValueError(frontend)

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (musicgen)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+class MLPParams(NamedTuple):
+    w_gate: jax.Array | None   # (d, f) — None for plain GELU
+    w_up: jax.Array            # (d, f)
+    w_down: jax.Array          # (f, d)
+
+
+def init_mlp(key, d: int, f: int, kind: str, dtype) -> MLPParams:
+    kg, ku, kd = jax.random.split(key, 3)
+    gate = dense_init(kg, (d, f), dtype) if kind == "swiglu" else None
+    return MLPParams(w_gate=gate, w_up=dense_init(ku, (d, f), dtype),
+                     w_down=dense_init(kd, (f, d), dtype))
+
+
+def mlp(params: MLPParams, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params.w_gate) * (x @ params.w_up)
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params.w_up)
+    else:
+        raise ValueError(kind)
+    return h @ params.w_down

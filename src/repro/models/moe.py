@@ -1,0 +1,197 @@
+"""Mixture-of-Experts block (Mixtral 8e top-2; Llama-4 128e top-1 + shared).
+
+Capacity-based einsum dispatch (mesh-tf / MaxText style): every token picks
+its top-k experts; a cumulative-sum assigns a slot within each expert's
+capacity C = ceil(tokens * k * capacity_factor / E); overflowing tokens are
+dropped (their combine weight is zero), underfull slots are padded.
+
+Sharding intent (GSPMD): expert dim E -> "model" (expert parallelism);
+token/batch dim -> "data"/"pod" (data parallel); the d_model contraction of
+each expert's GEMMs is additionally sharded over "data" (FSDP-style weight
+sharding) — see distribution/sharding.py.
+
+The dispatch einsums cost O(T * E_local_capacity * d) extra flops; the sorted
+ragged dispatch that removes them is a recorded §Perf hillclimb step for the
+llama4 cell (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .mlp import MLPParams, init_mlp, mlp
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array          # (d, E)
+    w_gate: jax.Array          # (E, d, f)
+    w_up: jax.Array            # (E, d, f)
+    w_down: jax.Array          # (E, f, d)
+    shared: MLPParams | None   # llama4-style always-on shared expert
+
+
+def init_moe(key, cfg, dtype) -> MoEParams:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    shared = init_mlp(ks, d, f, "swiglu", dtype) if cfg.moe_shared_expert else None
+    return MoEParams(
+        router=dense_init(kr, (d, e), jnp.float32),  # router kept in f32
+        w_gate=dense_init(kg, (e, d, f), dtype, scale=d ** -0.5),
+        w_up=dense_init(ku, (e, d, f), dtype, scale=d ** -0.5),
+        w_down=dense_init(kd, (e, f, d), dtype, scale=f ** -0.5),
+        shared=shared,
+    )
+
+
+def _capacity(tokens: int, k: int, e: int, factor: float) -> int:
+    """Per-expert slot count, rounded UP to a multiple of 256 so the (E, C)
+    buffer shards evenly over the data axis (an off-by-one here silently
+    disables the capacity-dim sharding and replicates the expert GEMMs
+    16x — found in the dry-run, EXPERIMENTS.md §Perf)."""
+    cap = -(-int(tokens * k * factor) // e)          # ceil
+    cap = -(-cap // 256) * 256 if cap > 256 else cap
+    return max(cap, 1)
+
+
+def _mesh_and_sizes():
+    """(mesh, dp_axes, dp_size, model_size); dp covers pod+data."""
+    from . import settings
+
+    mesh = settings.FSDP_GATHER_MESH
+    if mesh is None:
+        return None, (), 1, 1
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    return mesh, dp, dsize, mesh.shape.get("model", 1)
+
+
+def _dispatch_shards(cfg, tokens: int) -> int:
+    """Number of shard-local dispatch blocks (== the DP-shard count when the
+    token count divides it; 1 on single-device tests)."""
+    mesh, _, dsize, _ = _mesh_and_sizes()
+    if mesh is None or tokens % dsize != 0:
+        return 1
+    return dsize
+
+
+def _constrain_dispatch_buffer(buf, cfg, axis: int):
+    """(shards, E, C, d) buffer: shard dim 'axis' over the DP axes so the
+    scatter/gather rows stay device-local."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh, dp, dsize, _ = _mesh_and_sizes()
+    if mesh is None or buf.shape[axis] % dsize != 0:
+        return buf
+    spec = [None] * buf.ndim
+    spec[axis] = dp if len(dp) > 1 else dp[0]
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(mesh, P(*spec)))
+
+
+def _constrain_expert_buffer(xe, cfg):
+    """Shard the (E, C, d) expert buffer: experts over "model" (EP) when they
+    divide the TP degree, capacity over "data" always.  Scatter outputs lose
+    the token sharding otherwise, which replicates the expert GEMMs 16x
+    (measured: EXPERIMENTS.md §Perf, llama4/mixtral iteration 2)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from .shardspecs import PRODUCTION_TP
+
+    mesh, dp, dsize, msize = _mesh_and_sizes()
+    if mesh is None:
+        return xe
+    e, cap = xe.shape[0], xe.shape[1]
+    ep = "model" if (cfg.num_experts % PRODUCTION_TP == 0 and
+                     e % msize == 0) else None
+    cdim = (dp if len(dp) > 1 else dp[0]) if (dp and cap % dsize == 0) \
+        else None
+    return jax.lax.with_sharding_constraint(
+        xe, NamedSharding(mesh, P(ep, cdim, None)))
+
+
+def moe_block(params: MoEParams, x, cfg):
+    """x: (B, S, d) -> (B, S, d); also returns the router aux loss.
+
+    Dispatch is scatter/gather-based: each (token, choice) gets a unique
+    (expert, slot) id from a cumulative count, tokens scatter-add into the
+    (E*C, d) expert buffer, and results gather back with gate weighting —
+    O(T*d) data movement.  The one-hot einsum dispatch used in the first
+    implementation costs T*E*C*d = O(T^2 k cf d) flops and dominated the
+    mixtral/llama4 train cells by 100x (EXPERIMENTS.md §Perf, llama4
+    iteration 1); scatter dispatch removes it entirely.
+    """
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ params.router           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)     # renormalize
+
+    # Load-balancing auxiliary loss (Switch/Mixtral style).
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32),
+                       axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(density * density_prob)
+
+    # Shard-LOCAL dispatch (iteration 3 of the MoE §Perf ladder): slots are
+    # assigned within each data shard's contiguous token block, and the
+    # expert buffer is laid out shard-major so every scatter/gather touches
+    # only local rows.  A single (shards, E) -> (E, shards) transpose then
+    # moves tokens to their experts — GSPMD lowers it to the canonical MoE
+    # all-to-all.  The previous global-capacity scatter crossed shards and
+    # lowered to ~140 GB/chip of all-reduce on the mixtral train cell.
+    shards = _dispatch_shards(cfg, t)
+    tl = t // shards                                           # tokens/shard
+    cap = _capacity(tl, k, e, cfg.capacity_factor)             # local capacity
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T, k, E)
+    oh_s = onehot.reshape(shards, tl * k, e)
+    pos = jnp.cumsum(oh_s, axis=1) - oh_s                      # shard-local
+    pos_in_expert = pos.reshape(t, k, e)
+    slot = jnp.sum(pos_in_expert * onehot, axis=-1).astype(jnp.int32)  # (T, k)
+    keep = slot < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # Row id in the shard-major buffer (s, e, c); dropped tokens -> dump row.
+    shard_id = (jnp.arange(t, dtype=jnp.int32) // tl)[:, None]  # (T, 1)
+    flat = jnp.where(keep,
+                     (shard_id * e + expert_idx) * cap + slot,
+                     shards * e * cap)                          # (T, k)
+    xe_flat = jnp.zeros((shards * e * cap + 1, d), x.dtype)
+    xe_flat = xe_flat.at[flat.reshape(-1)].add(
+        jnp.repeat(xf, k, axis=0), mode="drop")                 # local scatter
+    xe = xe_flat[:shards * e * cap].reshape(shards, e, cap, d)
+    xe = _constrain_dispatch_buffer(xe, cfg, axis=0)
+    # (shards, E, C, d) -> (E, shards*C, d): the all-to-all.
+    xe = jnp.swapaxes(xe, 0, 1).reshape(e, shards * cap, d)
+    xe = _constrain_expert_buffer(xe, cfg)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params.w_gate)) * \
+        jnp.einsum("ecd,edf->ecf", xe, params.w_up)
+    ye = jnp.einsum("ecf,efd->ecd", h, params.w_down)          # (E, S*C, d)
+    ye = _constrain_expert_buffer(ye, cfg)
+
+    # Return all-to-all, then a purely local gather + weighted combine.
+    ye = jnp.swapaxes(ye.reshape(e, shards, cap, d), 0, 1)     # (S, E, C, d)
+    ye = _constrain_dispatch_buffer(ye, cfg, axis=0)
+    ye_flat = jnp.concatenate(
+        [ye.reshape(shards * e * cap, d), jnp.zeros((1, d), ye.dtype)],
+        axis=0)
+    picked = ye_flat[flat.reshape(-1)].reshape(t, k, d)        # local gather
+    y = jnp.sum(picked.astype(jnp.float32) *
+                gate_vals[..., None].astype(jnp.float32), axis=1)
+    y = y.astype(x.dtype)
+
+    if params.shared is not None:
+        y = y + mlp(params.shared, xf, "swiglu")
+    return y.reshape(b, s, d), aux_loss

@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+  r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+  i_t = sigmoid(W_x x_t + b_x)              (input gate)
+  log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Training uses jax.lax.associative_scan over time (log-depth, maps to
+parallel-prefix on TPU); decode is the O(1) recurrence.  The enclosing
+recurrent block is: linear in -> temporal conv (width 4) -> RG-LRU -> gated
+linear out, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+class RGLRUParams(NamedTuple):
+    w_x: jax.Array         # (d, L) input branch
+    w_gate: jax.Array      # (d, L) multiplicative gate branch
+    conv_w: jax.Array      # (W, L)
+    conv_b: jax.Array      # (L,)
+    w_a: jax.Array         # (L, L) recurrence-gate proj (block-diag in paper;
+                           #        dense here — reduced configs keep it small)
+    b_a: jax.Array         # (L,)
+    w_i: jax.Array         # (L, L) input-gate proj
+    b_i: jax.Array         # (L,)
+    lam: jax.Array         # (L,) Lambda (softplus-parameterized decay)
+    w_out: jax.Array       # (L, d)
+
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype) -> RGLRUParams:
+    d = cfg.d_model
+    lw = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ Uniform(0.9, 0.999)^c at r=1 (paper App. A).
+    u = jax.random.uniform(ks[5], (lw,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))   # softplus^{-1}(-log u / c)
+    return RGLRUParams(
+        w_x=dense_init(ks[0], (d, lw), dtype),
+        w_gate=dense_init(ks[1], (d, lw), dtype),
+        conv_w=dense_init(ks[2], (4, lw), dtype, scale=0.5),
+        conv_b=jnp.zeros((lw,), dtype),
+        w_a=dense_init(ks[3], (lw, lw), dtype),
+        b_a=jnp.zeros((lw,), jnp.float32) + 1.0,
+        w_i=dense_init(ks[4], (lw, lw), dtype),
+        b_i=jnp.zeros((lw,), jnp.float32),
+        lam=lam,
+        w_out=dense_init(ks[6], (lw, d), dtype),
+    )
+
+
+def _conv1d(x, w, b, state=None):
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(width))
+    return y + b[None, None], xp[:, -(width - 1):, :]
+
+
+def _rglru_scan(log_a, gated_in):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (log-depth)."""
+    def combine(lhs, rhs):
+        la, lb = lhs
+        ra, rb = rhs
+        return la + ra, jnp.exp(ra) * lb + rb
+
+    _, hs = jax.lax.associative_scan(combine, (log_a, gated_in), axis=1)
+    return hs
+
+
+def rglru_block(params: RGLRUParams, x, cfg, state=None):
+    """x: (B, S, d) -> (B, S, d).  state (decode): dict(conv, h)."""
+    b, s, d = x.shape
+    xb = x @ params.w_x                                  # (B,S,L)
+    gate = jax.nn.gelu(x @ params.w_gate)                # (B,S,L)
+    conv_state = None if state is None else state["conv"]
+    xb, new_conv = _conv1d(xb, params.conv_w, params.conv_b, conv_state)
+
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params.w_a.astype(jnp.float32) + params.b_a)
+    i = jax.nn.sigmoid(xf @ params.w_i.astype(jnp.float32) + params.b_i)
+    log_a = -_C * jax.nn.softplus(params.lam)[None, None] * r   # (B,S,L)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated_in = beta * (i * xf)
+
+    if state is None or s > 1:
+        # Train/prefill path (prefill starts from fresh state; the incoming
+        # h is zero).  Associative scan = parallel prefix over time.
+        h = _rglru_scan(log_a, gated_in)                 # (B,S,L)
+        new_h = h[:, -1]
+    else:
+        h = jnp.exp(log_a[:, 0]) * state["h"] + gated_in[:, 0]
+        new_h = h
+        h = h[:, None]
+
+    out = (h.astype(x.dtype) * gate) @ params.w_out
+    return out, dict(conv=new_conv, h=new_h)
+
+
+def init_rglru_state(cfg, batch: int, dtype):
+    lw = cfg.lru_width or cfg.d_model
+    return dict(conv=jnp.zeros((batch, 3, lw), dtype),
+                h=jnp.zeros((batch, lw), jnp.float32))

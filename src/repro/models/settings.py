@@ -1,0 +1,44 @@
+"""Global model-lowering switches (used by the dry-run cost accounting).
+
+XLA's HLO cost analysis counts while-loop bodies ONCE (verified: a 10-trip
+scanned matmul reports 1 matmul of flops).  The dry-run therefore compiles a
+second, scan-unrolled variant of each cell at 1x and 2x the layer pattern
+period and extrapolates exact per-layer costs (launch/dryrun.py).  This flag
+switches every lax.scan in the model stack to unroll mode.
+"""
+from contextlib import contextmanager
+
+UNROLL_SCANS = False
+
+# When set to a Mesh, every layer's weights are constrained to their
+# FSDP-gathered compute specs at trace time (models/shardspecs.py).  Set by
+# the dry-run / train-step builders around tracing; None on single-device
+# test paths.
+FSDP_GATHER_MESH = None
+
+
+def scan_unroll():
+    """Value to pass as lax.scan's unroll= argument."""
+    return True if UNROLL_SCANS else 1
+
+
+@contextmanager
+def unrolled_scans():
+    global UNROLL_SCANS
+    prev = UNROLL_SCANS
+    UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        UNROLL_SCANS = prev
+
+
+@contextmanager
+def fsdp_gather(mesh):
+    global FSDP_GATHER_MESH
+    prev = FSDP_GATHER_MESH
+    FSDP_GATHER_MESH = mesh
+    try:
+        yield
+    finally:
+        FSDP_GATHER_MESH = prev

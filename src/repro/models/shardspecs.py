@@ -1,0 +1,148 @@
+"""Parameter PartitionSpecs + FSDP compute-gather specs.
+
+Storage specs shard layer weights over BOTH axes: "data" (FSDP/ZeRO-3) and
+"model" (TP/EP).  At compute time the "data" factor must be all-gathered
+just-in-time — otherwise GSPMD faces an axis conflict (batch and contraction
+both on "data" in one dot) and resolves it by replicating the *batch*, a 16x
+flop blowup we measured in the dry-run (EXPERIMENTS.md §Perf, iteration 1).
+``compute_spec`` strips "data" from a storage spec; transformer._apply_layer
+applies it as a with_sharding_constraint when settings.FSDP_GATHER_MESH is
+set, which is exactly ZeRO-3's gather-weights-per-layer, overlapped by XLA's
+scheduler with the scanned layer compute.
+
+Embedding/LM head avoid the conflict structurally: embed is vocab-parallel
+P("model", None); lm_head is column-parallel P(None, "model").
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .attention import AttentionParams
+from .mlp import MLPParams
+from .moe import MoEParams
+from .rglru import RGLRUParams
+from .ssm import SSMParams
+
+
+def attention_specs(cfg) -> AttentionParams:
+    qn = P(None) if cfg.qk_norm else None
+    return AttentionParams(
+        wq=P("data", "model"),
+        wk=P("data", "model"),
+        wv=P("data", "model"),
+        wo=P("model", "data"),
+        q_norm=qn, k_norm=qn,
+    )
+
+
+def mlp_specs(cfg) -> MLPParams:
+    gate = P("data", "model") if cfg.mlp_kind == "swiglu" else None
+    return MLPParams(w_gate=gate, w_up=P("data", "model"),
+                     w_down=P("model", "data"))
+
+
+# Production tensor-parallel degree (the "model" mesh axis is 16 on both the
+# single-pod and multi-pod meshes).  Used only for divisibility decisions.
+PRODUCTION_TP = 16
+
+
+def moe_specs(cfg) -> MoEParams:
+    shared = mlp_specs(cfg) if cfg.moe_shared_expert else None
+    if cfg.num_experts % PRODUCTION_TP == 0:
+        # Expert parallelism: experts over "model" (llama4: 128 experts).
+        return MoEParams(
+            router=P(None, None),
+            w_gate=P("model", "data", None),   # E -> EP, d_model -> FSDP
+            w_up=P("model", "data", None),
+            w_down=P("model", None, "data"),
+            shared=shared,
+        )
+    # Too few experts for EP (mixtral: 8 on a 16-wide axis): tensor-parallel
+    # inside every expert over the FFN width instead.
+    return MoEParams(
+        router=P(None, None),
+        w_gate=P(None, "data", "model"),
+        w_up=P(None, "data", "model"),
+        w_down=P(None, "model", "data"),
+        shared=shared,
+    )
+
+
+def ssm_specs(cfg) -> SSMParams:
+    return SSMParams(
+        w_in=P("data", "model"),
+        conv_w=P(None, "model"),
+        conv_b=P("model"),
+        a_log=P(None),
+        dt_bias=P(None),
+        d_skip=P(None),
+        norm_w=P("model"),
+        w_out=P("model", "data"),
+    )
+
+
+def rglru_specs(cfg) -> RGLRUParams:
+    return RGLRUParams(
+        w_x=P("data", "model"),
+        w_gate=P("data", "model"),
+        conv_w=P(None, "model"),
+        conv_b=P("model"),
+        w_a=P("model", None),
+        b_a=P("model"),
+        w_i=P("model", None),
+        b_i=P("model"),
+        lam=P("model"),
+        w_out=P("model", "data"),
+    )
+
+
+def layer_specs(cfg, kind: str, use_moe: bool):
+    layer = {"norm1": P(None)}
+    if kind in ("attn", "swa", "local"):
+        layer["attn"] = attention_specs(cfg)
+        layer["norm2"] = P(None)
+        if use_moe:
+            layer["moe"] = moe_specs(cfg)
+        else:
+            layer["mlp"] = mlp_specs(cfg)
+    elif kind == "ssd":
+        layer["ssm"] = ssm_specs(cfg)
+    elif kind == "rglru":
+        layer["rglru"] = rglru_specs(cfg)
+        layer["norm2"] = P(None)
+        layer["mlp"] = mlp_specs(cfg)
+    return layer
+
+
+def _is_spec(x):
+    return isinstance(x, P) or x is None
+
+
+def compute_spec(spec):
+    """Storage spec -> compute spec: strip the FSDP ("data") factor."""
+    if spec is None or not isinstance(spec, P):
+        return spec
+    out = []
+    for entry in spec:
+        if entry == "data":
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(e for e in entry if e != "data")
+            out.append(kept if kept else None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def gather_layer_params(layer, cfg, kind: str, use_moe: bool, mesh):
+    """Constrain every weight of a layer to its FSDP-gathered compute spec."""
+    specs = layer_specs(cfg, kind, use_moe)
+
+    def one(arr, spec):
+        if arr is None or spec is None:
+            return arr
+        return jax.lax.with_sharding_constraint(
+            arr, NamedSharding(mesh, compute_spec(spec)))
+
+    return jax.tree.map(one, layer, specs, is_leaf=lambda x: x is None)

@@ -1,0 +1,217 @@
+"""Mamba-2 mixer: state-space duality (SSD), chunked scan form.
+
+Follows the minimal SSD formulation of Dao & Gu (2024, arXiv:2405.21060):
+with per-head scalar decay a_t = exp(dt_t * A) and state size N,
+
+  h_t = a_t h_{t-1} + dt_t * B_t x_t^T ,   y_t = C_t^T h_t + D x_t
+
+computed in O(S) by splitting the sequence into chunks of length Q:
+an intra-chunk quadratic term (masked C B^T attention-like matmul — MXU
+work) plus an inter-chunk recurrence on per-chunk states (scan over S/Q
+steps).  Decode maintains (conv_state, ssm_state) and costs O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import settings
+from .common import dense_init, rms_norm
+
+
+class SSMParams(NamedTuple):
+    w_in: jax.Array        # (d, d_in*2 + 2*G*N + H) -> [z, x, B, C, dt]
+    conv_w: jax.Array      # (W, conv_channels)  depthwise causal conv
+    conv_b: jax.Array      # (conv_channels,)
+    a_log: jax.Array       # (H,)   A = -exp(a_log)
+    dt_bias: jax.Array     # (H,)
+    d_skip: jax.Array      # (H,)
+    norm_w: jax.Array      # (d_in,) gated RMSNorm scale
+    w_out: jax.Array       # (d_in, d)
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    g = cfg.ssm_groups
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * g * n
+    return d_in, heads, g, n, conv_ch
+
+
+def init_ssm(key, cfg, dtype) -> SSMParams:
+    d = cfg.d_model
+    d_in, heads, g, n, conv_ch = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * g * n + heads
+    dt = jnp.exp(jax.random.uniform(k3, (heads,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return SSMParams(
+        w_in=dense_init(k1, (d, proj_out), dtype),
+        conv_w=dense_init(k2, (cfg.ssm_conv_width, conv_ch), dtype, scale=0.5),
+        conv_b=jnp.zeros((conv_ch,), dtype),
+        a_log=jnp.log(jnp.arange(1, heads + 1, dtype=jnp.float32)),
+        dt_bias=dt_bias.astype(jnp.float32),
+        d_skip=jnp.ones((heads,), jnp.float32),
+        norm_w=jnp.zeros((d_in,), dtype),
+        w_out=dense_init(k4, (d_in, d), dtype),
+    )
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B, S, C), w: (W, C).  Returns y, new_state
+    (last W-1 inputs)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None]
+            for i in range(width))
+    new_state = xp[:, -(width - 1):, :]
+    return jax.nn.silu(y + b[None, None]), new_state
+
+
+def _segsum(a_log):
+    """log of the decay products: L[i, j] = sum_{j < m <= i} a_log[m]."""
+    q = a_log.shape[-1]
+    cs = jnp.cumsum(a_log, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a_log_h, bmat, cmat, chunk: int):
+    """SSD core.
+
+    xh:   (B, S, H, P)  per-head inputs
+    dt:   (B, S, H)     positive step sizes (post-softplus)
+    a_log_h: (H,)       A = -exp(a_log_h)
+    bmat, cmat: (B, S, G, N) with H % G == 0
+    Returns y: (B, S, H, P), final_state: (B, H, N, P).
+    """
+    b, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log_h)[None, None] * dt                      # (B,S,H) log-decay
+    xd = xh * dt[..., None]                                      # dt-weighted input
+    # reshape into chunks
+    ac = a.reshape(b, nc, chunk, h)
+    xc = xd.reshape(b, nc, chunk, h, p)
+    bc = jnp.repeat(bmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(cmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    # 1. Intra-chunk (diagonal block) term.
+    l = jnp.exp(_segsum(jnp.moveaxis(ac, 3, 2)))                # (B,nc,H,Q,Q)
+    cb = jnp.einsum("bzqhn,bzkhn->bzhqk", cc, bc)
+    y_diag = jnp.einsum("bzhqk,bzhqk,bzkhp->bzqhp",
+                        cb, l, xc)
+
+    # 2. Per-chunk final states.
+    a_cum = jnp.cumsum(ac, axis=2)                              # (B,nc,Q,H)
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)         # (B,nc,Q,H)
+    states = jnp.einsum("bzqhn,bzqh,bzqhp->bzhnp", bc, decay_to_end, xc)
+
+    # 3. Inter-chunk recurrence on states (scan over chunks).
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                        # emit prev
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)),
+        unroll=settings.scan_unroll())
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # (B,nc,H,N,P)
+
+    # 4. Chunk-start -> position contribution.
+    state_decay = jnp.exp(a_cum)                                # (B,nc,Q,H)
+    y_off = jnp.einsum("bzqhn,bzhnp,bzqh->bzqhp",
+                       cc, prev_states.astype(cc.dtype), state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+
+    # Final state for decode handoff: run the recurrence once more.
+    last = jnp.moveaxis(states, 1, 0).astype(jnp.float32)
+    decs = jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)
+    final = init
+    final, _ = jax.lax.scan(lambda c, i: (c * i[1][..., None, None] + i[0], 0.0),
+                            init, (last, decs), unroll=settings.scan_unroll())
+    return y, final
+
+
+def ssm_block(params: SSMParams, x, cfg, state=None):
+    """Full Mamba-2 mixer.  x: (B, S, d).
+
+    state (decode): dict(conv=(B, W-1, C), ssm=(B, H, N, P), pos scalar).
+    Returns (y, new_state).
+    """
+    b, s, d = x.shape
+    d_in, heads, g, n, conv_ch = _dims(cfg)
+    p = cfg.ssm_head_dim
+
+    proj = x @ params.w_in                                      # (B,S,•)
+    z, xbc, dt_raw = jnp.split(proj, [d_in, d_in + conv_ch], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params.dt_bias[None, None])            # (B,S,H)
+
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params.conv_w, params.conv_b, conv_state)
+    xh, bmat, cmat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xh = xh.reshape(b, s, heads, p)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+
+    if state is None or s > 1:
+        # Train/prefill path.  Prefill starts from fresh (zero) state; ragged
+        # lengths are padded with dt = 0 steps, which are exact identities
+        # for the state recurrence (decay exp(0)=1, contribution dt*x=0).
+        q = cfg.ssm_chunk
+        pad = (-s) % q
+        if pad:
+            zf = lambda arr: jnp.pad(arr, ((0, 0), (0, pad)) + ((0, 0),) *
+                                     (arr.ndim - 2))
+            xh_p, dt_p, b_p, c_p = zf(xh), zf(dt), zf(bmat), zf(cmat)
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, bmat, cmat
+        y, final = ssd_chunked(xh_p.astype(jnp.float32), dt_p, params.a_log,
+                               b_p.astype(jnp.float32),
+                               c_p.astype(jnp.float32), q)
+        y = y[:, :s]
+    else:
+        # O(1) recurrent decode step (s == 1).
+        a = jnp.exp(-jnp.exp(params.a_log)[None] * dt[:, 0])    # (B,H)
+        rep = heads // g
+        bh = jnp.repeat(bmat[:, 0], rep, axis=1)                # (B,H,N)
+        ch = jnp.repeat(cmat[:, 0], rep, axis=1)
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]  # (B,H,P)
+        h_new = (state["ssm"] * a[..., None, None] +
+                 jnp.einsum("bhn,bhp->bhnp", bh.astype(jnp.float32), xdt))
+        y = jnp.einsum("bhn,bhnp->bhp", ch.astype(jnp.float32), h_new)
+        y = y[:, None]                                          # (B,1,H,P)
+        final = h_new
+
+    y = y + params.d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    # Gated RMSNorm then output projection (mamba2 block epilogue).
+    y = rms_norm(y * jax.nn.silu(z), params.norm_w, cfg.norm_eps)
+    out = y @ params.w_out
+    new_state = dict(conv=new_conv, ssm=final)
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, dtype):
+    d_in, heads, g, n, conv_ch = _dims(cfg)
+    return dict(conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+                ssm=jnp.zeros((batch, heads, n, cfg.ssm_head_dim), jnp.float32))

@@ -1,0 +1,296 @@
+"""Generic decoder stack: layer-kind patterns, scan-over-blocks, remat.
+
+A model is a cycle of ``blocks``; each block applies the config's
+``layer_pattern`` once (e.g. RecurrentGemma: (rglru, rglru, local)).  Blocks
+are scanned (one trace regardless of depth — essential for compiling 88-layer
+models in the dry-run) with parameters stacked on a leading block axis;
+pattern remainders run unrolled as a tail.
+
+Layer kinds:
+  attn   — global causal attention + MLP (or MoE)
+  swa    — sliding-window attention + MLP/MoE (Mixtral)
+  local  — local attention (RecurrentGemma window) + MLP
+  ssd    — Mamba-2 mixer (no MLP; the mixer IS the block)
+  rglru  — RG-LRU recurrent block + MLP
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import settings
+from .attention import (AttentionParams, init_attention, init_attention_cache,
+                        multihead_attention)
+from .common import dense_init, dtype_of, embed_init, rms_norm, take_embedding
+from .mlp import init_mlp, mlp
+from .moe import init_moe, moe_block
+from .rglru import init_rglru, init_rglru_state, rglru_block
+from .ssm import init_ssm, init_ssm_state, ssm_block
+
+
+def block_spec(cfg):
+    """((kind, use_moe), ...) — one entry per layer of a pattern period."""
+    spec = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        use_moe = bool(cfg.moe) and kind in ("attn", "swa", "local") and \
+            (i % cfg.moe_every == cfg.moe_every - 1)
+        spec.append((kind, use_moe))
+    return tuple(spec)
+
+
+def layer_counts(cfg):
+    period = len(cfg.layer_pattern)
+    nblocks = cfg.num_layers // period
+    tail = cfg.num_layers - nblocks * period
+    return nblocks, tail
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg, kind: str, use_moe: bool, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    layer: dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind in ("attn", "swa", "local"):
+        layer["attn"] = init_attention(k1, cfg, dtype)
+        layer["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        if use_moe:
+            layer["moe"] = init_moe(k2, cfg, dtype)
+        else:
+            layer["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                                    dtype)
+    elif kind == "ssd":
+        layer["ssm"] = init_ssm(k1, cfg, dtype)
+    elif kind == "rglru":
+        layer["rglru"] = init_rglru(k1, cfg, dtype)
+        layer["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        layer["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    else:
+        raise ValueError(kind)
+    return layer
+
+
+def init_model(key, cfg):
+    """Returns the parameter pytree for an ArchConfig."""
+    dtype = dtype_of(cfg.dtype)
+    spec = block_spec(cfg)
+    nblocks, tail = layer_counts(cfg)
+    keys = jax.random.split(key, nblocks + tail + 3)
+
+    def init_block(bkey):
+        bkeys = jax.random.split(bkey, len(spec))
+        return [
+            _init_layer(bkeys[i], cfg, kind, use_moe, dtype)
+            for i, (kind, use_moe) in enumerate(spec)
+        ]
+
+    blocks = [init_block(keys[i]) for i in range(nblocks)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks) if nblocks \
+        else None
+    tail_layers = [
+        _init_layer(keys[nblocks + t], cfg, spec[t % len(spec)][0],
+                    spec[t % len(spec)][1], dtype)
+        for t in range(tail)
+    ]
+
+    params = {
+        "blocks": stacked,
+        "tail": tail_layers,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.frontend == "none":
+        params["embed"] = embed_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                                     dtype)
+    else:
+        # Backbone-only: the modality frontend is a stub; inputs arrive as
+        # embeddings.  A small output head still maps to the token space.
+        params["embed"] = embed_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                                     dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab_size),
+                                       dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer / block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(layer, x, cfg, kind: str, use_moe: bool, *, attn_impl: str,
+                 positions, cache, aux):
+    if settings.FSDP_GATHER_MESH is not None:
+        # ZeRO-3: gather the FSDP-sharded weights just-in-time (see
+        # models/shardspecs.py; fixes the data-axis batch/contraction
+        # conflict measured in EXPERIMENTS.md §Perf iteration 1).
+        from .shardspecs import gather_layer_params
+        layer = gather_layer_params(layer, cfg, kind, use_moe,
+                                    settings.FSDP_GATHER_MESH)
+    window = cfg.window if kind in ("swa", "local") else 0
+    new_cache = None
+    if kind in ("attn", "swa", "local"):
+        h, new_cache = multihead_attention(
+            layer["attn"], rms_norm(x, layer["norm1"], cfg.norm_eps), cfg,
+            layer_window=window, impl=attn_impl, positions=positions,
+            cache=cache)
+        x = x + h
+        h2 = rms_norm(x, layer["norm2"], cfg.norm_eps)
+        if use_moe:
+            h2, moe_aux = moe_block(layer["moe"], h2, cfg)
+            aux = aux + moe_aux
+        else:
+            h2 = mlp(layer["mlp"], h2, cfg.mlp_kind)
+        x = x + h2
+    elif kind == "ssd":
+        h, new_cache = ssm_block(layer["ssm"],
+                                 rms_norm(x, layer["norm1"], cfg.norm_eps),
+                                 cfg, state=cache)
+        x = x + h
+    elif kind == "rglru":
+        h, new_cache = rglru_block(layer["rglru"],
+                                   rms_norm(x, layer["norm1"], cfg.norm_eps),
+                                   cfg, state=cache)
+        x = x + h
+        x = x + mlp(layer["mlp"], rms_norm(x, layer["norm2"], cfg.norm_eps),
+                    cfg.mlp_kind)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _apply_block(block_params, x, cfg, *, attn_impl, positions, caches, aux):
+    spec = block_spec(cfg)
+    new_caches = []
+    for i, (kind, use_moe) in enumerate(spec):
+        cache_i = None if caches is None else caches[i]
+        x, nc, aux = _apply_layer(block_params[i], x, cfg, kind, use_moe,
+                                  attn_impl=attn_impl, positions=positions,
+                                  cache=cache_i, aux=aux)
+        new_caches.append(nc)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+class ForwardResult(NamedTuple):
+    logits: jax.Array
+    aux_loss: jax.Array
+    caches: Any
+
+
+def forward(params, cfg, tokens=None, embeds=None, positions=None, *,
+            attn_impl: str = "naive", remat: bool = False, caches=None):
+    """Train/prefill forward.  tokens (B, S) int32 or embeds (B, S, d).
+
+    With ``caches`` (prefill): per-layer caches are filled and returned.
+    """
+    if embeds is None:
+        x = take_embedding(params["embed"], tokens)
+    else:
+        x = embeds.astype(dtype_of(cfg.dtype))
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None]
+    aux0 = jnp.zeros((), jnp.float32)
+    nblocks, tail = layer_counts(cfg)
+
+    block_fn = functools.partial(_apply_block, cfg=cfg, attn_impl=attn_impl,
+                                 positions=positions)
+    if remat:
+        block_fn = jax.checkpoint(block_fn,
+                                  static_argnums=())  # full remat per block
+
+    if params["blocks"] is not None and caches is None:
+        def scan_body(carry, bp):
+            x, aux = carry
+            x, _, aux = block_fn(bp, x, caches=None, aux=aux)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux0), params["blocks"],
+                                   unroll=settings.scan_unroll())
+    elif params["blocks"] is not None:
+        def scan_body_cache(carry, inp):
+            x, aux = carry
+            bp, bc = inp
+            x, nc, aux = block_fn(bp, x, caches=bc, aux=aux)
+            return (x, aux), nc
+
+        (x, aux), new_block_caches = jax.lax.scan(
+            scan_body_cache, (x, aux0), (params["blocks"], caches["blocks"]),
+            unroll=settings.scan_unroll())
+        caches = dict(caches, blocks=new_block_caches)
+    else:
+        aux = aux0
+
+    spec = block_spec(cfg)
+    new_tail_caches = []
+    for t, layer in enumerate(params["tail"]):
+        kind, use_moe = spec[t % len(spec)]
+        tc = None if caches is None else caches["tail"][t]
+        x, nc, aux = _apply_layer(layer, x, cfg, kind, use_moe,
+                                  attn_impl=attn_impl, positions=positions,
+                                  cache=tc, aux=aux)
+        new_tail_caches.append(nc)
+    if caches is not None:
+        caches = dict(caches, tail=new_tail_caches)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings or "lm_head" not in params:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return ForwardResult(logits, aux, caches)
+
+
+def decode_step(params, cfg, caches, tokens=None, embeds=None, pos=None, *,
+                attn_impl: str = "naive"):
+    """One-token serve step.  tokens: (B,) int32; pos: scalar int32 (global
+    position of this token).  Returns (logits (B, V), new caches)."""
+    if embeds is None:
+        x = take_embedding(params["embed"], tokens)[:, None, :]
+    else:
+        x = embeds[:, None, :].astype(dtype_of(cfg.dtype))
+    positions = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    # Decode shares the forward machinery with caches attached.
+    out = forward(params, cfg, tokens=None, embeds=x, positions=positions,
+                  attn_impl=attn_impl, caches=caches)
+    return out.logits[:, 0], out.caches
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    dtype = dtype_of(cfg.dtype)
+    spec = block_spec(cfg)
+    nblocks, tail = layer_counts(cfg)
+
+    def layer_cache(kind):
+        if kind in ("attn", "swa", "local"):
+            window = cfg.window if kind in ("swa", "local") else 0
+            return init_attention_cache(cfg, batch, max_len, window, dtype)
+        if kind == "ssd":
+            return init_ssm_state(cfg, batch, dtype)
+        if kind == "rglru":
+            return init_rglru_state(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    def block_cache():
+        return [layer_cache(kind) for kind, _ in spec]
+
+    blocks = None
+    if nblocks:
+        per = [block_cache() for _ in range(nblocks)]
+        blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    tails = [layer_cache(spec[t % len(spec)][0]) for t in range(tail)]
+    return dict(blocks=blocks, tail=tails)

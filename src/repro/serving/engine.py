@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill + jit'd decode loop over ring caches.
+
+``serve_step`` (one new token against a seq_len cache) is exactly what the
+``decode_*`` / ``long_*`` dry-run shapes lower.  Windowed/recurrent layers
+keep O(window)/O(1) state, so a 500k-token stream costs the same per step as
+a 4k one on the sub-quadratic architectures (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import decode_step, forward, init_caches
+
+
+class ServeState(NamedTuple):
+    caches: Any
+    pos: jax.Array          # next position to write (global stream index)
+    last_tokens: jax.Array  # (B,) most recent token per sequence
+
+
+def make_serve_fns(cfg, max_len: int, attn_impl: str = "naive"):
+    """Returns (prefill_fn, decode_fn), both jit-compiled."""
+
+    @jax.jit
+    def prefill(params, tokens):
+        b, s = tokens.shape
+        caches = init_caches(cfg, b, max_len)
+        out = forward(params, cfg, tokens=tokens,
+                      positions=jnp.arange(s, dtype=jnp.int32)[None],
+                      attn_impl=attn_impl, caches=caches)
+        nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        return ServeState(out.caches, jnp.asarray(s, jnp.int32), nxt), \
+            out.logits[:, -1]
+
+    @jax.jit
+    def serve_step(params, state: ServeState):
+        logits, caches = decode_step(params, cfg, state.caches,
+                                     tokens=state.last_tokens, pos=state.pos,
+                                     attn_impl=attn_impl)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return ServeState(caches, state.pos + 1, nxt), logits
+
+    return prefill, serve_step
+
+
+def generate(params, cfg, prompt_tokens, steps: int, max_len: int = 0,
+             attn_impl: str = "naive"):
+    """Greedy generation: returns (B, steps) new tokens."""
+    b, s = prompt_tokens.shape
+    if max_len <= 0:
+        max_len = s + steps
+    prefill, serve_step = make_serve_fns(cfg, max_len, attn_impl)
+    state, _ = prefill(params, prompt_tokens)
+    outs = []
+    for _ in range(steps):
+        tok = state.last_tokens
+        outs.append(tok)
+        state, _ = serve_step(params, state)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,102 @@
+"""AdamW in pure JAX with mixed precision and ZeRO-sharded state.
+
+State layout: f32 master weights + f32 first/second moments, all sharded with
+the *same* PartitionSpecs as the parameters (distribution/sharding.py) — with
+FSDP parameter sharding on the "data" axis this is exactly ZeRO-3: no device
+ever holds an unsharded optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any      # f32 copy of params
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    # copy=True: when params are already f32 (CPU test configs) astype would
+    # alias the same buffer, and donating params+master then aborts with
+    # "attempt to donate the same buffer twice".
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      master=jax.tree.map(f32, params),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master_new = master - lr * delta
+        return m_new, v_new, master_new
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m_new = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: type(x) is tuple)
+    v_new = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: type(x) is tuple)
+    master_new = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda x: type(x) is tuple)
+    new_params = jax.tree.map(lambda mast, p: mast.astype(p.dtype),
+                              master_new, params)
+    new_state = AdamWState(step=step, master=master_new, m=m_new, v=v_new)
+    metrics = dict(grad_norm=gnorm, lr=lr)
+    return new_params, new_state, metrics
+
+
+def opt_state_specs(p_specs):
+    """PartitionSpecs for AdamWState given the param specs (ZeRO sharding)."""
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(), master=p_specs,
+                      m=p_specs, v=p_specs)

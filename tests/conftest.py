@@ -1,0 +1,10 @@
+"""Test configuration.
+
+The geostatistics core runs in f64 (the paper's precision); model code pins
+its own dtypes explicitly, so enabling x64 globally is safe.  The dry-run
+device-count env var is deliberately NOT set here — smoke tests must see the
+single real CPU device.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

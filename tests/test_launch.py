@@ -1,0 +1,110 @@
+"""Launch layer: input_specs, roofline parsing, model-flops accounting, and a
+small end-to-end dry-run cell on the production mesh (subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, LM_SHAPES, get_arch, iter_cells
+from repro.launch import roofline as rl
+
+
+def test_collective_bytes_parser():
+    hlo = textwrap.dedent("""\
+      %param.1 = f32[256,1024]{1,0} parameter(0)
+      %dot.1 = f32[256,1024]{1,0} dot(%param.1, %param.1), lhs_contracting_dims={1}
+      ROOT %all-reduce = f32[256,1024]{1,0} all-reduce(%dot.1), channel_id=1
+      %ag = bf16[64,32]{1,0} all-gather(%param.2), dimensions={0}
+      %cp.1 = f32[8,8]{1,0} collective-permute(%dot.1), source_target_pairs={{0,1}}
+    """)
+    out = rl.collective_bytes(hlo)
+    assert out["all-reduce"] == 256 * 1024 * 4
+    assert out["all-gather"] > 0          # falls back to result size
+    assert out["collective-permute"] == 256 * 1024 * 4
+    assert out["total"] == (out["all-reduce"] + out["all-gather"] +
+                            out["collective-permute"])
+
+
+def test_bytes_of_type_tuples():
+    assert rl.bytes_of_type("f32[128,4]{1,0}") == 128 * 4 * 4
+    assert rl.bytes_of_type("(bf16[2,2], s32[3])") == 2 * 2 * 2 + 3 * 4
+    assert rl.bytes_of_type("pred[8]") == 1
+
+
+def test_lm_param_counts_sane():
+    # qwen3-4b: ~4B total params (source: model card ballpark).
+    c = rl.lm_param_counts(get_arch("qwen3-4b"))
+    assert 3e9 < c["total"] < 5.5e9
+    # mixtral: 47B total / ~13B active.
+    c = rl.lm_param_counts(get_arch("mixtral-8x7b"))
+    assert 40e9 < c["total"] < 55e9
+    assert 10e9 < c["active"] < 16e9
+    # llama4 maverick: ~400B total / ~17B active.
+    c = rl.lm_param_counts(get_arch("llama4-maverick-400b-a17b"))
+    assert 300e9 < c["total"] < 500e9
+    assert 12e9 < c["active"] < 25e9
+    # mamba2: ~780M.
+    c = rl.lm_param_counts(get_arch("mamba2-780m"))
+    assert 0.5e9 < c["total"] < 1.1e9
+
+
+def test_lm_model_flops_kinds():
+    cfg = get_arch("yi-6b")
+    t = rl.lm_model_flops(cfg, LM_SHAPES["train_4k"])
+    p = rl.lm_model_flops(cfg, LM_SHAPES["prefill_32k"])
+    d = rl.lm_model_flops(cfg, LM_SHAPES["decode_32k"])
+    assert t > p > d > 0
+
+
+def test_cell_enumeration_covers_40():
+    lm_cells = [(a.name, s.name, ok) for a, s, ok in iter_cells()
+                if a.family != "geostat"]
+    assert len(lm_cells) == 40
+    skips = [c for c in lm_cells if not c[2]]
+    # long_500k skipped exactly for the 7 pure-full-attention archs.
+    assert len(skips) == 7
+    assert all(s[1] == "long_500k" for s in skips)
+    geo = [(a.name, s.name) for a, s, ok in iter_cells()
+           if a.family == "geostat" and ok]
+    assert len(geo) == 8
+
+
+def test_input_specs_shapes():
+    from repro.launch.dryrun import input_specs  # sets XLA_FLAGS; ok in test
+    s = input_specs("qwen3-4b", "train_4k")
+    assert s["tokens"].shape == (256, 4096)
+    assert s["targets"].shape == (256, 4096)
+    s = input_specs("musicgen-medium", "prefill_32k")
+    assert s["embeds"].shape == (32, 32768, 1536)
+    s = input_specs("pixtral-12b", "decode_32k")
+    assert s["embeds"].shape == (128, 5120)
+    s = input_specs("geostat-tlr", "mle_65k")
+    assert s["u"].shape[0] == s["u"].shape[1]  # (T, T, nb, kmax)
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    """A full dry-run cell (reduced-size geostat) on the 512-device mesh."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = f"""
+import sys
+sys.path.insert(0, {src!r})
+from repro.launch.dryrun import run_cell
+rec = run_cell("mamba2-780m", "decode_32k", "pod", out_dir={str(tmp_path)!r})
+assert rec["status"] == "ok"
+assert rec["chips"] == 256
+print("CELL_OK", rec["dominant"])
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "CELL_OK" in out.stdout
+    files = list(tmp_path.glob("*.json"))
+    assert len(files) == 1
+    rec = json.loads(files[0].read_text())
+    assert rec["compute_s"] > 0 and rec["memory_s"] > 0

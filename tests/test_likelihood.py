@@ -1,0 +1,72 @@
+"""Exact log-likelihood, profile likelihood, simulation round-trips."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MaternParams, exact_loglik, pairwise_distances,
+                        profile_loglik, simulate_mgrf, uniform_locations)
+from repro.core.likelihood import profile_variances
+
+
+def _setup(n=40, seed=0):
+    locs = uniform_locations(n, seed=seed)
+    params = MaternParams.bivariate(a=0.15, nu11=0.5, nu22=1.0, beta=0.5)
+    key = jax.random.PRNGKey(seed)
+    z = simulate_mgrf(key, locs, params, nugget=1e-10)[0]
+    return locs, params, z
+
+
+def test_loglik_matches_numpy_oracle():
+    locs, params, z = _setup()
+    from repro.core.covariance import build_sigma
+    sigma = np.asarray(build_sigma(locs, params))
+    zn = np.asarray(z)
+    sign, logdet = np.linalg.slogdet(sigma)
+    quad = zn @ np.linalg.solve(sigma, zn)
+    m = zn.shape[0]
+    want = -0.5 * (m * np.log(2 * np.pi) + logdet + quad)
+    got = float(exact_loglik(locs, z, params).loglik)
+    assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_loglik_peaks_near_truth():
+    """l(theta_true) > l(perturbed theta) on average — basic sanity."""
+    locs, params, z = _setup(n=64, seed=1)
+    ll_true = float(exact_loglik(locs, z, params).loglik)
+    worse = params._replace(a=params.a * 4.0)
+    ll_off = float(exact_loglik(locs, z, worse).loglik)
+    assert ll_true > ll_off
+
+
+def test_profile_variance_estimator_consistent():
+    """sigma_hat^2 from the profile formula ~ truth for large-ish n."""
+    locs = uniform_locations(300, seed=3)
+    params = MaternParams.bivariate(sigma11=2.0, sigma22=0.5, a=0.1,
+                                    nu11=0.5, nu22=1.0, beta=0.3)
+    z = simulate_mgrf(jax.random.PRNGKey(0), locs, params, nugget=1e-10)[0]
+    dists = pairwise_distances(locs)
+    s2 = np.asarray(profile_variances(dists, z, params.a, params.nu, 2))
+    np.testing.assert_allclose(s2, [2.0, 0.5], rtol=0.35)
+
+
+def test_profile_loglik_close_to_full_at_truth():
+    locs, params, z = _setup(n=50, seed=2)
+    full = float(exact_loglik(locs, z, params).loglik)
+    prof = float(profile_loglik(locs, z, params.a, params.nu, params.beta,
+                                p=2).loglik)
+    # Profile plugs in estimated variances: should be >= full at the true
+    # variances up to estimation noise in sigma2_hat.
+    assert prof == pytest.approx(full, abs=abs(full) * 0.5 + 10.0)
+
+
+def test_simulation_covariance_matches_sigma():
+    """Empirical covariance of many draws -> Sigma(theta)."""
+    locs = uniform_locations(12, seed=5)
+    params = MaternParams.bivariate(a=0.2, nu11=0.5, nu22=1.5, beta=0.6)
+    zs = simulate_mgrf(jax.random.PRNGKey(1), locs, params, nsamples=4000)
+    emp = np.cov(np.asarray(zs).T)
+    from repro.core.covariance import build_sigma
+    want = np.asarray(build_sigma(locs, params))
+    np.testing.assert_allclose(emp, want, atol=0.12)

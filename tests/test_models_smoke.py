@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step on
+CPU, asserting output shapes and no NaNs (deliverable f)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, LM_ARCH_NAMES, get_arch
+from repro.models import decode_step, forward, init_caches, init_model
+from repro.models.frontends import frontend_embeddings
+
+B, S = 2, 64
+
+
+def _inputs(cfg, key):
+    kt, ke = jax.random.split(key)
+    tokens = jax.random.randint(kt, (B, S), 0, cfg.vocab_size, jnp.int32)
+    embeds = None
+    if cfg.frontend != "none":
+        embeds = frontend_embeddings(cfg.frontend, ke, B, S, cfg.d_model,
+                                     jnp.float32)
+    return tokens, embeds
+
+
+@pytest.mark.parametrize("arch_name", LM_ARCH_NAMES)
+def test_forward_smoke(arch_name):
+    cfg = get_arch(arch_name).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    tokens, embeds = _inputs(cfg, key)
+    out = forward(params, cfg, tokens=None if embeds is not None else tokens,
+                  embeds=embeds)
+    assert out.logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(out.logits, np.float32)).all(), arch_name
+    assert np.isfinite(float(out.aux_loss))
+
+
+@pytest.mark.parametrize("arch_name", LM_ARCH_NAMES)
+def test_train_step_smoke(arch_name):
+    """One SGD step decreases nothing catastrophic: grads finite, loss finite."""
+    cfg = get_arch(arch_name).reduced()
+    key = jax.random.PRNGKey(1)
+    params = init_model(key, cfg)
+    tokens, embeds = _inputs(cfg, key)
+    targets = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        out = forward(p, cfg, tokens=None if embeds is not None else tokens,
+                      embeds=embeds, remat=True)
+        logits = out.logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+        return nll + 0.01 * out.aux_loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+    # apply one step and confirm the loss moves (params are trainable)
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params,
+                           grads)
+    loss2 = loss_fn(params2)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) != pytest.approx(float(loss), rel=1e-9)
+
+
+@pytest.mark.parametrize("arch_name", ["qwen3-4b", "mixtral-8x7b",
+                                       "mamba2-780m", "recurrentgemma-9b",
+                                       "granite-34b"])
+def test_decode_matches_forward(arch_name):
+    """Prefill-then-decode logits == full-forward logits (cache correctness)."""
+    cfg = get_arch(arch_name).reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_model(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+
+    full = forward(params, cfg, tokens=tokens)
+    # prefill first S-1 tokens into caches, then decode token S-1.
+    caches = init_caches(cfg, B, max_len=S)
+    pre = forward(params, cfg, tokens=tokens[:, :S - 1],
+                  positions=jnp.arange(S - 1, dtype=jnp.int32)[None],
+                  caches=caches)
+    logits_step, _ = decode_step(params, cfg, pre.caches,
+                                 tokens=tokens[:, S - 1], pos=S - 1)
+    want = np.asarray(full.logits[:, -1], np.float32)
+    got = np.asarray(logits_step, np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_windowed_cache_is_bounded():
+    """Mixtral SWA cache memory is O(window), not O(stream length)."""
+    cfg = get_arch("mixtral-8x7b").reduced()
+    caches = init_caches(cfg, batch=1, max_len=100_000)
+    k = caches["blocks"][0]["k"] if caches["blocks"] is not None else None
+    assert k.shape[2] == cfg.window  # (nblocks, B, slots, kv, hd)
+
+
+def test_registry_complete():
+    assert len(LM_ARCH_NAMES) == 10
+    assert "geostat-exact" in ARCHS and "geostat-tlr" in ARCHS
+    for name in LM_ARCH_NAMES:
+        cfg = get_arch(name)
+        assert cfg.supports_shape.__call__ is not None
+        red = cfg.reduced()
+        assert red.d_model <= 128 and red.vocab_size <= 256

@@ -1,0 +1,106 @@
+"""Cokriging (Eq. 3) + multivariate MLOE/MMOM (Algorithm 1)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MaternParams, cokrige, cokrige_and_score, mloe_mmom,
+                        mloe_mmom_univariate, simulate_mgrf, split_train_pred,
+                        uniform_locations)
+from repro.core.assessment import naive_multivariate_mloe_mmom
+from repro.core.prediction import mspe
+
+
+def _data(n=200, n_pred=20, beta=0.5, a=0.1, seed=0):
+    params = MaternParams.bivariate(a=a, nu11=0.5, nu22=1.0, beta=beta)
+    locs = uniform_locations(n, seed=seed)
+    z = simulate_mgrf(jax.random.PRNGKey(seed), locs, params, nugget=1e-10)[0]
+    obs_locs, z_obs, pred_locs, z_pred, *_ = split_train_pred(
+        locs, np.asarray(z), n_pred, seed=seed, p=2)
+    return params, obs_locs, jnp.asarray(z_obs), pred_locs, jnp.asarray(z_pred)
+
+
+def test_cokriging_oracle():
+    """Predictor equals the straight numpy c0^T Sigma^{-1} Z."""
+    params, obs, z_obs, pred, _ = _data(n=60, n_pred=5)
+    from repro.core.covariance import build_c0, build_sigma
+    sigma = np.asarray(build_sigma(obs, params, nugget=1e-10))
+    got = np.asarray(cokrige(obs, z_obs, pred, params, nugget=1e-10))
+    for l in range(5):
+        c0 = np.asarray(build_c0(pred[l:l + 1], obs, params))[0]
+        want = c0.T @ np.linalg.solve(sigma, np.asarray(z_obs))
+        np.testing.assert_allclose(got[l], want, rtol=1e-7, atol=1e-10)
+
+
+def test_cokriging_beats_kriging_when_correlated():
+    """Fig. 14 mechanism: higher |beta| -> lower MSPE."""
+    mspes = []
+    for beta in (0.0, 0.45, 0.9):
+        errs = []
+        for seed in range(4):
+            params, obs, z_obs, pred, z_true = _data(n=220, n_pred=25,
+                                                     beta=beta, a=0.09,
+                                                     seed=seed)
+            res = cokrige_and_score(obs, z_obs, pred, z_true, params,
+                                    nugget=1e-10)
+            errs.append(float(res.mspe))
+        mspes.append(np.mean(errs))
+    assert mspes[2] < mspes[0], mspes
+
+
+def test_interpolation_exactness_limit():
+    """Prediction at an observed location reproduces the observation
+    (zero-nugget GP interpolation property)."""
+    params, obs, z_obs, _, _ = _data(n=80, n_pred=5)
+    pred = cokrige(obs, z_obs, obs[:3], params, nugget=1e-10)
+    want = np.asarray(z_obs).reshape(-1, 2)[:3]
+    np.testing.assert_allclose(np.asarray(pred), want, atol=1e-4)
+
+
+def test_mloe_mmom_zero_at_truth():
+    """theta_a == theta -> E_ta == E_t == E_a -> MLOE = MMOM = 0."""
+    params, obs, z_obs, pred, _ = _data(n=100, n_pred=10)
+    res = mloe_mmom(obs, pred, params, params, nugget=1e-10)
+    assert float(res.mloe) == pytest.approx(0.0, abs=1e-8)
+    assert float(res.mmom) == pytest.approx(0.0, abs=1e-8)
+
+
+def test_mloe_nonnegative_and_grows_with_misspecification():
+    """LOE >= 0 by optimality of the true-parameter predictor."""
+    params, obs, z_obs, pred, _ = _data(n=120, n_pred=15)
+    slight = params._replace(a=params.a * 1.2)
+    severe = params._replace(a=params.a * 3.0,
+                             nu=params.nu * 0.6)
+    r1 = mloe_mmom(obs, pred, params, slight, nugget=1e-10)
+    r2 = mloe_mmom(obs, pred, params, severe, nugget=1e-10)
+    assert float(r1.mloe) >= -1e-9
+    assert float(r2.mloe) > float(r1.mloe)
+    assert np.all(np.asarray(r1.e_t) > 0)
+    assert np.all(np.asarray(r1.e_ta) >= np.asarray(r1.e_t) - 1e-9)
+
+
+def test_univariate_criteria_match_p1_multivariate():
+    locs = uniform_locations(90, seed=3)
+    pred = uniform_locations(8, seed=4)
+    r = mloe_mmom_univariate(locs, pred, 1.0, 0.1, 0.5, 1.1, 0.13, 0.6,
+                             nugget=1e-10)
+    assert np.isfinite(float(r.mloe)) and np.isfinite(float(r.mmom))
+    assert float(r.mloe) >= -1e-9
+
+
+def test_naive_vs_cokriging_criteria_differ():
+    """The paper's point: the naive per-variable extension ignores
+    cross-correlation, so it disagrees with the CK version when beta != 0."""
+    params, obs, z_obs, pred, _ = _data(n=90, n_pred=8, beta=0.8)
+    approx = params._replace(a=params.a * 1.5)
+    ck = mloe_mmom(obs, pred, params, approx, nugget=1e-10)
+    naive_loe, naive_mom = naive_multivariate_mloe_mmom(obs, pred, params,
+                                                        approx, nugget=1e-10)
+    assert abs(float(ck.mloe) - float(naive_loe)) > 1e-6
+
+
+def test_mspe_shapes():
+    total, per_var = mspe(jnp.ones((7, 2)), jnp.zeros((7, 2)))
+    assert float(total) == pytest.approx(2.0)
+    np.testing.assert_allclose(np.asarray(per_var), [1.0, 1.0])

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matern
+from repro.core.covariance import MaternParams, build_sigma, morton_order
+from repro.core.optimize import nelder_mead
+from repro.core.tlr import recompress, tlr_compress, tlr_to_dense
+from repro.distribution.compression import _dequantize, _quantize
+
+_SET = dict(max_examples=15, deadline=None)
+
+
+@settings(**_SET)
+@given(nu=st.floats(0.1, 4.0), scale=st.floats(0.01, 10.0))
+def test_matern_correlation_is_valid_correlation(nu, scale):
+    """0 <= M_nu(u) <= 1, M(0) = 1, non-increasing."""
+    us = jnp.asarray(np.linspace(0.0, 10.0, 64) * scale, jnp.float64)
+    vals = np.asarray(matern.matern_correlation(us, nu))
+    assert vals[0] == 1.0 or abs(vals[0] - 1.0) < 1e-9
+    assert np.all(vals <= 1.0 + 1e-9) and np.all(vals >= -1e-12)
+    assert np.all(np.diff(vals) <= 1e-10)
+
+
+@settings(**_SET)
+@given(nu=st.floats(0.2, 3.5), x=st.floats(0.05, 30.0))
+def test_kv_recurrence_identity(nu, x):
+    """K_{nu+1}(x) = (2 nu / x) K_nu(x) + K_{nu-1}(x)."""
+    k_m = float(matern.kv(nu - 0.0 + 1.0, jnp.asarray([x], jnp.float64))[0])
+    k_0 = float(matern.kv(nu, jnp.asarray([x], jnp.float64))[0])
+    k_p = float(matern.kv(abs(nu - 1.0), jnp.asarray([x], jnp.float64))[0]) \
+        if nu >= 1.0 else float(matern.kv(1.0 - nu, jnp.asarray([x], jnp.float64))[0])
+    # K_{-a} = K_a, so |nu-1| handles nu < 1.
+    lhs = k_m
+    rhs = (2.0 * nu / x) * k_0 + k_p
+    assert abs(lhs - rhs) <= 1e-8 * max(abs(lhs), abs(rhs), 1e-300)
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 10_000), a=st.floats(0.02, 0.5),
+       beta=st.floats(-0.9, 0.9), nu1=st.sampled_from([0.5, 1.0, 1.5]),
+       nu2=st.sampled_from([0.5, 1.0, 2.5]))
+def test_sigma_positive_definite(seed, a, beta, nu1, nu2):
+    """Sigma(theta) from the parsimonious Matérn is SPD for any valid theta."""
+    rng = np.random.default_rng(seed)
+    locs = rng.uniform(size=(24, 2))
+    params = MaternParams.bivariate(a=a, nu11=nu1, nu22=nu2, beta=beta)
+    s = np.asarray(build_sigma(locs, params, nugget=1e-9))
+    w = np.linalg.eigvalsh(s)
+    assert w.min() > -1e-8, (w.min(), a, beta)
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 10_000), tol=st.sampled_from([1e-5, 1e-7, 1e-9]))
+def test_tlr_roundtrip_error_bounded(seed, tol):
+    rng = np.random.default_rng(seed)
+    locs = rng.uniform(size=(64, 2))
+    locs = locs[morton_order(locs)]
+    params = MaternParams.univariate(1.0, 0.2, 0.5)
+    s = build_sigma(locs, params, nugget=1e-9)
+    t = tlr_compress(s, tile_size=16, tol=tol, max_rank=16)
+    err = np.abs(np.asarray(tlr_to_dense(t)) - np.asarray(s)).max()
+    # absolute accuracy w.r.t. the unit diagonal scale, up to rank capping
+    assert err < max(tol * 100, 1e-3), (tol, err)
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 8))
+def test_recompress_exact_when_rank_fits(seed, k):
+    """recompress(U1 V1^T + U2 V2^T) reproduces the sum when 2k <= kmax."""
+    rng = np.random.default_rng(seed)
+    nb, kmax = 24, 2 * k
+    u1, v1 = rng.normal(size=(2, nb, k))
+    u2, v2 = rng.normal(size=(2, nb, k))
+    pad = lambda m: jnp.asarray(np.pad(m, ((0, 0), (0, kmax - k))))
+    un, vn, rank = recompress(pad(u1), pad(v1), pad(u2), pad(v2), 1e-12, 1.0)
+    got = np.asarray(un @ vn.T)
+    want = u1 @ v1.T + u2 @ v2.T
+    np.testing.assert_allclose(got, want, atol=1e-8)
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 10_000))
+def test_morton_is_permutation(seed):
+    rng = np.random.default_rng(seed)
+    locs = rng.uniform(-5, 5, size=(100, 2))
+    perm = morton_order(locs)
+    assert sorted(perm.tolist()) == list(range(100))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), dim=st.integers(2, 5))
+def test_nelder_mead_solves_convex_quadratics(seed, dim):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(dim, dim))
+    spd = a @ a.T + dim * np.eye(dim)
+    target = rng.normal(size=(dim,))
+    spd_j = jnp.asarray(spd)
+    target_j = jnp.asarray(target)
+
+    def f(x):
+        d = x - target_j
+        return d @ spd_j @ d
+
+    res = nelder_mead(f, jnp.zeros(dim), max_iters=600)
+    np.testing.assert_allclose(np.asarray(res.x), target, atol=5e-3)
+
+
+@settings(**_SET)
+@given(seed=st.integers(0, 10_000), shape=st.sampled_from([(64,), (33,),
+                                                           (16, 17)]))
+def test_quantization_error_bounded(seed, shape):
+    """int8 block quantization error <= scale = blockmax/127 elementwise."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=shape) * rng.uniform(0.01, 100),
+                    jnp.float32)
+    q, s = _quantize(g)
+    deq = _dequantize(q, s, g.shape)
+    err = np.abs(np.asarray(deq) - np.asarray(g))
+    bound = np.abs(np.asarray(g)).max() / 127.0 + 1e-6
+    assert err.max() <= bound * 1.01
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_error_feedback_unbiased_over_steps(seed):
+    """With error feedback, the accumulated applied gradient converges to the
+    accumulated true gradient (the residual stays bounded)."""
+    from repro.distribution.compression import quantize_dequantize_psum_sim
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+    errors = None
+    applied = np.zeros(32)
+    for _ in range(20):
+        out, errors = quantize_dequantize_psum_sim(g, errors)
+        applied += np.asarray(out["w"])
+    true_sum = np.asarray(g["w"]) * 20
+    resid = np.abs(applied - true_sum).max()
+    scale = np.abs(np.asarray(g["w"])).max() / 127.0
+    assert resid <= scale * 2.5  # bounded residual, does not grow with steps

@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline of Salvaña et al. (2020) on a reduced problem:
+simulate -> Morton order -> estimate (exact AND TLR) -> cokrige -> assess
+with the multivariate MLOE/MMOM — asserting the paper's qualitative claims.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MaternParams, cokrige_and_score, exact_loglik,
+                        mloe_mmom, simulate_mgrf, split_train_pred,
+                        uniform_locations)
+from repro.core.mle import MLEConfig, fit
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    truth = MaternParams.bivariate(sigma11=1.0, sigma22=1.0, a=0.15,
+                                   nu11=0.5, nu22=1.0, beta=0.6)
+    locs = uniform_locations(260, seed=42)
+    z = simulate_mgrf(jax.random.PRNGKey(42), locs, truth, nugget=1e-10)[0]
+    obs, z_obs, pred, z_pred, *_ = split_train_pred(locs, np.asarray(z), 26,
+                                                    seed=1, p=2)
+    return truth, obs, jnp.asarray(z_obs), pred, jnp.asarray(z_pred)
+
+
+def test_end_to_end_exact(pipeline):
+    truth, obs, z_obs, pred, z_pred = pipeline
+    cfg = MLEConfig(p=2, profile=True, max_iters=80, nugget=1e-8)
+    res = fit(obs, z_obs, cfg)
+    assert bool(jnp.isfinite(res.loglik))
+    est = res.params
+    # parameters land in the right region (sampling noise at n=234)
+    assert 0.03 < float(est.a) < 0.6
+    assert 0.0 < float(est.beta[0, 1]) <= 0.95
+    # prediction with the estimate is close to prediction with the truth
+    s_est = cokrige_and_score(obs, z_obs, pred, z_pred, est, nugget=1e-8)
+    s_tru = cokrige_and_score(obs, z_obs, pred, z_pred, truth, nugget=1e-8)
+    assert float(s_est.mspe) < float(s_tru.mspe) * 2.0 + 0.05
+    # the new multivariate criteria agree: small efficiency loss
+    crit = mloe_mmom(obs, pred, truth, est, nugget=1e-8)
+    assert float(crit.mloe) < 1.0       # <100% excess error vs optimal
+
+
+def test_end_to_end_tlr_matches_exact(pipeline):
+    """TLR9-estimated parameters give near-exact prediction efficiency
+    (the paper's central claim)."""
+    truth, obs, z_obs, pred, z_pred = pipeline
+    exact_cfg = MLEConfig(p=2, max_iters=60, nugget=1e-8)
+    tlr_cfg = MLEConfig(p=2, backend="tlr", tlr_tol=1e-9, tlr_max_rank=48,
+                        tile_size=78, max_iters=60, nugget=1e-8)
+    res_e = fit(obs, z_obs, exact_cfg)
+    res_t = fit(obs, z_obs, tlr_cfg)
+    # TLR9 likelihood optimum is close to the exact one
+    assert float(res_t.loglik) == pytest.approx(float(res_e.loglik),
+                                                abs=abs(float(res_e.loglik)) *
+                                                0.05 + 5.0)
+    crit = mloe_mmom(obs, pred, truth, res_t.params, nugget=1e-8)
+    assert float(crit.mloe) < 1.0
+
+
+def test_representation_equivalence_in_estimation():
+    """Paper §5.2: Representations I and II yield identical likelihoods."""
+    truth = MaternParams.bivariate(a=0.12, nu11=0.5, nu22=1.5, beta=0.4)
+    locs = uniform_locations(80, seed=3)
+    key = jax.random.PRNGKey(3)
+    z1 = simulate_mgrf(key, locs, truth, representation="I", nugget=1e-10)[0]
+    # reorder z1 (rep I) into rep II layout: [var0 all locs, var1 all locs]
+    z2 = jnp.concatenate([z1[0::2], z1[1::2]])
+    l1 = float(exact_loglik(locs, z1, truth, representation="I",
+                            nugget=1e-10).loglik)
+    l2 = float(exact_loglik(locs, z2, truth, representation="II",
+                            nugget=1e-10).loglik)
+    assert l1 == pytest.approx(l2, rel=1e-10)

@@ -1,0 +1,165 @@
+"""TLR compression / Cholesky / likelihood vs the dense oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MaternParams, exact_loglik, pairwise_distances
+from repro.core import tlr as T
+from repro.core.covariance import build_sigma, morton_order
+from repro.core.dst import dst_apply, dst_loglik
+from repro.core.simulate import grid_locations, simulate_mgrf
+
+
+def _sigma_setup(n_side=16, a=0.09, seed=0):
+    locs = grid_locations(n_side, jitter=0.2, seed=seed)
+    locs = np.asarray(locs)[morton_order(locs)]
+    params = MaternParams.bivariate(a=a, nu11=0.5, nu22=1.0, beta=0.5)
+    dists = pairwise_distances(locs)
+    sigma = build_sigma(None, params, dists=dists, nugget=1e-8)
+    return locs, params, dists, sigma
+
+
+def test_choose_tile_size_divides():
+    for m in (512, 1000, 7200, 2 * 63001 // 2 * 2):
+        nb = T.choose_tile_size(m)
+        assert m % nb == 0 and nb >= 1
+
+
+def test_compress_reconstruction_accuracy():
+    _, _, _, sigma = _sigma_setup()
+    for tol in (1e-5, 1e-7, 1e-9):
+        t = T.tlr_compress(sigma, tile_size=64, tol=tol, max_rank=64)
+        dense = np.asarray(T.tlr_to_dense(t))
+        err = np.abs(dense - np.asarray(sigma)).max()
+        # absolute accuracy w.r.t. unit-scale diag; rank padding can only help
+        assert err < tol * 50, (tol, err)
+
+
+def test_ranks_grow_toward_diagonal():
+    """Fig. 5: off-diagonal ranks grow as tiles approach the diagonal."""
+    _, _, _, sigma = _sigma_setup()
+    t = T.tlr_compress(sigma, tile_size=64, tol=1e-7, max_rank=64)
+    ranks = np.asarray(t.ranks)
+    Tn = t.n_tiles
+    near = np.mean([ranks[i, i - 1] for i in range(1, Tn)])
+    far = np.mean([ranks[i, j] for i in range(Tn) for j in range(i)
+                   if i - j >= Tn // 2])
+    assert near > far
+
+
+def test_rank_increases_with_accuracy():
+    _, _, _, sigma = _sigma_setup()
+    r5 = np.asarray(T.tlr_compress(sigma, 64, 1e-5, 64).ranks).sum()
+    r7 = np.asarray(T.tlr_compress(sigma, 64, 1e-7, 64).ranks).sum()
+    r9 = np.asarray(T.tlr_compress(sigma, 64, 1e-9, 64).ranks).sum()
+    assert r5 < r7 < r9
+
+
+def test_memory_footprint_model():
+    """Fig. 6: TLR memory well below dense, shrinking with looser tol."""
+    _, _, _, sigma = _sigma_setup()
+    t5 = T.tlr_compress(sigma, 64, 1e-5, 64)
+    t9 = T.tlr_compress(sigma, 64, 1e-9, 64)
+    m5 = T.memory_footprint(t5)
+    m9 = T.memory_footprint(t9)
+    assert m5["tlr_bytes"] < m9["tlr_bytes"] < m5["dense_bytes"]
+    assert m5["ratio"] > 1.5
+
+
+def test_tlr_cholesky_matches_dense():
+    _, _, _, sigma = _sigma_setup()
+    t = T.tlr_compress(sigma, tile_size=64, tol=1e-10, max_rank=64)
+    chol = T.tlr_cholesky(t, tol=1e-12, scale=1.0)
+    dense_l = np.asarray(jnp.linalg.cholesky(sigma))
+    # Compare the reconstructed full factor L L^T (factors themselves are
+    # unique for SPD, so compare directly).
+    got = np.asarray(T.tlr_to_dense(
+        T.TLRMatrix(chol.diag, chol.u, chol.v, chol.ranks), symmetric=False))
+    np.testing.assert_allclose(np.tril(got), dense_l, atol=5e-7)
+
+
+def test_tlr_logdet_and_solve():
+    _, _, _, sigma = _sigma_setup()
+    t = T.tlr_compress(sigma, tile_size=64, tol=1e-10, max_rank=64)
+    chol = T.tlr_cholesky(t, tol=1e-12, scale=1.0)
+    want_logdet = float(np.linalg.slogdet(np.asarray(sigma))[1])
+    assert float(T.tlr_logdet(chol)) == pytest.approx(want_logdet, rel=1e-8)
+    rng = np.random.default_rng(0)
+    zv = rng.normal(size=sigma.shape[0])
+    alpha = np.asarray(T.tlr_solve_lower(chol, jnp.asarray(zv)))
+    dense_alpha = np.asarray(
+        jax.scipy.linalg.solve_triangular(jnp.linalg.cholesky(sigma),
+                                          jnp.asarray(zv), lower=True))
+    np.testing.assert_allclose(alpha, dense_alpha, atol=1e-6)
+
+
+def test_tlr_matvec():
+    _, _, _, sigma = _sigma_setup()
+    t = T.tlr_compress(sigma, tile_size=64, tol=1e-10, max_rank=64)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=sigma.shape[0])
+    got = np.asarray(T.tlr_matvec(t, jnp.asarray(x)))
+    want = np.asarray(sigma) @ x
+    np.testing.assert_allclose(got, want, atol=1e-7)
+
+
+@pytest.mark.parametrize("tol,ll_tol", [(1e-5, 2.0), (1e-7, 1e-2), (1e-9, 1e-4)])
+def test_tlr_loglik_accuracy_ladder(tol, ll_tol):
+    """TLR5/7/9 likelihoods approach the exact one (Experiment-2 mechanism)."""
+    locs, params, dists, sigma = _sigma_setup()
+    key = jax.random.PRNGKey(3)
+    z = simulate_mgrf(key, locs, params, nugget=1e-8)[0]
+    exact = float(exact_loglik(None, z, params, dists=dists, nugget=1e-8).loglik)
+    got = float(T.tlr_loglik(dists, z, params, tol=tol, max_rank=64,
+                             tile_size=64, nugget=1e-8).loglik)
+    assert got == pytest.approx(exact, abs=max(abs(exact) * ll_tol * 1e-2, ll_tol))
+
+
+def test_tlr_loglik_jits():
+    locs, params, dists, _ = _sigma_setup(n_side=8)
+    z = simulate_mgrf(jax.random.PRNGKey(0), locs, params, nugget=1e-8)[0]
+
+    @jax.jit
+    def f(a):
+        return T.tlr_loglik(dists, z, params._replace(a=a), tol=1e-7,
+                            max_rank=32, tile_size=32, nugget=1e-8).loglik
+
+    v1 = float(f(jnp.asarray(0.09)))
+    v2 = float(f(jnp.asarray(0.12)))
+    assert np.isfinite(v1) and np.isfinite(v2) and v1 != v2
+
+
+def test_dst_mask_and_loglik():
+    locs, params, dists, sigma = _sigma_setup()
+    kept = dst_apply(sigma, tile_size=64, keep_fraction=0.4)
+    frac = float((np.asarray(kept) != 0).sum()) / float((np.asarray(sigma) != 0).sum())
+    assert frac < 0.75  # most long-range tiles annihilated
+
+    # Weak dependence (a = 0.03): annihilation keeps the matrix PD and the
+    # DST likelihood is finite but perturbed (paper Fig. 13, left column).
+    weak = MaternParams.bivariate(a=0.03, nu11=0.5, nu22=1.0, beta=0.5)
+    z = simulate_mgrf(jax.random.PRNGKey(3), locs, weak, nugget=1e-8)[0]
+    ll = dst_loglik(dists, z, weak, keep_fraction=0.7, tile_size=64,
+                    nugget=1e-8)
+    exact = exact_loglik(None, z, weak, dists=dists, nugget=1e-8)
+    assert np.isfinite(float(ll.loglik))
+    assert float(ll.loglik) != pytest.approx(float(exact.loglik), rel=1e-9)
+
+
+def test_dst_indefinite_under_strong_dependence_maps_to_penalty():
+    """Strong dependence breaks DST positive definiteness (the paper's own
+    argument for TLR over tapering); the MLE objective must absorb the NaN."""
+    locs, params, dists, sigma = _sigma_setup(a=0.2)
+    z = simulate_mgrf(jax.random.PRNGKey(3), locs, params, nugget=1e-8)[0]
+    ll = dst_loglik(dists, z, params, keep_fraction=0.4, tile_size=64,
+                    nugget=1e-8)
+    assert not np.isfinite(float(ll.loglik))
+    # The packed-objective wrapper turns that into a large finite penalty.
+    from repro.core.mle import MLEConfig, make_objective, pack_params
+    cfg = MLEConfig(p=2, profile=False, backend="dst", tile_size=64,
+                    dst_keep_fraction=0.4, nugget=1e-8)
+    obj, _ = make_objective(locs, z, cfg, dists=dists)
+    val = float(obj(pack_params(params, profile=False)))
+    assert np.isfinite(val) and val >= 1e11

@@ -1,0 +1,188 @@
+"""Training loop, optimizer, checkpointing, fault tolerance, serving."""
+import functools
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.dataio.tokens import MemmapCorpus, Prefetcher, SyntheticTokens
+from repro.models import forward, init_model
+from repro.serving.engine import generate, make_serve_fns
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_step import TrainConfig, grads_fn, loss_fn, train_step
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.checkpointing.checkpoint import (latest_step, restore_checkpoint,
+                                            save_checkpoint)
+
+CFG = get_arch("qwen3-4b").reduced()
+TCFG = TrainConfig(remat=False, optimizer=AdamWConfig(
+    learning_rate=1e-2, warmup_steps=2, decay_steps=50))
+
+
+def _make_step_fn(cfg=CFG, tcfg=TCFG):
+    def step(params, opt_state, errors, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return train_step(params, opt_state, errors, batch, cfg=cfg,
+                          tcfg=tcfg)
+    return jax.jit(step)
+
+
+def _params(seed=0, cfg=CFG):
+    return init_model(jax.random.PRNGKey(seed), cfg)
+
+
+def test_loss_decreases_over_steps():
+    params = _params()
+    opt = adamw_init(params)
+    data = SyntheticTokens(CFG.vocab_size, 32, 4, seed=1)
+    # memorizable stream: repeat one batch
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    step = _make_step_fn()
+    losses = []
+    errors = None
+    for _ in range(30):
+        params, opt, errors, m = step(params, opt, errors, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::10]
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    params = _params()
+    data = SyntheticTokens(CFG.vocab_size, 16, 8, seed=2)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    g1, m1 = grads_fn(params, CFG, batch, TrainConfig(remat=False,
+                                                      microbatches=1))
+    g4, m4 = grads_fn(params, CFG, batch, TrainConfig(remat=False,
+                                                      microbatches=4))
+    flat1 = jax.tree.leaves(g1)
+    flat4 = jax.tree.leaves(g4)
+    for a, b in zip(flat1, flat4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=2e-3,
+                                   atol=2e-4)
+
+
+def test_remat_matches_no_remat():
+    params = _params()
+    data = SyntheticTokens(CFG.vocab_size, 16, 4, seed=3)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    g1, _ = grads_fn(params, CFG, batch, TrainConfig(remat=False))
+    g2, _ = grads_fn(params, CFG, batch, TrainConfig(remat=True))
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = _params()
+    opt = adamw_init(params)
+    tree = dict(params=params, opt=opt, errors=None)
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    restored, manifest = restore_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_resume_after_crash(tmp_path):
+    """Kill the loop mid-run; a fresh Trainer resumes from LATEST and
+    reaches the end with the same data stream."""
+    data = SyntheticTokens(CFG.vocab_size, 16, 4, seed=4)
+    step_fn = _make_step_fn()
+    tc = TrainerConfig(total_steps=12, checkpoint_every=5, log_every=1,
+                       checkpoint_dir=str(tmp_path))
+
+    class Boom(RuntimeError):
+        pass
+
+    def crash_at_8(step, batch):
+        if step == 8:
+            raise Boom()
+
+    t1 = Trainer(step_fn, _params(), data, tc, fault_hook=crash_at_8)
+    with pytest.raises(Boom):
+        t1.run()
+    t1.ckpt.wait()
+    assert latest_step(str(tmp_path)) == 5   # survived the crash
+
+    t2 = Trainer(step_fn, _params(seed=99), data, tc)   # fresh process
+    out = t2.run()
+    assert out["final_step"] == 12
+    assert latest_step(str(tmp_path)) == 12
+
+
+def test_trainer_nan_recovery(tmp_path):
+    """A step that blows up numerically (NaN loss) triggers restore-and-skip."""
+    data = SyntheticTokens(CFG.vocab_size, 16, 4, seed=5)
+    inner = _make_step_fn()
+    counter = {"i": 0}
+
+    def step_fn(params, opt, errors, batch):
+        p, o, e, m = inner(params, opt, errors, batch)
+        if counter["i"] == 5:     # simulated numerics blowup at step 5
+            m = dict(m, loss=jnp.asarray(float("nan")))
+        counter["i"] += 1
+        return p, o, e, m
+
+    tc = TrainerConfig(total_steps=8, checkpoint_every=2, log_every=1,
+                       checkpoint_dir=str(tmp_path))
+    t = Trainer(step_fn, _params(), data, tc)
+    out = t.run()
+    assert out["final_step"] == 8
+    assert out["nan_restores"] == 1          # recovered exactly once
+    assert latest_step(str(tmp_path)) == 8   # run completed + checkpointed
+
+
+def test_memmap_corpus_and_prefetcher(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    MemmapCorpus.write_synthetic(path, 10_000, vocab=50, seed=0)
+    ds = MemmapCorpus(path, seq_len=16, global_batch=4)
+    b0a = ds.batch(0)
+    b0b = ds.batch(0)
+    np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])  # resumable
+    assert b0a["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b0a["tokens"][:, 1:], b0a["targets"][:, :-1])
+
+    pf = Prefetcher(ds, start_step=3, depth=2)
+    it = iter(pf)
+    s, b = next(it)
+    assert s == 3
+    np.testing.assert_array_equal(b["tokens"], ds.batch(3)["tokens"])
+    pf.stop()
+
+
+def test_serving_engine_greedy_deterministic():
+    cfg = get_arch("mixtral-8x7b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size, jnp.int32)
+    out1 = np.asarray(generate(params, cfg, prompt, steps=6))
+    out2 = np.asarray(generate(params, cfg, prompt, steps=6))
+    np.testing.assert_array_equal(out1, out2)
+    assert out1.shape == (2, 6)
+
+
+def test_serve_step_matches_incremental_forward():
+    """serve_step over N tokens == forward over the same prefix (engine-level
+    consistency, mamba2 included)."""
+    cfg = get_arch("mamba2-780m").reduced()
+    params = init_model(jax.random.PRNGKey(3), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 12), 0,
+                              cfg.vocab_size, jnp.int32)
+    prefill, serve_step = make_serve_fns(cfg, max_len=16)
+    state, logits_pre = prefill(params, toks[:, :8])
+    # decode tokens 8..11 with teacher forcing
+    logits = None
+    for i in range(8, 12):
+        state = state._replace(last_tokens=toks[:, i])
+        state, logits = serve_step(params, state)
+    full = forward(params, cfg, tokens=toks)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(full.logits[:, -1], np.float32),
+                               rtol=2e-3, atol=2e-3)
