@@ -1,7 +1,10 @@
-"""Paper Figs. 5-8: rank distributions, memory footprint, one MLE iteration.
+"""Paper Figs. 5-8 and 10-11: ranks, memory, GEN phase, one MLE iteration.
 
 Reduced-n CPU reproduction of the TLR claims; the full-scale systems numbers
-come from the dry-run roofline (EXPERIMENTS.md §Roofline).
+come from the dry-run roofline (EXPERIMENTS.md §Roofline).  ``main`` returns
+the BENCH_tlr.json artifact dict (written by benchmarks/run.py) so future PRs
+have a perf trajectory: GEN / compress / factorize timings, peak tile memory,
+and the loglik delta of the generator-direct path vs the exact likelihood.
 """
 from __future__ import annotations
 
@@ -20,10 +23,10 @@ from repro.core.simulate import grid_locations, simulate_mgrf
 from .common import emit, time_fn
 
 
-def _setup(n_side, a=0.09):
+def _setup(n_side, a=0.09, nu22=1.0):
     locs = grid_locations(n_side, jitter=0.2, seed=0)
     locs = np.asarray(locs)[morton_order(locs)]
-    params = MaternParams.bivariate(a=a, nu11=0.5, nu22=1.0, beta=0.5)
+    params = MaternParams.bivariate(a=a, nu11=0.5, nu22=nu22, beta=0.5)
     dists = pairwise_distances(locs)
     return locs, params, dists
 
@@ -81,10 +84,76 @@ def bench_mle_iteration(quick=False):
                  f"speedup_vs_exact={us_exact / us_tlr:.2f}")
 
 
+def _drain_gen(locs, params, nb, gen):
+    """Execute the full GEN phase (diag + every streamed lower panel)."""
+    diag, lower, _, _ = T.generate_tiles(locs, params, nb, 1e-8, gen)
+    last = diag
+    for blk in lower:
+        last = blk
+    return diag, last
+
+
+def bench_gen_phase(quick=False):
+    """Figs. 10-11 GEN_TIME: generator-direct tile generation, Pallas
+    half-integer kernel vs the XLA K_nu path, dense build_sigma as baseline.
+    nu22=2.5 keeps every pairwise order half-integer (Pallas-eligible)."""
+    n_side = 12 if quick else 16
+    locs, params, dists = _setup(n_side, nu22=2.5)
+    nb = T.choose_tile_size(2 * n_side * n_side, 64, multiple_of=2)
+    us_dense, _ = time_fn(functools.partial(build_sigma, None, params,
+                                            dists=dists, nugget=1e-8), iters=2)
+    emit("fig10_gen_dense", us_dense, "path=build_sigma")
+    for gen in ("pallas", "xla"):
+        us, _ = time_fn(functools.partial(_drain_gen, locs, params, nb, gen),
+                        iters=2)
+        emit(f"fig10_gen_{gen}", us, f"tile_size={nb};vs_dense={us_dense/us:.2f}")
+
+
+def collect_artifact(quick=False):
+    """BENCH_tlr.json: separate GEN / compress / factorize timings, peak tile
+    memory, and the generator-direct loglik delta vs the exact likelihood."""
+    n_side = 12 if quick else 16
+    locs, params, dists = _setup(n_side, nu22=2.5)
+    z = simulate_mgrf(jax.random.PRNGKey(0), locs, params, nugget=1e-8)[0]
+    m = 2 * n_side * n_side
+    tol, kmax = 1e-7, 48
+    nb = T.choose_tile_size(m, 64, multiple_of=2)   # the actual tile size
+
+    gen_us, _ = time_fn(functools.partial(_drain_gen, locs, params, nb,
+                                          "pallas"), iters=2)
+    compress_us, t = time_fn(functools.partial(
+        T.tlr_compress_tiles, locs, params, tile_size=nb, tol=tol,
+        max_rank=kmax, nugget=1e-8), iters=2)
+    assert t.tile_size == nb
+    chol_us, _ = time_fn(functools.partial(T.tlr_cholesky, t, tol=1e-9),
+                         iters=2)
+    mem = T.memory_footprint(t)
+    # peak transient: the first (widest) strict-lower column panel, (m-nb) x nb
+    peak_panel_bytes = (m - nb) * nb * t.diag.dtype.itemsize
+    ll_exact = float(exact_loglik(None, z, params, dists=dists,
+                                  nugget=1e-8).loglik)
+    ll_tlr = float(T.tlr_loglik(None, z, params, tol=tol, max_rank=kmax,
+                                tile_size=nb, nugget=1e-8, locs=locs,
+                                from_tiles=True).loglik)
+    return dict(
+        m=m, tile_size=nb, tol=tol, max_rank=kmax, quick=bool(quick),
+        gen_time_us=gen_us,
+        compress_time_us=compress_us,       # includes GEN (end-to-end)
+        svd_time_us=max(compress_us - gen_us, 0.0),
+        cholesky_time_us=chol_us,
+        tlr_bytes=mem["tlr_bytes"], dense_bytes=mem["dense_bytes"],
+        peak_tile_bytes=mem["tlr_bytes"] + peak_panel_bytes,
+        loglik_exact=ll_exact, loglik_tlr=ll_tlr,
+        loglik_delta_vs_exact=abs(ll_tlr - ll_exact),
+    )
+
+
 def main(quick=False):
     bench_rank_distribution(quick)
     bench_memory_footprint(quick)
+    bench_gen_phase(quick)
     bench_mle_iteration(quick)
+    return collect_artifact(quick)
 
 
 if __name__ == "__main__":

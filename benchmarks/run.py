@@ -4,9 +4,14 @@ Prints ``name,us_per_call,derived`` CSV.  Reduced-n sizes run the statistical
 reproductions on CPU in f64; the full-scale systems numbers come from
 ``python -m repro.launch.dryrun`` (EXPERIMENTS.md §Roofline).
 
+A module whose ``main`` returns a dict gets it written as a ``BENCH_<name>.
+json`` artifact (bench_tlr: GEN/compress/factorize timings, peak tile memory,
+loglik delta vs exact) so successive PRs have a perf trajectory to compare.
+
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only tlr,...]
 """
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -35,7 +40,12 @@ def main() -> None:
         mod = modules[name]
         t0 = time.time()
         try:
-            mod.main(quick=args.quick)
+            artifact = mod.main(quick=args.quick)
+            if isinstance(artifact, dict):
+                path = f"BENCH_{name}.json"
+                with open(path, "w") as f:
+                    json.dump(artifact, f, indent=2, sort_keys=True)
+                print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failures.append((name, str(e)))

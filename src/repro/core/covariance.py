@@ -142,6 +142,57 @@ def build_sigma(locs, params: MaternParams, representation: str = "I",
     return sigma
 
 
+def build_sigma_panel(locs_rows, locs_cols, params: MaternParams,
+                      d_spatial: int = 2, gen: str = "xla", block: int = 256):
+    """Assemble one Representation-I covariance panel between two location
+    sets without ever materializing the full Sigma.
+
+    Returns the (R*p, C*p) interleaved block whose entry
+    [l*p + i, r*p + j] = C_ij(rows[l] - cols[r]); slicing ``build_sigma``'s
+    output to the same row/column ranges gives the identical values.  This is
+    the paper's GEN phase (Figs. 10-11): HiCMA/STARS-H hand each tile worker
+    the *generator*, not the matrix.
+
+    ``gen="pallas"`` routes concrete half-integer pair smoothnesses through
+    the ``kernels.matern_tile`` Pallas kernel; general (or traced) orders fall
+    back to the XLA K_nu path per pair, so the knob is always safe to set.
+    """
+    from .matern import matern_correlation_halfint
+
+    locs_rows = jnp.asarray(locs_rows)
+    locs_cols = jnp.asarray(locs_cols)
+    R, C = locs_rows.shape[0], locs_cols.shape[0]
+    p = params.p
+    nu_ij = parsimonious_nu_matrix(params.nu)
+    rho = parsimonious_rho(params.nu, params.beta, d=d_spatial)
+    sig = jnp.sqrt(params.sigma2)
+    amp = rho * (sig[:, None] * sig[None, :])
+    inv_a = 1.0 / params.a
+    use_pallas = gen == "pallas" and locs_rows.shape[1] == 2
+    dists = None
+
+    iu, ju = np.triu_indices(p)
+    corr = jnp.zeros((p, p, R, C),
+                     dtype=jnp.result_type(locs_rows.dtype, jnp.float32))
+    for i, j in zip(iu, ju):
+        half = _concrete_halfint(nu_ij[i, j])
+        if use_pallas and half is not None:
+            from ..kernels.matern_tile import matern_tile
+            c = matern_tile(locs_rows, locs_cols, inv_a, 1.0, nu=half,
+                            block_n=block, block_m=block)
+        else:
+            if dists is None:
+                dists = pairwise_distances(locs_rows, locs_cols)
+            u = dists * inv_a
+            c = (matern_correlation_halfint(u, half) if half is not None
+                 else matern_correlation(u, nu_ij[i, j]))
+        corr = corr.at[i, j].set(c)
+        if i != j:
+            corr = corr.at[j, i].set(c)
+    blocks = amp[:, :, None, None] * corr
+    return jnp.transpose(blocks, (2, 0, 3, 1)).reshape(R * p, C * p)
+
+
 def build_correlation_matrix(locs, a, nu, nugget: float = 0.0, dists=None):
     """Univariate correlation matrix R_ii(theta_i) (profile-likelihood path)."""
     if dists is None:

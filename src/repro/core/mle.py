@@ -35,6 +35,11 @@ class MLEConfig:
     backend: str = "exact"          # exact | tlr | dst
     tlr_tol: float = 1e-7           # TLR5/7/9 <-> 1e-5/1e-7/1e-9
     tlr_max_rank: int = 64
+    # Generator-direct TLR (tlr_compress_tiles): never builds the dense Sigma.
+    # Requires locs (fit/make_objective thread them through automatically).
+    tlr_from_tiles: bool = False
+    gen: str = "pallas"             # tile generator: pallas half-integer fast
+                                    # path (per-pair XLA fallback) | xla
     tile_size: int = 0              # 0 -> auto (~sqrt(pn))
     dst_keep_fraction: float = 0.7  # DST 70/30
     max_iters: int = 150
@@ -98,7 +103,7 @@ class FitResult(NamedTuple):
     converged: jax.Array
 
 
-def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig):
+def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig, locs=None):
     if cfg.backend == "exact":
         return exact_loglik(None, z, params, representation=cfg.representation,
                             nugget=cfg.nugget, dists=dists).loglik
@@ -106,7 +111,8 @@ def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig):
         from .tlr import tlr_loglik
         return tlr_loglik(dists, z, params, tol=cfg.tlr_tol,
                           max_rank=cfg.tlr_max_rank, tile_size=cfg.tile_size,
-                          nugget=cfg.nugget).loglik
+                          nugget=cfg.nugget, locs=locs,
+                          from_tiles=cfg.tlr_from_tiles, gen=cfg.gen).loglik
     if cfg.backend == "dst":
         from .dst import dst_loglik
         return dst_loglik(dists, z, params, keep_fraction=cfg.dst_keep_fraction,
@@ -138,6 +144,7 @@ def make_objective(locs, z, cfg: MLEConfig, dists=None):
     if dists is None:
         dists = pairwise_distances(locs)
     z = jnp.asarray(z)
+    locs_j = None if locs is None else jnp.asarray(locs)
 
     def neg_ll(x):
         params = unpack_params(x, cfg.p, cfg.profile, cfg.nu_max)
@@ -146,7 +153,7 @@ def make_objective(locs, z, cfg: MLEConfig, dists=None):
                                        nugget=cfg.nugget,
                                        representation=cfg.representation)
             params = params._replace(sigma2=sigma2)
-        ll = _backend_loglik(dists, z, params, cfg)
+        ll = _backend_loglik(dists, z, params, cfg, locs=locs_j)
         return jnp.where(jnp.isfinite(ll), -ll, jnp.asarray(1e12, ll.dtype))
 
     return jax.jit(neg_ll), dists

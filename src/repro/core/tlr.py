@@ -4,16 +4,32 @@ The matrix is split into T x T tiles of size nb.  Diagonal tiles stay dense;
 each strict-lower off-diagonal tile A[i,j] is stored as U V^T with rank k(i,j)
 determined by the accuracy threshold (TLR5/TLR7/TLR9 <-> 1e-5/1e-7/1e-9).
 
+Two compression entry points:
+
+  * tlr_compress_tiles — the production pipeline: tiles are generated straight
+    from the Matérn *generator* over Morton-ordered locations (the GEN phase
+    of Figs. 10-11, via kernels.matern_tile for half-integer nu or the XLA
+    K_nu path for general nu) and SVD-truncated panel by panel.  The dense
+    (pn x pn) Sigma is never materialized — panels stream through the
+    compression loop one at a time, so the peak transient is one strict-lower
+    column panel, O(m*nb), which is what lets TLR run at sizes where dense
+    Sigma no longer fits (HiCMA/STARS-H's generator-direct design).
+  * tlr_compress — the validation path: compress an already-dense matrix.
+
 TPU adaptation (DESIGN.md §2): variable per-tile ranks become a *fixed* kmax
 with zero-padded columns and an integer rank array — static shapes feed the
 MXU; reported memory uses actual ranks, compute uses the padded rank.
 
 Operations implemented directly on the compressed representation:
 
-  * tlr_compress / tlr_to_dense      (SVD per tile)
-  * tlr_cholesky                     (right-looking: POTRF/TRSM/GEMM+recompress)
+  * tlr_compress_tiles / tlr_compress / tlr_to_dense
+  * tlr_cholesky                     (right-looking; the per-step trailing
+                                      update is one batched recompress over
+                                      all strict-lower pairs, not a Python
+                                      loop per column)
   * tlr_solve_lower                  (forward substitution with UV tiles)
-  * tlr_loglik                       (Eq. 1 through the TLR factor)
+  * tlr_loglik                       (Eq. 1 through the TLR factor;
+                                      from_tiles=True is generator-direct)
   * memory_footprint                 (Fig. 6 model)
   * rank_distribution                (Fig. 5 report)
 
@@ -30,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .covariance import MaternParams, build_sigma
+from .covariance import MaternParams, build_sigma, build_sigma_panel
 from .likelihood import LoglikResult
 
 
@@ -60,17 +76,35 @@ class TLRMatrix(NamedTuple):
         return (m, m)
 
 
-def choose_tile_size(m: int, target: int = 0) -> int:
+def choose_tile_size(m: int, target: int = 0, multiple_of: int = 1) -> int:
     """nb = O(sqrt(m)) per the paper's complexity trade-off, rounded to a
-    divisor of m."""
+    divisor of m.
+
+    ``multiple_of`` additionally constrains nb to a multiple (the tiles path
+    passes p so every Representation-I tile covers whole locations).  Runs in
+    O(sqrt(m)): divisors are enumerated as (i, m//i) pairs, and an exact
+    target hit returns immediately without any scan.
+    """
+    if multiple_of > 1 and m % multiple_of:
+        raise ValueError(f"m={m} not divisible by multiple_of={multiple_of}")
     if target <= 0:
         target = max(32, int(math.sqrt(m)) // 32 * 32 or 32)
-    best, best_gap = 1, m
-    for nb in range(1, m + 1):
-        if m % nb == 0:
-            gap = abs(nb - target)
-            if gap < best_gap:
-                best, best_gap = nb, gap
+    if 0 < target <= m and m % target == 0 and target % multiple_of == 0:
+        return target
+    divisors = []
+    i = 1
+    while i * i <= m:
+        if m % i == 0:
+            divisors.append(i)
+            divisors.append(m // i)
+        i += 1
+    best, best_gap = None, None
+    for nb in sorted(divisors):   # ascending: ties resolve to the smaller nb
+        if nb % multiple_of:
+            continue
+        gap = abs(nb - target)
+        if best is None or gap < best_gap:
+            best, best_gap = nb, gap
     return best
 
 
@@ -91,17 +125,20 @@ def _truncate_svd(u, s, vt, tol: float, kmax: int, scale: float):
 
 
 def tlr_compress(sigma, tile_size: int = 0, tol: float = 1e-7,
-                 max_rank: int = 0, scale=None) -> TLRMatrix:
+                 max_rank: int = 0, scale=None,
+                 multiple_of: int = 1) -> TLRMatrix:
     """Compress a dense SPD matrix to TLR (validation path).
 
     The production path compresses tiles straight from the generator without
     materializing sigma (see tlr_compress_tiles / kernels.matern_tile).
     ``scale`` may be a traced scalar (jit-safe); accuracy is absolute w.r.t.
     the matrix's diagonal scale, matching HiCMA's fixed-accuracy mode.
+    ``multiple_of`` constrains the auto tile size the same way the tiles
+    path does (pass p so both paths land on the same tile grid).
     """
     sigma = jnp.asarray(sigma)
     m = sigma.shape[0]
-    nb = choose_tile_size(m, tile_size)
+    nb = choose_tile_size(m, tile_size, multiple_of=multiple_of)
     T = m // nb
     if max_rank <= 0:
         max_rank = max(8, nb // 4)
@@ -124,6 +161,84 @@ def tlr_compress(sigma, tile_size: int = 0, tol: float = 1e-7,
         u = u.at[il, jl].set(U)
         v = v.at[il, jl].set(V)
         ranks = ranks.at[il, jl].set(R)
+    return TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
+
+
+def generate_tiles(locs, params: MaternParams, tile_size: int = 0,
+                   nugget: float = 0.0, gen: str = "pallas",
+                   d_spatial: int = 2):
+    """GEN phase (the paper's GEN_TIME, Figs. 10-11): produce diagonal tiles
+    and strict-lower column panels straight from the Matérn generator.
+
+    Returns ``(diag, lower, nb, T)`` where ``diag`` is (T, nb, nb) with the
+    nugget already applied and ``lower`` is a *generator* yielding the
+    (T-1-j, nb, nb) stack of strict-lower tiles for each column j in turn —
+    streaming, so consumers that process one panel then drop it (the
+    compression loop) keep at most one panel live.  Locations must be
+    Morton-ordered by the caller; Representation-I interleaving happens
+    inside each panel, so the tile values equal the corresponding slices of
+    ``build_sigma``.  The dense (pn x pn) Sigma is never formed — the
+    largest transient is the first column panel, (m - nb) x nb.
+    """
+    locs = jnp.asarray(locs)
+    n = locs.shape[0]
+    p = params.p
+    m = n * p
+    nb = choose_tile_size(m, tile_size, multiple_of=p)
+    nbl = nb // p                       # locations per tile
+    T = m // nb
+    panels = [locs[t * nbl:(t + 1) * nbl] for t in range(T)]
+
+    diag = jnp.stack([build_sigma_panel(panels[t], panels[t], params,
+                                        d_spatial=d_spatial, gen=gen)
+                      for t in range(T)])
+    if nugget:
+        diag = diag + nugget * jnp.eye(nb, dtype=diag.dtype)[None]
+
+    def lower_panels():
+        for j in range(T - 1):
+            rows = locs[(j + 1) * nbl:]
+            blk = build_sigma_panel(rows, panels[j], params,
+                                    d_spatial=d_spatial, gen=gen, block=nb)
+            yield blk.reshape(T - 1 - j, nb, nb)
+
+    return diag, lower_panels(), nb, T
+
+
+def tlr_compress_tiles(locs, params: MaternParams, tile_size: int = 0,
+                       tol: float = 1e-7, max_rank: int = 0,
+                       nugget: float = 0.0, gen: str = "pallas",
+                       d_spatial: int = 2, scale=None) -> TLRMatrix:
+    """Generator-direct TLR compression (the production path, §5.3).
+
+    Equivalent to ``tlr_compress(build_sigma(locs, params, "I", nugget))`` to
+    SVD/fp tolerance, but tile-by-tile from the generator: diagonal tiles and
+    batched strict-lower panels come from ``kernels.matern_tile`` (``gen=
+    "pallas"``, concrete half-integer nu) or the XLA K_nu path (``gen="xla"``
+    or general/traced nu), so the dense Sigma is never materialized.  The
+    nugget lands on diagonal tiles only — exactly where ``build_sigma`` puts
+    it.  ``scale`` (threshold reference) defaults to max(sigma2) + nugget,
+    which equals the dense path's max |diag(Sigma)|.
+    """
+    diag, lower, nb, T = generate_tiles(locs, params, tile_size=tile_size,
+                                        nugget=nugget, gen=gen,
+                                        d_spatial=d_spatial)
+    if max_rank <= 0:
+        max_rank = max(8, nb // 4)
+    kmax = min(max_rank, nb)
+    if scale is None:
+        scale = jnp.max(params.sigma2) + nugget
+
+    u = jnp.zeros((T, T, nb, kmax), diag.dtype)
+    v = jnp.zeros((T, T, nb, kmax), diag.dtype)
+    ranks = jnp.zeros((T, T), jnp.int32)
+    for j, tiles in enumerate(lower):
+        uu, ss, vvt = jnp.linalg.svd(tiles, full_matrices=False)
+        U, V, R = jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
+                                                         scale))(uu, ss, vvt)
+        u = u.at[j + 1:, j].set(U)
+        v = v.at[j + 1:, j].set(V)
+        ranks = ranks.at[j + 1:, j].set(R)
     return TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
 
 
@@ -188,7 +303,7 @@ def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRChol
     inner task batch is a single vmapped Level-3 call — the paper's DAG tasks
     become static batched kernels (DESIGN.md §2).
     """
-    T, nb, kmax = t.n_tiles, t.tile_size, t.max_rank
+    T = t.n_tiles
     diag, u, v, ranks = t.diag, t.u, t.v, t.ranks
 
     for k in range(T):
@@ -208,22 +323,23 @@ def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRChol
         upd = jnp.einsum("rnk,rkl,rml->rnm", upanel, w, upanel)
         diag = diag.at[k + 1:].add(-upd)
 
-        # GEMM + recompression on the trailing tiles, column by column
-        # (rows i > j are contiguous for each j).
-        for j in range(k + 1, T):
-            rows = slice(j + 1, T)
-            nrows = T - (j + 1)
-            if nrows <= 0:
-                continue
-            w = jnp.einsum("rnk,nl->rkl", v[rows, k], v[j, k])    # V_ik^T V_jk
-            du = jnp.einsum("rnk,rkl->rnl", u[rows, k], w)        # U_ik W
-            dv = jnp.broadcast_to(-u[j, k], (nrows, nb, kmax))
+        # GEMM + recompression on ALL trailing strict-lower tiles at once:
+        # Delta A[i,j] = -U_ik (V_ik^T V_jk) U_jk^T for i > j > k.  One
+        # batched einsum + one vmapped recompress per step k (the former
+        # per-column Python loop traced O(T^2) recompress calls; this traces
+        # O(T), cutting trace size and compile time).
+        il, jl = np.tril_indices(T - (k + 1), k=-1)
+        if len(il):
+            gi, gj = il + (k + 1), jl + (k + 1)
+            w = jnp.einsum("lnk,lnq->lkq", vpanel[il], vpanel[jl])  # V_ik^T V_jk
+            du = jnp.einsum("lnk,lkq->lnq", upanel[il], w)          # U_ik W
+            dv = -upanel[jl]                                        # -U_jk
             un, vn, rn = jax.vmap(
                 lambda a, b, c, d: recompress(a, b, c, d, tol, scale)
-            )(u[rows, j], v[rows, j], du, dv)
-            u = u.at[rows, j].set(un)
-            v = v.at[rows, j].set(vn)
-            ranks = ranks.at[rows, j].set(rn)
+            )(u[gi, gj], v[gi, gj], du, dv)
+            u = u.at[gi, gj].set(un)
+            v = v.at[gi, gj].set(vn)
+            ranks = ranks.at[gi, gj].set(rn)
 
     return TLRCholesky(diag=diag, u=u, v=v, ranks=ranks)
 
@@ -280,17 +396,33 @@ def tlr_loglik_from_matrix(t: TLRMatrix, z, tol: float = 1e-9,
 
 def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
                max_rank: int = 64, tile_size: int = 0,
-               nugget: float = 0.0) -> LoglikResult:
+               nugget: float = 0.0, *, locs=None, from_tiles: bool = False,
+               gen: str = "pallas") -> LoglikResult:
     """End-to-end TLR likelihood: GEN -> compress -> TLR Cholesky -> solve.
 
-    Locations must be Morton-ordered by the caller for good rank decay
-    (Representation I interleaving happens inside build_sigma).
+    Locations must be Morton-ordered by the caller for good rank decay.
+    With ``from_tiles=True`` (generator-direct production path) tiles come
+    straight from ``tlr_compress_tiles(locs, ...)`` — ``dists`` may be None
+    and the dense Sigma is never materialized.  ``gen`` selects the tile
+    generator ("pallas" half-integer fast path with per-pair XLA fallback, or
+    "xla").  The default path keeps the historical behavior: build the dense
+    Sigma from ``dists`` and compress it (validation / small n).
     """
-    sigma = build_sigma(None, params, representation="I", nugget=nugget,
-                        dists=dists)
-    scale = jnp.max(jnp.abs(jnp.diagonal(sigma)))
-    t = tlr_compress(sigma, tile_size=tile_size, tol=tol, max_rank=max_rank,
-                     scale=scale)
+    if from_tiles:
+        if locs is None:
+            raise ValueError("from_tiles=True requires locs (Morton-ordered)")
+        scale = jnp.max(params.sigma2) + nugget
+        t = tlr_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
+                               max_rank=max_rank, nugget=nugget, gen=gen,
+                               scale=scale)
+    else:
+        sigma = build_sigma(None, params, representation="I", nugget=nugget,
+                            dists=dists)
+        scale = jnp.max(jnp.abs(jnp.diagonal(sigma)))
+        # multiple_of=p keeps the auto tile grid identical to the tiles path.
+        t = tlr_compress(sigma, tile_size=tile_size, tol=tol,
+                         max_rank=max_rank, scale=scale,
+                         multiple_of=params.p)
     return tlr_loglik_from_matrix(t, z, tol=tol, scale=scale)
 
 

@@ -55,6 +55,17 @@ def _matern_tile_kernel(scalars_ref, la_ref, lb_ref, out_ref, *, nu: float):
     out_ref[...] = (amp * _matern_halfint_body(u, nu)).astype(out_ref.dtype)
 
 
+def _fit_block(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (grid blocks must tile exactly)."""
+    want = max(1, min(want, n))
+    if n % want == 0:
+        return want
+    for b in range(want, 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
 @functools.partial(jax.jit, static_argnames=("nu", "block_n", "block_m",
                                              "interpret"))
 def matern_tile(locs_a, locs_b, inv_range, amp, *, nu: float,
@@ -62,16 +73,16 @@ def matern_tile(locs_a, locs_b, inv_range, amp, *, nu: float,
                 interpret: bool = True):
     """Covariance tile C[r, c] = amp * M_nu(||a_r - b_c|| * inv_range).
 
-    locs_a: (n, 2), locs_b: (m, 2); n, m must be multiples of the block
-    sizes.  nu must be a static half-integer in {0.5, 1.5, 2.5}.
+    locs_a: (n, 2), locs_b: (m, 2).  Block sizes are rounded down to the
+    nearest divisor of n / m, so callers may hand arbitrary panel shapes
+    (the TLR strict-lower panels are (T-1-j)*nbl tall).  nu must be a static
+    half-integer in {0.5, 1.5, 2.5}.
     """
     if nu not in _SUPPORTED_NU:
         raise ValueError(f"kernel supports nu in {_SUPPORTED_NU}; general nu "
                          "uses the XLA path (core.matern)")
     n, m = locs_a.shape[0], locs_b.shape[0]
-    bn, bm = min(block_n, n), min(block_m, m)
-    if n % bn or m % bm:
-        raise ValueError(f"({n},{m}) not divisible by blocks ({bn},{bm})")
+    bn, bm = _fit_block(n, block_n), _fit_block(m, block_m)
     dtype = jnp.result_type(locs_a.dtype, locs_b.dtype)
     scalars = jnp.stack([jnp.asarray(inv_range, dtype),
                          jnp.asarray(amp, dtype)]).reshape(1, 2)

@@ -275,7 +275,7 @@ def cost_extrapolated(cfg, shape, mesh, attn_impl: str) -> dict:
             cfg_r = dataclasses.replace(cfg, num_layers=period * mult)
             lowered, _ = build_lm_cell(cfg_r, shape, mesh, attn_impl)
             comp = lowered.compile()
-            ca = comp.cost_analysis() or {}
+            ca = rl.cost_analysis_dict(comp)
             coll = rl.collective_bytes(comp.as_text())
             vals[mult] = (float(ca.get("flops", 0.0)),
                           float(ca.get("bytes accessed", 0.0)),
@@ -329,7 +329,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
             # loop runs T/S trips (S=1: plain xT; outside part negligible).
             t_tiles = shape.matrix_dim // cfg.tile_size
             trips = max(t_tiles // max(cfg.super_panels, 1), 1)
-            ca = compiled.cost_analysis() or {}
+            ca = rl.cost_analysis_dict(compiled)
             coll = rl.collective_bytes(compiled.as_text())
             override = dict(flops=float(ca.get("flops", 0)) * trips,
                             bytes=float(ca.get("bytes accessed", 0)) * trips,
@@ -348,7 +348,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
 
     print(f"== {arch_name} x {shape_name} x {mesh_name} [{variant}] ==")
     print("memory_analysis:", compiled.memory_analysis())
-    ca = compiled.cost_analysis() or {}
+    ca = rl.cost_analysis_dict(compiled)
     print("cost_analysis (raw, scan bodies once): flops=%.4g bytes=%.4g" %
           (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
     print(rl.format_report_row(report))

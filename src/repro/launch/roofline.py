@@ -111,10 +111,19 @@ class RooflineReport:
         return dataclasses.asdict(self)
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize compiled.cost_analysis(): newer jax returns a flat dict,
+    older versions a one-element list of per-program dicts."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def analyze(arch: str, shape: str, mesh_name: str, chips: int, compiled,
             model_flops_global: float, override: dict | None = None
             ) -> RooflineReport:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())

@@ -114,7 +114,7 @@ def _constrain_expert_buffer(xe, cfg):
         xe, NamedSharding(mesh, P(ep, cdim, None)))
 
 
-def moe_block(params: MoEParams, x, cfg):
+def moe_block(params: MoEParams, x, cfg, dropless: bool = False):
     """x: (B, S, d) -> (B, S, d); also returns the router aux loss.
 
     Dispatch is scatter/gather-based: each (token, choice) gets a unique
@@ -124,6 +124,13 @@ def moe_block(params: MoEParams, x, cfg):
     implementation costs T*E*C*d = O(T^2 k cf d) flops and dominated the
     mixtral/llama4 train cells by 100x (EXPERIMENTS.md §Perf, llama4
     iteration 1); scatter dispatch removes it entirely.
+
+    ``dropless=True`` sizes the per-expert buffer at the full shard-local
+    token count so no token is ever dropped.  Capacity dropping is a
+    *training*-throughput device; at inference it makes routing depend on how
+    the sequence was batched, so prefill+decode and a full forward disagree
+    on whichever tokens overflowed (caught by the decode==forward cache
+    test).  The cost is an e/(k*cf)x larger expert buffer — inference-only.
     """
     b, s, d = x.shape
     e = cfg.num_experts
@@ -152,7 +159,13 @@ def moe_block(params: MoEParams, x, cfg):
     # lowered to ~140 GB/chip of all-reduce on the mixtral train cell.
     shards = _dispatch_shards(cfg, t)
     tl = t // shards                                           # tokens/shard
-    cap = _capacity(tl, k, e, cfg.capacity_factor)             # local capacity
+    # Dropless: slot <= tl-1 always (a token lands at most once per expert),
+    # so cap >= tl can never overflow.  Keep _capacity's round-up-to-256 so
+    # the capacity dim still shards evenly (see _capacity's docstring).
+    if dropless:
+        cap = -(-tl // 256) * 256 if tl > 256 else tl
+    else:
+        cap = _capacity(tl, k, e, cfg.capacity_factor)
 
     onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T, k, E)
     oh_s = onehot.reshape(shards, tl * k, e)

@@ -123,7 +123,7 @@ def init_model(key, cfg):
 
 
 def _apply_layer(layer, x, cfg, kind: str, use_moe: bool, *, attn_impl: str,
-                 positions, cache, aux):
+                 positions, cache, aux, moe_dropless: bool = False):
     if settings.FSDP_GATHER_MESH is not None:
         # ZeRO-3: gather the FSDP-sharded weights just-in-time (see
         # models/shardspecs.py; fixes the data-axis batch/contraction
@@ -141,7 +141,8 @@ def _apply_layer(layer, x, cfg, kind: str, use_moe: bool, *, attn_impl: str,
         x = x + h
         h2 = rms_norm(x, layer["norm2"], cfg.norm_eps)
         if use_moe:
-            h2, moe_aux = moe_block(layer["moe"], h2, cfg)
+            h2, moe_aux = moe_block(layer["moe"], h2, cfg,
+                                    dropless=moe_dropless)
             aux = aux + moe_aux
         else:
             h2 = mlp(layer["mlp"], h2, cfg.mlp_kind)
@@ -163,14 +164,16 @@ def _apply_layer(layer, x, cfg, kind: str, use_moe: bool, *, attn_impl: str,
     return x, new_cache, aux
 
 
-def _apply_block(block_params, x, cfg, *, attn_impl, positions, caches, aux):
+def _apply_block(block_params, x, cfg, *, attn_impl, positions, caches, aux,
+                 moe_dropless: bool = False):
     spec = block_spec(cfg)
     new_caches = []
     for i, (kind, use_moe) in enumerate(spec):
         cache_i = None if caches is None else caches[i]
         x, nc, aux = _apply_layer(block_params[i], x, cfg, kind, use_moe,
                                   attn_impl=attn_impl, positions=positions,
-                                  cache=cache_i, aux=aux)
+                                  cache=cache_i, aux=aux,
+                                  moe_dropless=moe_dropless)
         new_caches.append(nc)
     return x, new_caches, aux
 
@@ -187,11 +190,21 @@ class ForwardResult(NamedTuple):
 
 
 def forward(params, cfg, tokens=None, embeds=None, positions=None, *,
-            attn_impl: str = "naive", remat: bool = False, caches=None):
+            attn_impl: str = "naive", remat: bool = False, caches=None,
+            dropless: bool | None = None):
     """Train/prefill forward.  tokens (B, S) int32 or embeds (B, S, d).
 
     With ``caches`` (prefill): per-layer caches are filled and returned.
+    ``dropless`` controls MoE dispatch; default (None -> ``caches is not
+    None``) makes the cached inference paths (prefill + decode) route
+    without capacity drops — capacity dropping depends on how the sequence
+    was batched, so a cached decode cannot reproduce it — while every
+    non-cached forward (training, with or without remat) keeps the seed's
+    capacity-based dispatch.  Pass ``dropless=True`` to a full forward to
+    compare it against a prefill+decode run.
     """
+    if dropless is None:
+        dropless = caches is not None
     if embeds is None:
         x = take_embedding(params["embed"], tokens)
     else:
@@ -203,7 +216,7 @@ def forward(params, cfg, tokens=None, embeds=None, positions=None, *,
     nblocks, tail = layer_counts(cfg)
 
     block_fn = functools.partial(_apply_block, cfg=cfg, attn_impl=attn_impl,
-                                 positions=positions)
+                                 positions=positions, moe_dropless=dropless)
     if remat:
         block_fn = jax.checkpoint(block_fn,
                                   static_argnums=())  # full remat per block
@@ -237,7 +250,7 @@ def forward(params, cfg, tokens=None, embeds=None, positions=None, *,
         tc = None if caches is None else caches["tail"][t]
         x, nc, aux = _apply_layer(layer, x, cfg, kind, use_moe,
                                   attn_impl=attn_impl, positions=positions,
-                                  cache=tc, aux=aux)
+                                  cache=tc, aux=aux, moe_dropless=dropless)
         new_tail_caches.append(nc)
     if caches is not None:
         caches = dict(caches, tail=new_tail_caches)

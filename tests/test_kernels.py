@@ -42,6 +42,19 @@ def test_matern_tile_kernel(nu, shape, dtype):
                                **_tol(dtype))
 
 
+def test_matern_tile_auto_block_fit():
+    """Non-divisible panel shapes (TLR strict-lower panels) round the block
+    down to the nearest divisor instead of raising."""
+    rng = np.random.default_rng(8)
+    la = jnp.asarray(rng.uniform(size=(96, 2)))   # 96 % 64 != 0 -> block 48
+    lb = jnp.asarray(rng.uniform(size=(40, 2)))
+    got = matern_tile(la, lb, 1.0 / 0.1, 1.0, nu=1.5, block_n=64, block_m=64,
+                      interpret=True)
+    want = ref.matern_tile_ref(la, lb, 1.0 / 0.1, 1.0, 1.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10,
+                               atol=1e-12)
+
+
 def test_matern_tile_vs_sigma_build():
     """Kernel tiles assemble to the same matrix as core.build_sigma (p=1)."""
     from repro.core.covariance import MaternParams, build_sigma

@@ -75,7 +75,10 @@ def test_decode_matches_forward(arch_name):
     params = init_model(key, cfg)
     tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
 
-    full = forward(params, cfg, tokens=tokens)
+    # dropless=True: cached inference routes MoE without capacity drops
+    # (drops depend on sequence batching, which decode cannot reproduce),
+    # so the full-forward reference must route the same way.
+    full = forward(params, cfg, tokens=tokens, dropless=True)
     # prefill first S-1 tokens into caches, then decode token S-1.
     caches = init_caches(cfg, B, max_len=S)
     pre = forward(params, cfg, tokens=tokens[:, :S - 1],
