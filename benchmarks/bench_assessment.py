@@ -2,8 +2,6 @@
 TLR accuracy)."""
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 
@@ -50,7 +48,7 @@ def bench_mloe_mmom_breakdown(quick=False):
 def bench_criteria_vs_accuracy(quick=False):
     """Fig. 15: MLOE/MMOM shrink as the approximated parameters approach the
     truth (stronger dependence needs higher TLR accuracy)."""
-    from repro.core import pairwise_distances, simulate_mgrf
+    from repro.core import simulate_mgrf
     from repro.core.mle import MLEConfig, fit
 
     n = 250 if quick else 400

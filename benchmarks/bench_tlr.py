@@ -111,7 +111,11 @@ def bench_gen_phase(quick=False):
 
 def collect_artifact(quick=False):
     """BENCH_tlr.json: separate GEN / compress / factorize timings, peak tile
-    memory, and the generator-direct loglik delta vs the exact likelihood."""
+    memory, and the generator-direct loglik deltas vs the exact likelihood
+    for both the single-device path and the distributed streaming pipeline
+    (dist_compress_tiles -> fori_loop Cholesky, run unsharded here)."""
+    from repro.core.dist_tlr import dist_compress_tiles, dist_tlr_loglik
+
     n_side = 12 if quick else 16
     locs, params, dists = _setup(n_side, nu22=2.5)
     z = simulate_mgrf(jax.random.PRNGKey(0), locs, params, nugget=1e-8)[0]
@@ -135,16 +139,32 @@ def collect_artifact(quick=False):
     ll_tlr = float(T.tlr_loglik(None, z, params, tol=tol, max_rank=kmax,
                                 tile_size=nb, nugget=1e-8, locs=locs,
                                 from_tiles=True).loglik)
+
+    # Distributed streaming pipeline, same problem (mesh=None: one device).
+    locs_j = jnp.asarray(locs)
+    dist_compress = jax.jit(lambda pts: dist_compress_tiles(
+        pts, params, tile_size=nb, tol=tol, max_rank=kmax, nugget=1e-8))
+    dist_compress_us, _ = time_fn(dist_compress, locs_j, iters=2)
+    dist_ll = jax.jit(lambda pts, zz: dist_tlr_loglik(
+        None, zz, locs=pts, params=params, from_tiles=True, tile_size=nb,
+        max_rank=kmax, nugget=1e-8, tol=tol).loglik)
+    dist_ll_us, ll_dist = time_fn(dist_ll, locs_j, z, iters=2)
+    ll_dist = float(ll_dist)
+
     return dict(
         m=m, tile_size=nb, tol=tol, max_rank=kmax, quick=bool(quick),
         gen_time_us=gen_us,
         compress_time_us=compress_us,       # includes GEN (end-to-end)
         svd_time_us=max(compress_us - gen_us, 0.0),
         cholesky_time_us=chol_us,
+        dist_compress_time_us=dist_compress_us,
+        dist_loglik_time_us=dist_ll_us,     # full pipeline (GEN -> loglik)
         tlr_bytes=mem["tlr_bytes"], dense_bytes=mem["dense_bytes"],
         peak_tile_bytes=mem["tlr_bytes"] + peak_panel_bytes,
         loglik_exact=ll_exact, loglik_tlr=ll_tlr,
         loglik_delta_vs_exact=abs(ll_tlr - ll_exact),
+        loglik_dist=ll_dist,
+        loglik_delta_dist_vs_exact=abs(ll_dist - ll_exact),
     )
 
 

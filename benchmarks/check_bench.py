@@ -1,0 +1,85 @@
+"""CI gate on the BENCH_tlr.json perf-trajectory artifact.
+
+``python -m benchmarks.run --quick --only tlr`` writes BENCH_tlr.json with
+GEN / compress / factorize timings and the generator-direct log-likelihood
+deltas versus the exact likelihood.  This script fails (exit 1) when
+
+  * the artifact is missing, unreadable, or lacks a required key — i.e. the
+    benchmark crashed or silently stopped producing the trajectory, or
+  * any ``loglik_delta*`` accuracy field exceeds the threshold (default
+    1e-3, the acceptance bound for the TLR7 pipeline at quick sizes), or
+  * a timing field is non-finite or non-positive (a zero GEN time means the
+    phase was optimized away and the trajectory is meaningless).
+
+Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+REQUIRED_KEYS = (
+    "m", "tile_size", "tol", "max_rank",
+    "gen_time_us", "compress_time_us", "cholesky_time_us",
+    "tlr_bytes", "dense_bytes", "peak_tile_bytes",
+    "loglik_exact", "loglik_tlr", "loglik_delta_vs_exact",
+    # distributed streaming pipeline (PR 2)
+    "dist_compress_time_us", "dist_loglik_time_us",
+    "loglik_delta_dist_vs_exact",
+)
+TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
+               "dist_compress_time_us", "dist_loglik_time_us")
+
+
+def check_artifact(artifact: dict, max_delta: float = 1e-3) -> list[str]:
+    """Return a list of failure messages (empty == gate passes)."""
+    errors = []
+    for key in REQUIRED_KEYS:
+        if key not in artifact:
+            errors.append(f"missing key: {key}")
+    for key in (k for k in artifact if k.startswith("loglik_delta")):
+        val = artifact[key]
+        if not isinstance(val, (int, float)) or not math.isfinite(val):
+            errors.append(f"{key} is not finite: {val!r}")
+        elif abs(val) > max_delta:
+            errors.append(f"{key}={val:.3e} exceeds max-delta={max_delta:g}")
+    for key in TIMING_KEYS:
+        val = artifact.get(key)
+        if val is None:
+            continue  # missing already reported above
+        if not isinstance(val, (int, float)) or not math.isfinite(val) \
+                or val <= 0.0:
+            errors.append(f"{key} is not a positive finite timing: {val!r}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact", nargs="?", default="BENCH_tlr.json")
+    ap.add_argument("--max-delta", type=float, default=1e-3,
+                    help="fail when any loglik_delta* exceeds this")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.artifact) as f:
+            artifact = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read {args.artifact}: {e}", file=sys.stderr)
+        return 1
+
+    errors = check_artifact(artifact, args.max_delta)
+    if errors:
+        for err in errors:
+            print(f"FAIL: {err}", file=sys.stderr)
+        return 1
+    print(f"OK: {args.artifact} passes "
+          f"(loglik_delta_vs_exact={artifact['loglik_delta_vs_exact']:.3e}, "
+          f"dist={artifact['loglik_delta_dist_vs_exact']:.3e}, "
+          f"max-delta={args.max_delta:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.models import init_model
-from repro.serving.engine import generate, make_serve_fns
+from repro.serving.engine import make_serve_fns
 
 
 def main():

@@ -22,8 +22,6 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp  # noqa: E402
-
 from repro.core import (MaternParams, exact_loglik, pairwise_distances,  # noqa: E402
                         simulate_mgrf)
 from repro.core import tlr as T  # noqa: E402

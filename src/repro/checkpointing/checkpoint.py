@@ -15,8 +15,6 @@ import shutil
 import tempfile
 import threading
 import time
-from typing import Any, Callable
-
 import jax
 import numpy as np
 

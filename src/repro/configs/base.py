@@ -7,7 +7,6 @@ workloads are ``GeoStatConfig`` instances (same registry, same dry-run path).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

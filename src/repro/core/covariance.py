@@ -193,6 +193,23 @@ def build_sigma_panel(locs_rows, locs_cols, params: MaternParams,
     return jnp.transpose(blocks, (2, 0, 3, 1)).reshape(R * p, C * p)
 
 
+def build_sigma_column(locs, j, nbl: int, params: MaternParams,
+                       d_spatial: int = 2, gen: str = "xla", block: int = 256):
+    """One Representation-I *tile-grid column* panel, generator-direct.
+
+    Returns the (m, nb) slice ``build_sigma(locs, ...)[:, j*nb:(j+1)*nb]``
+    (m = n*p, nb = nbl*p) without materializing Sigma.  ``j`` may be a traced
+    tile-column index — the distributed compression loop
+    (core.dist_tlr.dist_compress_tiles) runs it under lax.fori_loop — while
+    ``nbl`` (locations per tile) must be static so the slice has a static
+    shape.
+    """
+    locs = jnp.asarray(locs)
+    cols = jax.lax.dynamic_slice_in_dim(locs, j * nbl, nbl, axis=0)
+    return build_sigma_panel(locs, cols, params, d_spatial=d_spatial, gen=gen,
+                             block=block)
+
+
 def build_correlation_matrix(locs, a, nu, nugget: float = 0.0, dists=None):
     """Univariate correlation matrix R_ii(theta_i) (profile-likelihood path)."""
     if dists is None:

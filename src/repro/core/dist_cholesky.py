@@ -117,7 +117,6 @@ def panels_backward_solve(panels, y, panel: int):
 def blocked_cholesky(a, panel: int, mesh=None, row_axes=("data",)):
     """Dense lower Cholesky factor (assembled from the panel form; used by
     tests and small problems — the distributed path stays in panel form)."""
-    m = a.shape[0]
     panels = blocked_cholesky_panels(a, panel, mesh, row_axes)
     out = jnp.zeros_like(a)
     for k, (lkk, pan) in enumerate(panels):
@@ -128,9 +127,9 @@ def blocked_cholesky(a, panel: int, mesh=None, row_axes=("data",)):
     return out
 
 
-def forward_substitution(l, z, panel: int):
+def forward_substitution(lfac, z, panel: int):
     """Blocked forward solve L alpha = z from a dense factor (test path)."""
-    m = l.shape[0]
+    m = lfac.shape[0]
     nk = m // panel
     z = jnp.asarray(z)
     single = z.ndim == 1
@@ -140,10 +139,10 @@ def forward_substitution(l, z, panel: int):
     for k in range(nk):
         r0, r1 = k * panel, (k + 1) * panel
         blk = jax.lax.linalg.triangular_solve(
-            l[r0:r1, r0:r1], z[r0:r1], left_side=True, lower=True)
+            lfac[r0:r1, r0:r1], z[r0:r1], left_side=True, lower=True)
         out = out.at[r0:r1].set(blk)
         if r1 < m:
-            z = z.at[r1:].add(-(l[r1:, r0:r1] @ blk))
+            z = z.at[r1:].add(-(lfac[r1:, r0:r1] @ blk))
     return out[:, 0] if single else out
 
 

@@ -1,5 +1,5 @@
-"""Distributed TLR Cholesky: the paper's HiCMA workload as a fori_loop SPMD
-program over a sharded tile grid.
+"""Distributed TLR pipeline: generate -> compress -> factorize as fori_loop
+SPMD programs over a sharded tile grid (the paper's HiCMA workload).
 
 Layout (DESIGN.md §2,4): fixed-kmax UV storage
 
@@ -9,8 +9,17 @@ Layout (DESIGN.md §2,4): fixed-kmax UV storage
 i.e. tile (i, j) lives on device grid cell (i mod Pr-block, j mod Pc-block) —
 the 2-D distribution of CHAMELEON with block (not cyclic) placement.
 
-Each fori_loop step k performs the full panel of paper-Fig.-1 tasks as
-*masked full-grid batched* kernels:
+The *compression* stage (dist_compress_tiles) streams one Representation-I
+column panel at a time straight from the Matérn generator
+(covariance.build_sigma_column -> kernels.matern_tile / XLA K_nu): each
+fori_loop step j builds the (m, nb) panel under
+with_sharding_constraint(P(row, "model")), SVD-truncates its T tiles, and
+scatters column j of D/U/V — the dense (pn x pn) Sigma is never materialized
+on any device; the peak transient is one column panel, O(m * nb).
+
+The *factorization* stage shares its traced panel body with the single-device
+scan form (core.tlr.tlr_panel_body).  Each fori_loop step k performs the full
+panel of paper-Fig.-1 tasks as masked full-grid batched kernels:
 
     POTRF  — gather D[k] (one tile, replicated), factor
     TRSM   — batched triangular solve of column k's V tiles  (T-batch)
@@ -26,185 +35,183 @@ two-level (unrolled super-panel) loop whose trailing shapes shrink.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from .covariance import build_sigma_column
 from .likelihood import LoglikResult
-from .tlr import TLRMatrix
+from .tlr import (TLRMatrix, _constrain, _truncate_svd, choose_tile_size,
+                  panel_loop)
+
+__all__ = [
+    "dist_compress_tiles", "dist_tlr_cholesky", "dist_tlr_solve_lower",
+    "dist_tlr_loglik", "dist_tlr_lowerable", "dist_tlr_gen_lowerable",
+    "dist_tlr_compress_lowerable", "dist_tlr_pipeline_lowerable",
+]
 
 
-def _constrain(x, mesh, spec):
-    if mesh is None:
-        return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+def _row(row_axes):
+    return row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
 
 
-def _batched_recompress(u1, v1, u2, v2, tol, scale):
-    """(B..., nb, k) pairs -> recompressed sum with rank <= kmax, batched."""
-    kmax = u1.shape[-1]
-    ucat = jnp.concatenate([u1, u2], axis=-1)
-    vcat = jnp.concatenate([v1, v2], axis=-1)
-    qu, ru = jnp.linalg.qr(ucat)
-    qv, rv = jnp.linalg.qr(vcat)
-    core = ru @ jnp.swapaxes(rv, -1, -2)
-    cu, cs, cvt = jnp.linalg.svd(core)
-    idx = jnp.arange(kmax)
-    mask = (cs[..., :kmax] > tol * scale)
-    s_m = jnp.where(mask, cs[..., :kmax], 0.0)
-    unew = jnp.einsum("...nk,...k->...nk", qu @ cu[..., :kmax], s_m)
-    vnew = qv @ jnp.swapaxes(cvt[..., :kmax, :], -1, -2)
-    vnew = jnp.where(mask[..., None, :], vnew, 0.0)
-    return unew, vnew
+# ---------------------------------------------------------------------------
+# Streaming generator-direct compression (GEN + compress, sharded)
+# ---------------------------------------------------------------------------
 
 
-def dist_tlr_cholesky(diag, u, v, *, tol: float = 1e-7, scale: float = 1.0,
-                      mesh=None, row_axes=("data",), super_panels: int = 1):
-    """Factor the TLR matrix in place.  Returns (diag_L, u, v).
+def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
+                        max_rank: int = 0, nugget: float = 0.0,
+                        gen: str = "pallas", d_spatial: int = 2, scale=None,
+                        mesh=None, row_axes=("data",)) -> TLRMatrix:
+    """Build the fixed-kmax D/U/V layout straight from Morton-ordered
+    locations, one column panel at a time (the distributed production path).
 
-    ``super_panels = 1``: one fori_loop over all T panels with masked
-    full-grid updates — ~6x flop overcompute versus the triangle, but one
-    trace regardless of T (the paper-faithful SPMD baseline).
+    Equivalent to ``tlr_compress_tiles`` to SVD/fp tolerance, but as a
+    single fori_loop whose step j generates the Representation-I column
+    panel sigma[:, j*nb:(j+1)*nb] from the generator (never the dense
+    Sigma), constrains it to P(row, "model"), SVD-truncates its T tiles in
+    one batch, and scatters column j of the output.  Rows i <= j are masked
+    to zero (strict-lower storage); the diagonal tile gets the nugget,
+    exactly where ``build_sigma`` puts it.
+
+    ``mesh=None`` runs the identical program on one device (the CPU test
+    path); per-tile ``ranks`` are real (threaded from the truncation), not
+    placeholders.
+    """
+    locs = jnp.asarray(locs)
+    n = locs.shape[0]
+    p = params.p
+    m = n * p
+    nb = choose_tile_size(m, tile_size, multiple_of=p)
+    nbl = nb // p                       # locations per tile
+    T = m // nb
+    if max_rank <= 0:
+        max_rank = max(8, nb // 4)
+    kmax = min(max_rank, nb)
+    if scale is None:
+        scale = jnp.max(params.sigma2) + nugget
+    row = _row(row_axes)
+    dtype = jnp.result_type(locs.dtype, params.sigma2.dtype, jnp.float32)
+    rows_idx = jnp.arange(T)
+
+    diag = jnp.zeros((T, nb, nb), dtype)
+    u = jnp.zeros((T, T, nb, kmax), dtype)
+    v = jnp.zeros((T, T, nb, kmax), dtype)
+    ranks = jnp.zeros((T, T), jnp.int32)
+
+    def body(j, carry):
+        diag, u, v, ranks = carry
+        panel = build_sigma_column(locs, j, nbl, params, d_spatial=d_spatial,
+                                   gen=gen, block=nb)            # (m, nb)
+        panel = _constrain(panel, mesh, P(row, "model"))
+        tiles = panel.reshape(T, nb, nb)
+        dj = lax.dynamic_index_in_dim(tiles, j, 0, keepdims=False)
+        if nugget:
+            dj = dj + nugget * jnp.eye(nb, dtype=dtype)
+        diag = lax.dynamic_update_index_in_dim(diag, dj, j, 0)
+        uu, ss, vvt = jnp.linalg.svd(tiles, full_matrices=False)
+        U, V, R = jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
+                                                         scale))(uu, ss, vvt)
+        below = rows_idx > j
+        U = jnp.where(below[:, None, None], U, 0.0)
+        V = jnp.where(below[:, None, None], V, 0.0)
+        R = jnp.where(below, R, 0)
+        u = lax.dynamic_update_index_in_dim(u, U, j, 1)
+        v = lax.dynamic_update_index_in_dim(v, V, j, 1)
+        ranks = lax.dynamic_update_index_in_dim(ranks, R, j, 1)
+        return (_constrain(diag, mesh, P(row, None, None)),
+                _constrain(u, mesh, P(row, "model", None, None)),
+                _constrain(v, mesh, P(row, "model", None, None)), ranks)
+
+    diag, u, v, ranks = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
+                                      (diag, u, v, ranks))
+    return TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
+
+
+# ---------------------------------------------------------------------------
+# Distributed TLR Cholesky (shared panel body, masked full-grid batching)
+# ---------------------------------------------------------------------------
+
+
+def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
+                      scale: float = 1.0, mesh=None, row_axes=("data",),
+                      super_panels: int = 1):
+    """Factor the TLR matrix in place.  Returns (diag_L, u, v, ranks).
+
+    ``super_panels = 1``: one fori_loop over the shared panel body
+    (core.tlr.tlr_panel_body, pairs=None) with masked full-grid updates —
+    ~6x flop overcompute versus the triangle, but one trace regardless of T
+    (the paper-faithful SPMD baseline).
 
     ``super_panels = S > 1``: python-unrolled outer loop over S shrinking
     sub-matrices, fori_loop inside — the masked grid only spans the live
     trailing slice, cutting the overcompute to ~2.4x at S = 8 for ~S-times
-    the trace size (the §Perf geostat-tlr hillclimb)."""
+    the trace size (the §Perf geostat-tlr hillclimb).
+
+    ``ranks`` threads the real per-tile ranks through the factorization
+    (recompression updates them); None starts from the fixed-kmax
+    convention's zero metadata (see TLRMatrix)."""
+    if ranks is None:
+        ranks = jnp.zeros(u.shape[:2], jnp.int32)
     if super_panels > 1:
-        return _tlr_cholesky_super(diag, u, v, tol=tol, scale=scale,
+        return _tlr_cholesky_super(diag, u, v, ranks, tol=tol, scale=scale,
                                    mesh=mesh, row_axes=row_axes,
                                    super_panels=super_panels)
-    T, nb = diag.shape[0], diag.shape[1]
-    kmax = u.shape[-1]
-    rows = jnp.arange(T)
-
-    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+    T = diag.shape[0]
+    row = _row(row_axes)
     dspec = P(row, None, None)
     uvspec = P(row, "model", None, None)
-
-    def body(k, carry):
-        diag, u, v = carry
-        # ---- POTRF on tile (k, k): replicated small factorization.
-        dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
-        lkk = jnp.linalg.cholesky(dkk)
-        row_is_k = (rows == k)[:, None, None]
-        # ---- TRSM on panel column k (V only; U untouched — §5.3).
-        vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)   # (T, nb, kmax)
-        vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
-            lkk, b, left_side=True, lower=True))(vk)
-        below = (rows > k)[:, None, None]
-        vk = jnp.where(below, vk_solved, vk)
-        v = lax.dynamic_update_index_in_dim(v, vk, k, 1)
-        uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)   # (T, nb, kmax)
-
-        # ---- SYRK onto diagonal tiles i > k: D_i -= U (V^T V) U^T.
-        w = jnp.einsum("tnk,tnl->tkl", vk, vk)
-        upd = jnp.einsum("tnk,tkl,tml->tnm", uk, w, uk)
-        diag = diag - jnp.where(below, upd, 0.0)
-        diag = jnp.where(row_is_k, lkk[None], diag)
-
-        # ---- GEMM + recompress over the trailing grid i > j > k.
-        wij = jnp.einsum("ink,jnl->ijkl", vk, vk)                # (T,T,k,k)
-        du = jnp.einsum("ijkl,ink->ijnl", wij, uk)               # U_ik W
-        dv = jnp.broadcast_to(-uk[None], (T, T, nb, kmax))       # dv[i,j] = -U_jk
-        # mask: active tiles get the real update, inactive get a zero update
-        act = ((rows[:, None] > rows[None, :]) &
-               (rows[None, :] > k))[..., None, None]
-        du = jnp.where(act, du, 0.0)
-        dv = jnp.where(act, dv, 0.0)
-        du = _constrain(du, mesh, uvspec)
-        un, vn = _batched_recompress(u, v, du, dv, tol, scale)
-        u = jnp.where(act, un, u)
-        v = jnp.where(act, vn, v)
-        u = _constrain(u, mesh, uvspec)
-        v = _constrain(v, mesh, uvspec)
-        diag = _constrain(diag, mesh, dspec)
-        return diag, u, v
-
-    diag, u, v = lax.fori_loop(0, T, body, (diag, u, v))
-    return diag, u, v
+    if T > 1:
+        diag, u, v, ranks = panel_loop(diag, u, v, ranks, T - 1, tol=tol,
+                                       scale=scale, mesh=mesh, dspec=dspec,
+                                       uvspec=uvspec)
+    diag = diag.at[T - 1].set(jnp.linalg.cholesky(diag[T - 1]))
+    diag = _constrain(diag, mesh, dspec)
+    return diag, u, v, ranks
 
 
-def _tlr_cholesky_super(diag, u, v, *, tol, scale, mesh, row_axes,
+def _tlr_cholesky_super(diag, u, v, ranks, *, tol, scale, mesh, row_axes,
                         super_panels: int):
     """Two-level variant: unrolled outer loop over shrinking trailing slices,
     fori_loop inside each.  Factored panels are written into full-size output
     buffers; the live state shrinks every super-step."""
-    T, nb = diag.shape[0], diag.shape[1]
-    kmax = u.shape[-1]
+    T = diag.shape[0]
     assert T % super_panels == 0, (T, super_panels)
     chunk = T // super_panels
+    row = _row(row_axes)
+    dspec = P(row, None, None)
+    uvspec = P(row, "model", None, None)
 
     out_diag = jnp.zeros_like(diag)
     out_u = jnp.zeros_like(u)
     out_v = jnp.zeros_like(v)
-    dh, uh, vh = diag, u, v
+    out_ranks = jnp.zeros_like(ranks)
+    dh, uh, vh, rh = diag, u, v, ranks
     for s in range(super_panels):
         o = s * chunk
         # factor the first `chunk` panels of the live (T-o)-tile slice
-        dh, uh, vh = dist_tlr_cholesky(dh, uh, vh, tol=tol, scale=scale,
-                                       mesh=mesh, row_axes=row_axes,
-                                       super_panels=1) \
-            if (s == super_panels - 1) else _fori_range(
-                dh, uh, vh, chunk, tol, scale, mesh, row_axes)
+        if s == super_panels - 1:
+            dh, uh, vh, rh = dist_tlr_cholesky(dh, uh, vh, rh, tol=tol,
+                                               scale=scale, mesh=mesh,
+                                               row_axes=row_axes)
+        else:
+            dh, uh, vh, rh = panel_loop(dh, uh, vh, rh, chunk, tol=tol,
+                                        scale=scale, mesh=mesh, dspec=dspec,
+                                        uvspec=uvspec)
         # write factored rows/columns back into the global buffers
         out_diag = out_diag.at[o:o + chunk].set(dh[:chunk])
         out_u = out_u.at[o:, o:o + chunk].set(uh[:, :chunk])
         out_v = out_v.at[o:, o:o + chunk].set(vh[:, :chunk])
+        out_ranks = out_ranks.at[o:, o:o + chunk].set(rh[:, :chunk])
         if s < super_panels - 1:
             dh = dh[chunk:]
             uh = uh[chunk:, chunk:]
             vh = vh[chunk:, chunk:]
-    return out_diag, out_u, out_v
-
-
-def _fori_range(diag, u, v, k_hi, tol, scale, mesh, row_axes):
-    """Run the masked-grid panel loop for k in [0, k_hi) on the live slice
-    (same body as dist_tlr_cholesky's single-level path)."""
-    T, nb = diag.shape[0], diag.shape[1]
-    kmax = u.shape[-1]
-    rows = jnp.arange(T)
-    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
-    dspec = P(row, None, None)
-    uvspec = P(row, "model", None, None)
-
-    def body(k, carry):
-        diag, u, v = carry
-        dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
-        lkk = jnp.linalg.cholesky(dkk)
-        row_is_k = (rows == k)[:, None, None]
-        vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)
-        vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
-            lkk, b, left_side=True, lower=True))(vk)
-        below = (rows > k)[:, None, None]
-        vk = jnp.where(below, vk_solved, vk)
-        v = lax.dynamic_update_index_in_dim(v, vk, k, 1)
-        uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)
-        w = jnp.einsum("tnk,tnl->tkl", vk, vk)
-        upd = jnp.einsum("tnk,tkl,tml->tnm", uk, w, uk)
-        diag = diag - jnp.where(below, upd, 0.0)
-        diag = jnp.where(row_is_k, lkk[None], diag)
-        wij = jnp.einsum("ink,jnl->ijkl", vk, vk)
-        du = jnp.einsum("ijkl,ink->ijnl", wij, uk)
-        dv = jnp.broadcast_to(-uk[None], (T, T, nb, kmax))
-        act = ((rows[:, None] > rows[None, :]) &
-               (rows[None, :] > k))[..., None, None]
-        du = jnp.where(act, du, 0.0)
-        dv = jnp.where(act, dv, 0.0)
-        du = _constrain(du, mesh, uvspec)
-        un, vn = _batched_recompress(u, v, du, dv, tol, scale)
-        u = jnp.where(act, un, u)
-        v = jnp.where(act, vn, v)
-        u = _constrain(u, mesh, uvspec)
-        v = _constrain(v, mesh, uvspec)
-        diag = _constrain(diag, mesh, dspec)
-        return diag, u, v
-
-    return lax.fori_loop(0, k_hi, body, (diag, u, v))
+            rh = rh[chunk:, chunk:]
+    return out_diag, out_u, out_v, out_ranks
 
 
 def dist_tlr_solve_lower(diag_l, u, v, z):
@@ -229,16 +236,46 @@ def dist_tlr_solve_lower(diag_l, u, v, z):
         z = z - jnp.where(below, delta, 0.0)
         return z, out
 
-    _, out = lax.fori_loop(0, T, body, (z, jnp.zeros_like(z)))
+    _, out = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
+                           (z, jnp.zeros_like(z)))
     return out.reshape(-1)
 
 
-def dist_tlr_loglik(t: TLRMatrix, z, *, tol: float = 1e-7, scale: float = 1.0,
-                    mesh=None, row_axes=("data",),
-                    super_panels: int = 1) -> LoglikResult:
-    diag_l, u, v = dist_tlr_cholesky(t.diag, t.u, t.v, tol=tol, scale=scale,
-                                     mesh=mesh, row_axes=row_axes,
-                                     super_panels=super_panels)
+def dist_tlr_loglik(t: TLRMatrix = None, z=None, *, locs=None, params=None,
+                    from_tiles: bool = False, tile_size: int = 0,
+                    max_rank: int = 64, nugget: float = 0.0,
+                    gen: str = "pallas", d_spatial: int = 2,
+                    tol: float = 1e-7, scale=None, mesh=None,
+                    row_axes=("data",), super_panels: int = 1) -> LoglikResult:
+    """Distributed TLR likelihood (Eq. 1 through the sharded TLR factor).
+
+    Two entry modes:
+
+      * ``dist_tlr_loglik(t, z)`` — factorize pre-compressed tiles.
+      * ``dist_tlr_loglik(None, z, locs=..., params=..., from_tiles=True)``
+        — the full streaming pipeline: generate + compress column panels
+        via dist_compress_tiles (never materializing dense Sigma), then
+        factorize and solve.  ``scale`` defaults to max(sigma2) + nugget,
+        matching the single-device generator-direct path.
+    """
+    if from_tiles:
+        if locs is None or params is None:
+            raise ValueError("from_tiles=True requires locs and params")
+        if scale is None:
+            scale = jnp.max(params.sigma2) + nugget
+        t = dist_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
+                                max_rank=max_rank, nugget=nugget, gen=gen,
+                                d_spatial=d_spatial, scale=scale, mesh=mesh,
+                                row_axes=row_axes)
+    elif t is None:
+        raise ValueError("pass a TLRMatrix, or locs/params with "
+                         "from_tiles=True")
+    if scale is None:
+        scale = 1.0
+    diag_l, u, v, _ = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=tol,
+                                        scale=scale, mesh=mesh,
+                                        row_axes=row_axes,
+                                        super_panels=super_panels)
     alpha = dist_tlr_solve_lower(diag_l, u, v, z)
     quad = jnp.sum(alpha * alpha)
     logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(diag_l, axis1=-2, axis2=-1)))
@@ -247,20 +284,26 @@ def dist_tlr_loglik(t: TLRMatrix, z, *, tol: float = 1e-7, scale: float = 1.0,
     return LoglikResult(ll, logdet, quad, None)
 
 
+# ---------------------------------------------------------------------------
+# Dry-run lowerables (launch/dryrun.py): the three pipeline phases, separately
+# compilable so the roofline can report GEN / compress / factorize costs.
+# ---------------------------------------------------------------------------
+
+
 def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
                        mesh, dtype=jnp.float32, row_axes=("data",),
                        super_panels: int = 1):
-    """(fn, input specs) for the dry-run: TLR Cholesky + solve from
-    pre-compressed tiles (generation/compression is a separate pipeline
-    stage; its cost is benchmarked by the matern_tile kernel)."""
-    row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+    """(fn, input specs) for the factorize + solve stage from pre-compressed
+    tiles.  Real per-tile ranks are threaded as an input — consumers must not
+    fabricate them (rank-0 strict-lower tiles would misread as empty; see the
+    fixed-kmax convention on TLRMatrix)."""
+    row = _row(row_axes)
 
-    def fn(diag, u, v, z):
+    def fn(diag, u, v, ranks, z):
         diag = _constrain(diag, mesh, P(row, None, None))
         u = _constrain(u, mesh, P(row, "model", None, None))
         v = _constrain(v, mesh, P(row, "model", None, None))
-        t = TLRMatrix(diag=diag, u=u, v=v,
-                      ranks=jnp.zeros((n_tiles, n_tiles), jnp.int32))
+        t = TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
         return dist_tlr_loglik(t, z, tol=tol, scale=1.0, mesh=mesh,
                                row_axes=row_axes, super_panels=super_panels)
 
@@ -268,5 +311,67 @@ def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
     specs = (jax.ShapeDtypeStruct((T, nb, nb), dtype),
              jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
              jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
+             jax.ShapeDtypeStruct((T, T), jnp.int32),
              jax.ShapeDtypeStruct((T * nb,), dtype))
+    return fn, specs
+
+
+def dist_tlr_gen_lowerable(n: int, p: int, params, *, tile_size: int,
+                           gen: str = "xla", mesh,
+                           dtype=jnp.float32, row_axes=("data",),
+                           d_spatial: int = 2):
+    """GEN phase alone: stream every column panel through the same fori_loop
+    as dist_compress_tiles but reduce each to a checksum (keeps the
+    generation live for cost analysis without the SVD).  The O(nb) diagonal
+    nugget-add is accounted to the compress phase, so no nugget here."""
+    row = _row(row_axes)
+    m = n * p
+    nb = choose_tile_size(m, tile_size, multiple_of=p)
+    nbl = nb // p
+    T = m // nb
+
+    def fn(locs):
+        def body(j, acc):
+            panel = build_sigma_column(locs, j, nbl, params,
+                                       d_spatial=d_spatial, gen=gen, block=nb)
+            panel = _constrain(panel, mesh, P(row, "model"))
+            return acc + jnp.sum(panel * panel)
+
+        return lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
+                             jnp.zeros((), dtype))
+
+    return fn, (jax.ShapeDtypeStruct((n, 2), dtype),)
+
+
+def dist_tlr_compress_lowerable(n: int, p: int, params, *, tile_size: int,
+                                max_rank: int, tol: float, nugget: float = 0.0,
+                                gen: str = "xla", mesh, dtype=jnp.float32,
+                                row_axes=("data",)):
+    """GEN + compress: locations -> sharded fixed-kmax D/U/V/ranks."""
+
+    def fn(locs):
+        t = dist_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
+                                max_rank=max_rank, nugget=nugget, gen=gen,
+                                mesh=mesh, row_axes=row_axes)
+        return t.diag, t.u, t.v, t.ranks
+
+    return fn, (jax.ShapeDtypeStruct((n, 2), dtype),)
+
+
+def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
+                                max_rank: int, tol: float, nugget: float = 0.0,
+                                gen: str = "xla", mesh, dtype=jnp.float32,
+                                row_axes=("data",), super_panels: int = 1):
+    """End-to-end generator-direct pipeline: (locs, z) -> GEN -> compress ->
+    factorize -> loglik, with real Matérn tiles (no random-spec stand-ins)."""
+
+    def fn(locs, z):
+        return dist_tlr_loglik(None, z, locs=locs, params=params,
+                               from_tiles=True, tile_size=tile_size,
+                               max_rank=max_rank, nugget=nugget, gen=gen,
+                               tol=tol, mesh=mesh, row_axes=row_axes,
+                               super_panels=super_panels)
+
+    specs = (jax.ShapeDtypeStruct((n, 2), dtype),
+             jax.ShapeDtypeStruct((n * p,), dtype))
     return fn, specs

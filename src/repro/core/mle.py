@@ -38,6 +38,12 @@ class MLEConfig:
     # Generator-direct TLR (tlr_compress_tiles): never builds the dense Sigma.
     # Requires locs (fit/make_objective thread them through automatically).
     tlr_from_tiles: bool = False
+    # Route the TLR backend through the distributed streaming pipeline
+    # (core/dist_tlr.py): dist_compress_tiles -> fori_loop TLR Cholesky.
+    # Generator-direct like tlr_from_tiles, but the whole evaluation is one
+    # SPMD program; on a single device it runs the same trace unsharded.
+    dist_tlr_from_tiles: bool = False
+    super_panels: int = 1           # >1: two-level dist factorization (§Perf)
     gen: str = "pallas"             # tile generator: pallas half-integer fast
                                     # path (per-pair XLA fallback) | xla
     tile_size: int = 0              # 0 -> auto (~sqrt(pn))
@@ -74,8 +80,10 @@ def unpack_params(x, p: int, profile: bool, nu_max: float = 4.0) -> MaternParams
     if profile:
         sigma2 = jnp.ones((p,), x.dtype)
     else:
-        sigma2 = jnp.exp(x[i:i + p]); i += p
-    a = jnp.exp(x[i]); i += 1
+        sigma2 = jnp.exp(x[i:i + p])
+        i += p
+    a = jnp.exp(x[i])
+    i += 1
     # Clipped-log nu keeps K_nu evaluations stable at simplex extremes.
     nu = jnp.clip(jnp.exp(x[i:i + p]), 1e-2, nu_max)
     i += p
@@ -108,6 +116,17 @@ def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig, locs=None):
         return exact_loglik(None, z, params, representation=cfg.representation,
                             nugget=cfg.nugget, dists=dists).loglik
     if cfg.backend == "tlr":
+        if cfg.dist_tlr_from_tiles:
+            if locs is None:
+                raise ValueError("dist_tlr_from_tiles requires locs "
+                                 "(Morton-ordered)")
+            from .dist_tlr import dist_tlr_loglik
+            return dist_tlr_loglik(None, z, locs=locs, params=params,
+                                   from_tiles=True, tile_size=cfg.tile_size,
+                                   max_rank=cfg.tlr_max_rank,
+                                   nugget=cfg.nugget, gen=cfg.gen,
+                                   tol=cfg.tlr_tol,
+                                   super_panels=cfg.super_panels).loglik
         from .tlr import tlr_loglik
         return tlr_loglik(dists, z, params, tol=cfg.tlr_tol,
                           max_rank=cfg.tlr_max_rank, tile_size=cfg.tile_size,
@@ -139,9 +158,14 @@ def make_objective(locs, z, cfg: MLEConfig, dists=None):
     """Negative log-likelihood over transformed parameters (jit-compiled).
 
     Callers must pass Morton-consistent (locs, z) for tiled backends;
-    ``fit`` handles that via apply_morton.
+    ``fit`` handles that via apply_morton.  The generator-direct TLR
+    backends (tlr_from_tiles / dist_tlr_from_tiles, non-profile) never read
+    the dense (n, n) distance matrix, so it is not built for them — at
+    production n it would be the largest allocation of the whole fit.
     """
-    if dists is None:
+    generator_direct = (cfg.backend == "tlr" and not cfg.profile and
+                        (cfg.tlr_from_tiles or cfg.dist_tlr_from_tiles))
+    if dists is None and not generator_direct:
         dists = pairwise_distances(locs)
     z = jnp.asarray(z)
     locs_j = None if locs is None else jnp.asarray(locs)

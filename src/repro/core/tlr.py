@@ -23,10 +23,10 @@ MXU; reported memory uses actual ranks, compute uses the padded rank.
 Operations implemented directly on the compressed representation:
 
   * tlr_compress_tiles / tlr_compress / tlr_to_dense
-  * tlr_cholesky                     (right-looking; the per-step trailing
-                                      update is one batched recompress over
-                                      all strict-lower pairs, not a Python
-                                      loop per column)
+  * tlr_cholesky                     (right-looking scan form: one traced
+                                      panel body under lax.fori_loop, shared
+                                      with the distributed factorization in
+                                      core/dist_tlr.py)
   * tlr_solve_lower                  (forward substitution with UV tiles)
   * tlr_loglik                       (Eq. 1 through the TLR factor;
                                       from_tiles=True is generator-direct)
@@ -45,13 +45,25 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding
 
 from .covariance import MaternParams, build_sigma, build_sigma_panel
 from .likelihood import LoglikResult
 
 
 class TLRMatrix(NamedTuple):
-    """Symmetric positive-definite matrix in TLR form (lower storage)."""
+    """Symmetric positive-definite matrix in TLR form (lower storage).
+
+    Fixed-kmax convention (DESIGN.md §2): ``u``/``v`` always carry kmax
+    columns; columns at index >= ranks[i, j] are zero-padded.  All compute
+    (Cholesky, solves, matvec) runs on the padded layout and is *independent*
+    of ``ranks`` — a tile whose rank reads 0 still participates with its
+    (all-zero) padded factors, so rank-0 entries outside the strict lower
+    triangle are structural, not "empty tiles".  ``ranks`` is reporting
+    metadata: memory_footprint / rank_distribution use it for actual-rank
+    accounting (Figs. 5-6).
+    """
 
     diag: jax.Array    # (T, nb, nb) dense diagonal tiles
     u: jax.Array       # (T, T, nb, kmax); [i, j] valid for i > j
@@ -261,30 +273,50 @@ def tlr_to_dense(t: TLRMatrix, symmetric: bool = True) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def _constrain(x, mesh, spec):
+    """with_sharding_constraint, or the identity when no mesh is given (so
+    the single-device and distributed paths share traced bodies verbatim)."""
+    if mesh is None or spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _batched_recompress(u1, v1, u2, v2, tol, scale):
+    """(B..., nb, k) pairs -> recompressed sum with rank <= kmax, batched.
+
+    QR(U')·QR(V') then SVD of the small core.  Returns (U, V, ranks) where
+    ranks counts the singular values kept (int32, shape B...).
+    """
+    kmax = u1.shape[-1]
+    ucat = jnp.concatenate([u1, u2], axis=-1)       # (..., nb, 2k)
+    vcat = jnp.concatenate([v1, v2], axis=-1)
+    qu, ru = jnp.linalg.qr(ucat)
+    qv, rv = jnp.linalg.qr(vcat)
+    core = ru @ jnp.swapaxes(rv, -1, -2)
+    cu, cs, cvt = jnp.linalg.svd(core)
+    # cs is sorted descending, so thresholding the first kmax values gives
+    # min(#kept, kmax) — the same rank the unbatched form reports.
+    mask = (cs[..., :kmax] > tol * scale)
+    s_m = jnp.where(mask, cs[..., :kmax], 0.0)
+    unew = jnp.einsum("...nk,...k->...nk", qu @ cu[..., :kmax], s_m)
+    vnew = qv @ jnp.swapaxes(cvt[..., :kmax, :], -1, -2)
+    vnew = jnp.where(mask[..., None, :], vnew, 0.0)
+    return unew, vnew, jnp.sum(mask, axis=-1).astype(jnp.int32)
+
+
 def recompress(u1, v1, u2, v2, tol: float, scale: float):
     """(u1 v1^T + u2 v2^T) -> (U, V, rank) with rank <= kmax (= u1 cols).
 
-    QR(U')·QR(V') then SVD of the small core; batched-friendly (vmap).
+    Unbatched reference entry point; the factorizations use the same math
+    through _batched_recompress inside the shared panel body.
     """
-    kmax = u1.shape[-1]
-    ucat = jnp.concatenate([u1, u2], axis=-1)       # (nb, 2k)
-    vcat = jnp.concatenate([v1, v2], axis=-1)
-    qu, ru = jnp.linalg.qr(ucat)                    # (nb, 2k), (2k, 2k)
-    qv, rv = jnp.linalg.qr(vcat)
-    core = ru @ rv.T
-    cu, cs, cvt = jnp.linalg.svd(core)
-    keep = cs > (tol * scale)
-    rank = jnp.minimum(jnp.sum(keep), kmax).astype(jnp.int32)
-    idx = jnp.arange(kmax)
-    mask = idx < rank
-    s_m = jnp.where(mask, cs[:kmax], 0.0)
-    unew = (qu @ cu[:, :kmax]) * s_m[None, :]
-    vnew = jnp.where(mask[None, :], qv @ cvt[:kmax, :].T, 0.0)
-    return unew, vnew, rank
+    return _batched_recompress(u1, v1, u2, v2, tol, scale)
 
 
 # ---------------------------------------------------------------------------
-# TLR Cholesky (right-looking; the paper's Fig. 1 dataflow on UV tiles)
+# TLR Cholesky (right-looking; the paper's Fig. 1 dataflow on UV tiles).
+# One traced panel body serves both the single-device scan form below and
+# the distributed SPMD factorization in core/dist_tlr.py.
 # ---------------------------------------------------------------------------
 
 
@@ -295,52 +327,119 @@ class TLRCholesky(NamedTuple):
     ranks: jax.Array
 
 
+def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
+                   mesh=None, dspec=None, uvspec=None):
+    """One right-looking panel step k on rank-padded (kmax) trailing blocks.
+
+    The four paper-Fig.-1 task classes, with ``k`` a *traced* loop index so
+    the whole factorization is one trace regardless of T:
+
+        POTRF — factor diagonal tile (k, k)
+        TRSM  — triangular-solve column k's V tiles (masked to rows i > k)
+        SYRK  — batched TLR-MM onto the trailing diagonal tiles
+        GEMM  — batched TLR-MM + QR/SVD recompression of trailing tiles
+                i > j > k (one _batched_recompress call)
+
+    Static shapes force masked overcompute; ``pairs`` selects how the GEMM
+    batch is laid out:
+
+      * pairs=(il, jl) — gather the static strict-lower index set, batch of
+        T(T-1)/2 (the single-device form; ~2.4x less QR/SVD work than the
+        full grid, measured 387 ms vs 625 ms on the T=6/nb=78 CPU case).
+      * pairs=None — masked full-(T, T)-grid batch that never reshuffles the
+        2-D tile layout (the SPMD form: each device recompresses its own
+        P(row, "model") shard; a gather over pair indices would re-shard
+        every step).
+    """
+    T, nb = diag.shape[0], diag.shape[1]
+    kmax = u.shape[-1]
+    rows = jnp.arange(T)
+    # ---- POTRF on tile (k, k): replicated small factorization.
+    dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
+    lkk = jnp.linalg.cholesky(dkk)
+    row_is_k = (rows == k)[:, None, None]
+    # ---- TRSM on panel column k (V only; U untouched — §5.3).
+    vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)       # (T, nb, kmax)
+    vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
+        lkk, b, left_side=True, lower=True))(vk)
+    below = (rows > k)[:, None, None]
+    vk = jnp.where(below, vk_solved, vk)
+    v = lax.dynamic_update_index_in_dim(v, vk, k, 1)
+    uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)       # (T, nb, kmax)
+
+    # ---- SYRK onto trailing diagonal tiles i > k: D_i -= U (V^T V) U^T.
+    w = jnp.einsum("tnk,tnl->tkl", vk, vk)
+    upd = jnp.einsum("tnk,tkl,tml->tnm", uk, w, uk)
+    diag = diag - jnp.where(below, upd, 0.0)
+    diag = jnp.where(row_is_k, lkk[None], diag)
+
+    # ---- GEMM + recompress: Delta A[i,j] = -U_ik (V_ik^T V_jk) U_jk^T.
+    if pairs is not None:
+        il, jl = pairs
+        wij = jnp.einsum("lnk,lnq->lkq", vk[il], vk[jl])          # V_ik^T V_jk
+        du = jnp.einsum("lnk,lkq->lnq", uk[il], wij)              # U_ik W
+        dv = -uk[jl]
+        act = (jl > k)[:, None, None]
+        du = jnp.where(act, du, 0.0)
+        dv = jnp.where(act, dv, 0.0)
+        u0, v0 = u[il, jl], v[il, jl]
+        un, vn, rn = _batched_recompress(u0, v0, du, dv, tol, scale)
+        u = u.at[il, jl].set(jnp.where(act, un, u0))
+        v = v.at[il, jl].set(jnp.where(act, vn, v0))
+        ranks = ranks.at[il, jl].set(
+            jnp.where(act[:, 0, 0], rn, ranks[il, jl]))
+    else:
+        wij = jnp.einsum("ink,jnl->ijkl", vk, vk)                 # (T,T,k,k)
+        du = jnp.einsum("ijkl,ink->ijnl", wij, uk)                # U_ik W
+        dv = jnp.broadcast_to(-uk[None], (T, T, nb, kmax))        # -U_jk
+        act = ((rows[:, None] > rows[None, :]) &
+               (rows[None, :] > k))[..., None, None]
+        du = jnp.where(act, du, 0.0)
+        dv = jnp.where(act, dv, 0.0)
+        du = _constrain(du, mesh, uvspec)
+        un, vn, rn = _batched_recompress(u, v, du, dv, tol, scale)
+        u = jnp.where(act, un, u)
+        v = jnp.where(act, vn, v)
+        ranks = jnp.where(act[..., 0, 0], rn, ranks)
+    u = _constrain(u, mesh, uvspec)
+    v = _constrain(v, mesh, uvspec)
+    diag = _constrain(diag, mesh, dspec)
+    return diag, u, v, ranks
+
+
+def panel_loop(diag, u, v, ranks, k_hi: int, *, tol, scale, pairs=None,
+               mesh=None, dspec=None, uvspec=None):
+    """Run the shared panel body for k in [0, k_hi) under one lax.fori_loop
+    (static trip count, so XLA lowers it as a scan — one traced body)."""
+    def body(k, carry):
+        return tlr_panel_body(k, *carry, tol=tol, scale=scale, pairs=pairs,
+                              mesh=mesh, dspec=dspec, uvspec=uvspec)
+
+    # int32 bounds keep the loop index s32 under jax_enable_x64 — the SPMD
+    # partitioner rejects mixed s64/s32 index arithmetic in dynamic updates.
+    return lax.fori_loop(jnp.int32(0), jnp.int32(k_hi), body,
+                         (diag, u, v, ranks))
+
+
 def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRCholesky:
     """Factor A = L L^T keeping off-diagonal tiles compressed.
 
-    Python-unrolled over tiles (single-host path; the distributed fori_loop
-    variant lives in core/dist_tlr.py).  Row ranges are contiguous, so every
-    inner task batch is a single vmapped Level-3 call — the paper's DAG tasks
-    become static batched kernels (DESIGN.md §2).
+    Scan form: a single traced panel step under lax.fori_loop (trace size
+    O(1) in T, versus the former Python-unrolled O(T) trace with shrinking
+    slices), shared verbatim with the distributed factorization in
+    core/dist_tlr.py.  Trailing blocks are rank-padded to kmax so every step
+    has static shapes; the GEMM batch covers the fixed strict-lower index
+    set with inactive (j <= k) pairs masked to zero updates.  The last
+    column needs only its POTRF, which runs outside the loop.
     """
     T = t.n_tiles
     diag, u, v, ranks = t.diag, t.u, t.v, t.ranks
-
-    for k in range(T):
-        lkk = jnp.linalg.cholesky(diag[k])                       # POTRF
-        diag = diag.at[k].set(lkk)
-        if k + 1 >= T:
-            break
-        # TRSM on the k-th panel: V[i,k] <- L_kk^{-1} V[i,k] for i > k.
-        vpanel = v[k + 1:, k]                                     # (r, nb, kmax)
-        vpanel = jax.vmap(lambda vv: jax.scipy.linalg.solve_triangular(
-            lkk, vv, lower=True))(vpanel)
-        v = v.at[k + 1:, k].set(vpanel)
-        upanel = u[k + 1:, k]                                     # (r, nb, kmax)
-
-        # SYRK on diagonal tiles: D[i] -= U (V^T V) U^T.
-        w = jnp.einsum("rnk,rnl->rkl", vpanel, vpanel)            # (r,kmax,kmax)
-        upd = jnp.einsum("rnk,rkl,rml->rnm", upanel, w, upanel)
-        diag = diag.at[k + 1:].add(-upd)
-
-        # GEMM + recompression on ALL trailing strict-lower tiles at once:
-        # Delta A[i,j] = -U_ik (V_ik^T V_jk) U_jk^T for i > j > k.  One
-        # batched einsum + one vmapped recompress per step k (the former
-        # per-column Python loop traced O(T^2) recompress calls; this traces
-        # O(T), cutting trace size and compile time).
-        il, jl = np.tril_indices(T - (k + 1), k=-1)
-        if len(il):
-            gi, gj = il + (k + 1), jl + (k + 1)
-            w = jnp.einsum("lnk,lnq->lkq", vpanel[il], vpanel[jl])  # V_ik^T V_jk
-            du = jnp.einsum("lnk,lkq->lnq", upanel[il], w)          # U_ik W
-            dv = -upanel[jl]                                        # -U_jk
-            un, vn, rn = jax.vmap(
-                lambda a, b, c, d: recompress(a, b, c, d, tol, scale)
-            )(u[gi, gj], v[gi, gj], du, dv)
-            u = u.at[gi, gj].set(un)
-            v = v.at[gi, gj].set(vn)
-            ranks = ranks.at[gi, gj].set(rn)
-
+    il, jl = np.tril_indices(T, k=-1)
+    if len(il):
+        pairs = (jnp.asarray(il), jnp.asarray(jl))
+        diag, u, v, ranks = panel_loop(diag, u, v, ranks, T - 1, tol=tol,
+                                       scale=scale, pairs=pairs)
+    diag = diag.at[T - 1].set(jnp.linalg.cholesky(diag[T - 1]))
     return TLRCholesky(diag=diag, u=u, v=v, ranks=ranks)
 
 

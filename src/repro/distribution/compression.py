@@ -19,9 +19,6 @@ what matters at 1000+ nodes.  Exposed two ways:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

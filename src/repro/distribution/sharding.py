@@ -20,7 +20,6 @@ FSDP gather path).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models.shardspecs import layer_specs

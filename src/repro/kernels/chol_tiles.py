@@ -44,8 +44,8 @@ def _potrf_kernel(a_ref, out_ref):
         a = a.at[:, j].set(colj.at[j].set(pivot))
         return a
 
-    l = lax.fori_loop(0, nb, step, a)
-    out_ref[0] = jnp.where(rows >= cols, l, 0.0).astype(out_ref.dtype)
+    lfac = lax.fori_loop(0, nb, step, a)
+    out_ref[0] = jnp.where(rows >= cols, lfac, 0.0).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -70,14 +70,14 @@ def potrf(a, *, interpret: bool = True):
 
 def _trsm_kernel(l_ref, b_ref, out_ref):
     ct = jnp.promote_types(b_ref.dtype, jnp.float32)
-    l = l_ref[0].astype(ct)             # (nb, nb) lower
+    lo = l_ref[0].astype(ct)            # (nb, nb) lower
     x = b_ref[0].astype(ct)             # (nb, m)
-    nb = l.shape[0]
+    nb = lo.shape[0]
 
     def step(i, x):
-        # l is lower triangular, so l[i] @ x = sum_{j<=i} l[i,j] x[j]; remove
-        # the diagonal term to get the strict forward-substitution sum.
-        xi = (x[i] - (l[i] @ x - l[i, i] * x[i])) / l[i, i]
+        # lo is lower triangular, so lo[i] @ x = sum_{j<=i} lo[i,j] x[j];
+        # remove the diagonal term for the strict forward-substitution sum.
+        xi = (x[i] - (lo[i] @ x - lo[i, i] * x[i])) / lo[i, i]
         return x.at[i].set(xi)
 
     x = lax.fori_loop(0, nb, step, x)
@@ -85,8 +85,8 @@ def _trsm_kernel(l_ref, b_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def trsm(l, b, *, interpret: bool = True):
-    """Batched solve L X = B: l (B, nb, nb) lower, b (B, nb, m)."""
+def trsm(lo, b, *, interpret: bool = True):
+    """Batched solve L X = B: lo (B, nb, nb) lower, b (B, nb, m)."""
     bsz, nb, m = b.shape
     spec_l = pl.BlockSpec((1, nb, nb), lambda i: (i, 0, 0))
     spec_b = pl.BlockSpec((1, nb, m), lambda i: (i, 0, 0))
@@ -97,7 +97,7 @@ def trsm(l, b, *, interpret: bool = True):
         in_specs=[spec_l, spec_b],
         out_specs=spec_b,
         interpret=interpret,
-    )(l, b)
+    )(lo, b)
 
 
 # ---------------------------------------------------------------------------

@@ -19,12 +19,23 @@ panel into VMEM plus two SMEM scalars (1/a, amp) and writes a (bn, bm) tile.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 _SUPPORTED_NU = (0.5, 1.5, 2.5)
+
+
+def _default_interpret() -> bool:
+    """Resolve ``interpret=None``: compiled Mosaic on a real TPU backend,
+    interpreter everywhere else (CPU tests / dry-run hosts).  The
+    REPRO_PALLAS_INTERPRET env var (0/1) overrides the auto-detection."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
 
 
 def _matern_halfint_body(u, nu: float):
@@ -70,17 +81,21 @@ def _fit_block(n: int, want: int) -> int:
                                              "interpret"))
 def matern_tile(locs_a, locs_b, inv_range, amp, *, nu: float,
                 block_n: int = 256, block_m: int = 256,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """Covariance tile C[r, c] = amp * M_nu(||a_r - b_c|| * inv_range).
 
     locs_a: (n, 2), locs_b: (m, 2).  Block sizes are rounded down to the
     nearest divisor of n / m, so callers may hand arbitrary panel shapes
     (the TLR strict-lower panels are (T-1-j)*nbl tall).  nu must be a static
-    half-integer in {0.5, 1.5, 2.5}.
+    half-integer in {0.5, 1.5, 2.5}.  ``interpret=None`` auto-selects:
+    compiled Mosaic on TPU, interpreter elsewhere (override with
+    REPRO_PALLAS_INTERPRET).
     """
     if nu not in _SUPPORTED_NU:
         raise ValueError(f"kernel supports nu in {_SUPPORTED_NU}; general nu "
                          "uses the XLA path (core.matern)")
+    if interpret is None:
+        interpret = _default_interpret()
     n, m = locs_a.shape[0], locs_b.shape[0]
     bn, bm = _fit_block(n, block_n), _fit_block(m, block_m)
     dtype = jnp.result_type(locs_a.dtype, locs_b.dtype)

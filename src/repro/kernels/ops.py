@@ -54,11 +54,11 @@ def potrf(a, *, impl: str | None = None):
     return _potrf_pallas(a, interpret=(mode == "interpret"))
 
 
-def trsm(l, b, *, impl: str | None = None):
+def trsm(lo, b, *, impl: str | None = None):
     mode = _mode(impl)
     if mode == "ref":
-        return ref.trsm_ref(l, b)
-    return _trsm_pallas(l, b, interpret=(mode == "interpret"))
+        return ref.trsm_ref(lo, b)
+    return _trsm_pallas(lo, b, interpret=(mode == "interpret"))
 
 
 def syrk(c, a, *, impl: str | None = None):

@@ -29,10 +29,10 @@ def potrf_ref(a):
     return jnp.linalg.cholesky(a)
 
 
-def trsm_ref(l, b):
+def trsm_ref(lo, b):
     """X = L^{-1} B (batched): forward substitution on tile columns."""
     return jax.vmap(lambda ll, bb: jax.scipy.linalg.solve_triangular(
-        ll, bb, lower=True))(l, b)
+        ll, bb, lower=True))(lo, b)
 
 
 def syrk_ref(c, a):

@@ -27,8 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..configs import (ARCHS, GEOSTAT_SHAPES, LM_SHAPES, get_arch, get_shape,
-                       iter_cells)
+from ..configs import get_arch, get_shape, iter_cells
 from ..configs.base import ArchConfig, GeoStatConfig
 from . import roofline as rl
 from .mesh import make_production_mesh
@@ -62,16 +61,14 @@ def input_specs(arch_name: str, shape_name: str) -> dict:
     cfg = get_arch(arch_name)
     shape = get_shape(cfg, shape_name)
     if isinstance(cfg, GeoStatConfig):
+        # Every geostat cell is driven from location coordinates: the TLR
+        # path streams generator-direct tiles (dist_compress_tiles), the
+        # exact/predict paths assemble panels from the same inputs.  The
+        # factorize-only stage's pre-compressed tile specs live in
+        # dist_tlr_lowerable (see tlr_phase_reports).
         m = shape.matrix_dim
-        if cfg.backend == "exact" or shape.kind == "predict":
-            return dict(locs=jax.ShapeDtypeStruct((shape.n_locations, 2),
-                                                  jnp.float32),
-                        z=jax.ShapeDtypeStruct((m,), jnp.float32))
-        nb, kmax = cfg.tile_size, cfg.max_rank
-        t = m // nb
-        return dict(diag=jax.ShapeDtypeStruct((t, nb, nb), jnp.float32),
-                    u=jax.ShapeDtypeStruct((t, t, nb, kmax), jnp.float32),
-                    v=jax.ShapeDtypeStruct((t, t, nb, kmax), jnp.float32),
+        return dict(locs=jax.ShapeDtypeStruct((shape.n_locations, 2),
+                                              jnp.float32),
                     z=jax.ShapeDtypeStruct((m,), jnp.float32))
     b, s = shape.global_batch, shape.seq_len
     specs = {}
@@ -141,11 +138,10 @@ def _cache_specs_tree(cfg, caches_shape, mesh, batch):
 
 def build_lm_cell(cfg: ArchConfig, shape, mesh, attn_impl: str,
                   microbatches: int = 1):
-    from ..distribution.sharding import (data_specs, param_specs,
-                                         shardings_of)
+    from ..distribution.sharding import param_specs, shardings_of
     from ..models.transformer import decode_step, forward, init_caches, \
         init_model
-    from ..training.optimizer import adamw_init, opt_state_specs
+    from ..training.optimizer import adamw_init
     from ..training.train_step import TrainConfig, make_train_step
 
     with_embeds = cfg.frontend != "none"
@@ -205,17 +201,22 @@ def build_lm_cell(cfg: ArchConfig, shape, mesh, attn_impl: str,
     return lowered, mf
 
 
-def build_geostat_cell(cfg: GeoStatConfig, shape, mesh, variant: str = ""):
+def _geostat_params():
     from ..core.covariance import MaternParams
-    from ..core.dist_cholesky import (dist_cokrige_lowerable,
-                                      dist_loglik_lowerable)
-    from ..core.dist_tlr import dist_tlr_lowerable
 
     # nu = (0.5, 2.5) -> all pair orders {0.5, 1.5, 2.5} take the closed-form
     # GEN path (the production hot path; general nu stays on the CPU/XLA MLE
     # path — DESIGN.md §2).
-    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=2.5, beta=0.5,
-                                    dtype=jnp.float32)
+    return MaternParams.bivariate(a=0.09, nu11=0.5, nu22=2.5, beta=0.5,
+                                  dtype=jnp.float32)
+
+
+def build_geostat_cell(cfg: GeoStatConfig, shape, mesh, variant: str = ""):
+    from ..core.dist_cholesky import (dist_cokrige_lowerable,
+                                      dist_loglik_lowerable)
+    from ..core.dist_tlr import dist_tlr_pipeline_lowerable
+
+    params = _geostat_params()
     row = _row_axes(mesh)
     m = shape.matrix_dim
     mf = rl.geostat_model_flops(shape, cfg.backend, cfg.tile_size,
@@ -242,17 +243,74 @@ def build_geostat_cell(cfg: GeoStatConfig, shape, mesh, variant: str = ""):
         lowered = jax.jit(fn, in_shardings=sh).lower(*specs)
         return lowered, mf
 
-    nb, kmax = cfg.tile_size, cfg.max_rank
-    t = m // nb
-    fn, specs = dist_tlr_lowerable(t, nb, kmax, tol=cfg.tol, mesh=mesh,
-                                   row_axes=row,
-                                   super_panels=cfg.super_panels)
-    sh = (NamedSharding(mesh, P(row, None, None)),
-          NamedSharding(mesh, P(row, "model", None, None)),
-          NamedSharding(mesh, P(row, "model", None, None)),
+    # TLR MLE: the full generator-direct streaming pipeline from location
+    # coordinates (GEN -> compress -> factorize -> solve).  Real Matérn
+    # column panels feed dist_compress_tiles; the former random-spec
+    # pre-compressed-tile stand-ins are gone (they remain available through
+    # dist_tlr_lowerable for the factorize-phase report below).
+    fn, specs = dist_tlr_pipeline_lowerable(
+        shape.n_locations, shape.p, params, tile_size=cfg.tile_size,
+        max_rank=cfg.max_rank, tol=cfg.tol, nugget=1e-8, gen="xla",
+        mesh=mesh, row_axes=row, super_panels=cfg.super_panels)
+    sh = (NamedSharding(mesh, P(row, None)),
           NamedSharding(mesh, P(row)))
     lowered = jax.jit(fn, in_shardings=sh).lower(*specs)
     return lowered, mf
+
+
+def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
+    """Compile the three TLR pipeline stages separately and return
+    trip-corrected per-phase costs: GEN (panel generation only),
+    gen_compress (GEN + SVD truncation), factorize (Cholesky + solve from
+    pre-compressed tiles), plus the derived compress_only difference.
+
+    Each stage is a fori_loop whose body XLA's cost_analysis counts ONCE, so
+    every phase gets its own trip multiplier: T for the generation and
+    compression loops, T/S per unrolled super-step for the factorization
+    (whose trace already contains S body copies)."""
+    from ..core.dist_tlr import (dist_tlr_compress_lowerable,
+                                 dist_tlr_gen_lowerable, dist_tlr_lowerable)
+
+    params = _geostat_params()
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    nb, kmax = cfg.tile_size, cfg.max_rank
+    t_tiles = m // nb
+    fac_trips = max(t_tiles // max(cfg.super_panels, 1), 1)
+
+    gen_fn, gen_specs = dist_tlr_gen_lowerable(
+        shape.n_locations, shape.p, params, tile_size=nb,
+        gen="xla", mesh=mesh, row_axes=row)
+    comp_fn, comp_specs = dist_tlr_compress_lowerable(
+        shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
+        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row)
+    fac_fn, fac_specs = dist_tlr_lowerable(
+        t_tiles, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
+        super_panels=cfg.super_panels)
+
+    locs_sh = (NamedSharding(mesh, P(row, None)),)
+    tile_sh = (NamedSharding(mesh, P(row, None, None)),
+               NamedSharding(mesh, P(row, "model", None, None)),
+               NamedSharding(mesh, P(row, "model", None, None)),
+               NamedSharding(mesh, P(row, "model")),
+               NamedSharding(mesh, P(row)))
+    cells = dict(
+        gen=(gen_fn, gen_specs, locs_sh, t_tiles),
+        gen_compress=(comp_fn, comp_specs, locs_sh, t_tiles),
+        factorize=(fac_fn, fac_specs, tile_sh, fac_trips),
+    )
+    out = {}
+    for name, (fn, specs, sh, trips) in cells.items():
+        comp = jax.jit(fn, in_shardings=sh).lower(*specs).compile()
+        ca = rl.cost_analysis_dict(comp)
+        coll = rl.collective_bytes(comp.as_text())
+        out[name] = dict(flops=float(ca.get("flops", 0.0)) * trips,
+                         bytes=float(ca.get("bytes accessed", 0.0)) * trips,
+                         coll=float(coll["total"]) * trips, trips=trips)
+    out["compress_only"] = {
+        k: max(out["gen_compress"][k] - out["gen"][k], 0.0)
+        for k in ("flops", "bytes", "coll")}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -323,18 +381,19 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
     # Trip-count-corrected per-device costs.
     override = None
     correction = "none"
+    phases = None
     if correct_costs and isinstance(cfg, GeoStatConfig):
         if cfg.backend == "tlr" and shape.kind != "predict":
-            # fori bodies are counted once; with S super-panels each inner
-            # loop runs T/S trips (S=1: plain xT; outside part negligible).
+            # Phase-separated corrections: the e2e trace contains the
+            # compression fori (T trips) and the factorization fori (T/S
+            # trips per unrolled super-step), so a single multiplier cannot
+            # be exact for S > 1.  Compile each phase alone, correct each by
+            # its own trip count, and report the pipeline as their sum.
             t_tiles = shape.matrix_dim // cfg.tile_size
-            trips = max(t_tiles // max(cfg.super_panels, 1), 1)
-            ca = rl.cost_analysis_dict(compiled)
-            coll = rl.collective_bytes(compiled.as_text())
-            override = dict(flops=float(ca.get("flops", 0)) * trips,
-                            bytes=float(ca.get("bytes accessed", 0)) * trips,
-                            coll=float(coll["total"]) * trips)
-            correction = f"fori_x{trips}"
+            phases = tlr_phase_reports(cfg, shape, mesh)
+            override = {k: phases["gen_compress"][k] + phases["factorize"][k]
+                        for k in ("flops", "bytes", "coll")}
+            correction = f"phase-sum(fori_x{t_tiles})"
         # exact/predict paths are python-unrolled: measured is exact.
     elif correct_costs:
         override = cost_extrapolated(cfg, shape, mesh, attn_impl)
@@ -345,6 +404,12 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
     rec = report.to_dict()
     rec.update(lower_s=t_lower, compile_s=t_compile, attn_impl=attn_impl,
                variant=variant, status="ok", cost_correction=correction)
+    if phases is not None:
+        rec["tlr_phases"] = phases
+        for name in ("gen", "gen_compress", "compress_only", "factorize"):
+            ph = phases[name]
+            print(f"tlr_phase {name:14s} flops={ph['flops']:.4g} "
+                  f"bytes={ph['bytes']:.4g} coll={ph['coll']:.4g}")
 
     print(f"== {arch_name} x {shape_name} x {mesh_name} [{variant}] ==")
     print("memory_analysis:", compiled.memory_analysis())

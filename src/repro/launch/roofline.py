@@ -24,7 +24,6 @@ collective bytes are partitioning-determined and transfer.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 PEAK_FLOPS = 197e12          # bf16 per chip
@@ -242,8 +241,12 @@ def geostat_model_flops(shape, backend: str, tile_size: int, max_rank: int) -> f
     """Useful flops of one MLE iteration (or a cokriging prediction batch).
 
     exact: (1/3) m^3 Cholesky + m^2 solve     (m = p*n)
-    tlr:   T^3/6 TLR-MM-chain tasks of 36 nb kmax^2 each (paper §5.3 model)
+    tlr:   generator GEN (~12 flops per Sigma entry over T column panels)
+           + compression SVDs (~(8/3) nb^3 per strict-lower tile)
+           + T^3/6 TLR-MM-chain tasks of 36 nb kmax^2 each (paper §5.3 model)
            + T dense POTRFs + recompression QR/SVD (2 QRs of (nb, 2k)).
+           The GEN/compress terms joined the model when the dry-run cell
+           became the end-to-end streaming pipeline (dist_compress_tiles).
     predict: exact Cholesky + 2 triangular solves for 1 + npred*p RHS.
     """
     m = shape.matrix_dim
@@ -254,10 +257,12 @@ def geostat_model_flops(shape, backend: str, tile_size: int, max_rank: int) -> f
         return m ** 3 / 3.0 + 2.0 * m * m
     nb, k = tile_size, max_rank
     t = m // nb
+    gen = 12.0 * m * m
+    svd = (t * (t - 1) / 2.0) * (8.0 / 3.0) * nb ** 3
     tlr_mm = (t ** 3 / 6.0) * 36.0 * nb * k * k
     potrf = t * nb ** 3 / 3.0
     recompress = (t ** 3 / 6.0) * 2 * (2 * nb * (2 * k) ** 2)
-    return tlr_mm + potrf + recompress
+    return gen + svd + tlr_mm + potrf + recompress
 
 
 def format_report_row(r: RooflineReport) -> str:

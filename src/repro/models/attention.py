@@ -16,7 +16,6 @@ supports ring-buffer (windowed) caches.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -107,7 +106,7 @@ def _chunked_attention(q, k, v, *, causal, window, chunk: int = 1024):
     qpos = jnp.arange(sq, dtype=jnp.int32) + (skv - sq)
 
     def step(carry, inputs):
-        acc, m, l = carry
+        acc, m, lsum = carry
         kblk, vblk, ki = inputs
         kpos = ki * chunk + jnp.arange(chunk, dtype=jnp.int32)
         s = jnp.einsum("bqmgd,bkmd->bmgqk", qf, kblk)
@@ -120,20 +119,20 @@ def _chunked_attention(q, k, v, *, causal, window, chunk: int = 1024):
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         corr = jnp.exp(m - m_new)
-        l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        lsum_new = corr * lsum + jnp.sum(p, axis=-1, keepdims=True)
         pv = jnp.einsum("bmgqk,bkmd->bmgqd", p, vblk)
         acc_new = acc * corr[..., 0][..., None] + pv
-        return (acc_new, m_new, l_new), None
+        return (acc_new, m_new, lsum_new), None
 
     acc0 = jnp.zeros((b, kvh, group, sq, hd), jnp.float32)
     m0 = jnp.full((b, kvh, group, sq, 1), -1e30, jnp.float32)
     l0 = jnp.zeros((b, kvh, group, sq, 1), jnp.float32)
     ks = jnp.moveaxis(kc, 1, 0)
     vs = jnp.moveaxis(vc, 1, 0)
-    (acc, m, l), _ = jax.lax.scan(
+    (acc, m, lsum), _ = jax.lax.scan(
         step, (acc0, m0, l0), (ks, vs, jnp.arange(nchunks, dtype=jnp.int32)),
         unroll=settings.scan_unroll())
-    out = acc / jnp.maximum(l[..., 0][..., None], 1e-30)
+    out = acc / jnp.maximum(lsum[..., 0][..., None], 1e-30)
     out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)
     return out.astype(q.dtype)
 

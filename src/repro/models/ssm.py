@@ -109,10 +109,10 @@ def ssd_chunked(xh, dt, a_log_h, bmat, cmat, chunk: int):
     cc = jnp.repeat(cmat.reshape(b, nc, chunk, g, n), rep, axis=3)
 
     # 1. Intra-chunk (diagonal block) term.
-    l = jnp.exp(_segsum(jnp.moveaxis(ac, 3, 2)))                # (B,nc,H,Q,Q)
+    ldec = jnp.exp(_segsum(jnp.moveaxis(ac, 3, 2)))             # (B,nc,H,Q,Q)
     cb = jnp.einsum("bzqhn,bzkhn->bzhqk", cc, bc)
     y_diag = jnp.einsum("bzhqk,bzhqk,bzkhp->bzqhp",
-                        cb, l, xc)
+                        cb, ldec, xc)
 
     # 2. Per-chunk final states.
     a_cum = jnp.cumsum(ac, axis=2)                              # (B,nc,Q,H)
@@ -180,8 +180,9 @@ def ssm_block(params: SSMParams, x, cfg, state=None):
         q = cfg.ssm_chunk
         pad = (-s) % q
         if pad:
-            zf = lambda arr: jnp.pad(arr, ((0, 0), (0, pad)) + ((0, 0),) *
-                                     (arr.ndim - 2))
+            def zf(arr):
+                return jnp.pad(arr, ((0, 0), (0, pad)) + ((0, 0),) *
+                               (arr.ndim - 2))
             xh_p, dt_p, b_p, c_p = zf(xh), zf(dt), zf(bmat), zf(cmat)
         else:
             xh_p, dt_p, b_p, c_p = xh, dt, bmat, cmat

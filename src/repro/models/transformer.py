@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from . import settings
-from .attention import (AttentionParams, init_attention, init_attention_cache,
+from .attention import (init_attention, init_attention_cache,
                         multihead_attention)
 from .common import dense_init, dtype_of, embed_init, rms_norm, take_embedding
 from .mlp import init_mlp, mlp

@@ -7,7 +7,6 @@ a 4k one on the sub-quadratic architectures (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

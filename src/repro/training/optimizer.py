@@ -38,8 +38,11 @@ def adamw_init(params) -> AdamWState:
     # copy=True: when params are already f32 (CPU test configs) astype would
     # alias the same buffer, and donating params+master then aborts with
     # "attempt to donate the same buffer twice".
-    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return jnp.array(p, dtype=jnp.float32, copy=True)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       master=jax.tree.map(f32, params),
                       m=jax.tree.map(zeros, params),

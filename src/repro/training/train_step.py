@@ -8,17 +8,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..distribution.compression import quantize_dequantize_psum_sim
-from ..distribution.sharding import (batch_axes, data_specs, param_specs,
+from ..distribution.sharding import (data_specs, param_specs,
                                      shardings_of)
 from ..models.transformer import forward
-from .optimizer import AdamWConfig, AdamWState, adamw_update, opt_state_specs
+from .optimizer import AdamWConfig, adamw_update, opt_state_specs
 
 
 @dataclasses.dataclass(frozen=True)

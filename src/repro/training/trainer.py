@@ -18,9 +18,8 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Callable
+from typing import Callable
 
-import jax
 import numpy as np
 
 from ..checkpointing.checkpoint import (AsyncCheckpointer, latest_step,

@@ -1,0 +1,69 @@
+"""The CI perf-trajectory gate (benchmarks/check_bench.py)."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="module")
+def check_bench():
+    path = os.path.join(_ROOT, "benchmarks", "check_bench.py")
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _artifact(**overrides):
+    art = dict(
+        m=288, tile_size=72, tol=1e-7, max_rank=48, quick=True,
+        gen_time_us=5e4, compress_time_us=1e5, svd_time_us=5e4,
+        cholesky_time_us=2e5, dist_compress_time_us=3e4,
+        dist_loglik_time_us=9e4,
+        tlr_bytes=456192, dense_bytes=663552, peak_tile_bytes=580608,
+        loglik_exact=-186.95, loglik_tlr=-186.9501,
+        loglik_delta_vs_exact=2e-5,
+        loglik_dist=-186.9501, loglik_delta_dist_vs_exact=2e-5,
+    )
+    art.update(overrides)
+    return art
+
+
+def test_good_artifact_passes(check_bench):
+    assert check_bench.check_artifact(_artifact()) == []
+
+
+def test_delta_over_threshold_fails(check_bench):
+    errs = check_bench.check_artifact(_artifact(loglik_delta_vs_exact=2e-3))
+    assert any("loglik_delta_vs_exact" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(loglik_delta_dist_vs_exact=5e-3))
+    assert any("loglik_delta_dist_vs_exact" in e for e in errs)
+    # a looser explicit threshold admits the same artifact
+    assert check_bench.check_artifact(
+        _artifact(loglik_delta_vs_exact=2e-3), max_delta=1e-2) == []
+
+
+def test_missing_or_bad_fields_fail(check_bench):
+    art = _artifact()
+    del art["gen_time_us"]
+    errs = check_bench.check_artifact(art)
+    assert any("missing key: gen_time_us" in e for e in errs)
+    errs = check_bench.check_artifact(_artifact(cholesky_time_us=0.0))
+    assert any("cholesky_time_us" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(loglik_delta_vs_exact=float("nan")))
+    assert any("not finite" in e for e in errs)
+
+
+def test_cli_on_real_and_broken_artifacts(check_bench, tmp_path):
+    good = tmp_path / "BENCH_tlr.json"
+    good.write_text(json.dumps(_artifact()))
+    assert check_bench.main([str(good)]) == 0
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_artifact(loglik_delta_vs_exact=1.0)))
+    assert check_bench.main([str(bad)]) == 1
+    assert check_bench.main([str(tmp_path / "missing.json")]) == 1

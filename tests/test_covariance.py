@@ -3,8 +3,6 @@ import numpy as np
 import pytest
 import scipy.special as sps
 
-import jax.numpy as jnp
-
 from repro.core import covariance as cov
 from repro.core.simulate import grid_locations, uniform_locations
 
@@ -69,7 +67,7 @@ def test_representations_are_permutations():
     s2 = np.asarray(cov.build_sigma(locs, params, representation="II"))
     n, p = 17, 2
     # perm maps rep-II index (i*n + l) -> rep-I index (l*p + i)
-    perm = np.array([l * p + i for i in range(p) for l in range(n)])
+    perm = np.array([loc * p + i for i in range(p) for loc in range(n)])
     np.testing.assert_allclose(s1[np.ix_(perm, perm)], s2, rtol=1e-12)
     # same determinant => identical likelihoods (paper §5.2 equivalence)
     np.testing.assert_allclose(np.linalg.slogdet(s1)[1],
@@ -92,8 +90,8 @@ def test_c0_consistent_with_sigma():
     full = np.asarray(cov.build_sigma(locs, params, representation="I"))
     c0 = np.asarray(cov.build_c0(locs[:3], locs, params, representation="I"))
     p = 2
-    for l in range(3):
-        np.testing.assert_allclose(c0[l], full[:, l * p:(l + 1) * p],
+    for loc in range(3):
+        np.testing.assert_allclose(c0[loc], full[:, loc * p:(loc + 1) * p],
                                    rtol=1e-9, atol=1e-12)
 
 

@@ -5,7 +5,6 @@ Each kernel is swept over shapes and dtypes per the deliverable spec.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
@@ -126,11 +125,11 @@ def test_potrf_kernel(b, nb, dtype):
 @pytest.mark.parametrize("b,nb,m", [(1, 32, 32), (3, 64, 16), (2, 64, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_trsm_kernel(b, nb, m, dtype):
-    l = ref.potrf_ref(_spd_batch(b, nb, dtype))
+    lo = ref.potrf_ref(_spd_batch(b, nb, dtype))
     rng = np.random.default_rng(3)
     bb = jnp.asarray(rng.normal(size=(b, nb, m)), dtype)
-    got = trsm(l, bb, interpret=True)
-    want = ref.trsm_ref(l, bb)
+    got = trsm(lo, bb, interpret=True)
+    want = ref.trsm_ref(lo, bb)
     tol = dict(rtol=1e-3, atol=1e-3) if dtype == jnp.float32 else \
         dict(rtol=1e-9, atol=1e-11)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
@@ -158,9 +157,9 @@ def test_tile_cholesky_composition():
     l21 = trsm(l11[None], jnp.asarray(a21.T)[None], interpret=True)[0].T
     s22 = syrk(jnp.asarray(a22)[None], l21[None], interpret=True)[0]
     l22 = potrf(s22[None], interpret=True)[0]
-    l = np.block([[np.asarray(l11), np.zeros((nb, nb))],
-                  [np.asarray(l21), np.asarray(l22)]])
-    np.testing.assert_allclose(l @ l.T, a, rtol=1e-9, atol=1e-9)
+    lo = np.block([[np.asarray(l11), np.zeros((nb, nb))],
+                   [np.asarray(l21), np.asarray(l22)]])
+    np.testing.assert_allclose(lo @ lo.T, a, rtol=1e-9, atol=1e-9)
 
 
 # ---------------------------------------------------------------------------

@@ -6,10 +6,9 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
-from repro.configs import ARCHS, LM_SHAPES, get_arch, iter_cells
+from repro.configs import LM_SHAPES, get_arch, iter_cells
 from repro.launch import roofline as rl
 
 
@@ -82,8 +81,11 @@ def test_input_specs_shapes():
     assert s["embeds"].shape == (32, 32768, 1536)
     s = input_specs("pixtral-12b", "decode_32k")
     assert s["embeds"].shape == (128, 5120)
+    # TLR cells are driven from location coordinates (generator-direct
+    # streaming pipeline), not pre-built tile buffers.
     s = input_specs("geostat-tlr", "mle_65k")
-    assert s["u"].shape[0] == s["u"].shape[1]  # (T, T, nb, kmax)
+    assert s["locs"].shape == (65536, 2)
+    assert s["z"].shape == (131072,)
 
 
 @pytest.mark.slow

@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (MaternParams, exact_loglik, pairwise_distances,
                         profile_loglik, simulate_mgrf, uniform_locations)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import MaternParams, MLEConfig, fit, simulate_mgrf, uniform_locations
-from repro.core.mle import initial_guess, pack_params, unpack_params
+from repro.core.mle import pack_params, unpack_params
 from repro.core.optimize import nelder_mead
 
 

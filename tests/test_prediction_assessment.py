@@ -27,10 +27,10 @@ def test_cokriging_oracle():
     from repro.core.covariance import build_c0, build_sigma
     sigma = np.asarray(build_sigma(obs, params, nugget=1e-10))
     got = np.asarray(cokrige(obs, z_obs, pred, params, nugget=1e-10))
-    for l in range(5):
-        c0 = np.asarray(build_c0(pred[l:l + 1], obs, params))[0]
+    for loc in range(5):
+        c0 = np.asarray(build_c0(pred[loc:loc + 1], obs, params))[0]
         want = c0.T @ np.linalg.solve(sigma, np.asarray(z_obs))
-        np.testing.assert_allclose(got[l], want, rtol=1e-7, atol=1e-10)
+        np.testing.assert_allclose(got[loc], want, rtol=1e-7, atol=1e-10)
 
 
 def test_cokriging_beats_kriging_when_correlated():

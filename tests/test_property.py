@@ -5,7 +5,6 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep (pyproject [dev] extra)
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import matern
@@ -78,7 +77,8 @@ def test_recompress_exact_when_rank_fits(seed, k):
     nb, kmax = 24, 2 * k
     u1, v1 = rng.normal(size=(2, nb, k))
     u2, v2 = rng.normal(size=(2, nb, k))
-    pad = lambda m: jnp.asarray(np.pad(m, ((0, 0), (0, kmax - k))))
+    def pad(m):
+        return jnp.asarray(np.pad(m, ((0, 0), (0, kmax - k))))
     un, vn, rank = recompress(pad(u1), pad(v1), pad(u2), pad(v2), 1e-12, 1.0)
     got = np.asarray(un @ vn.T)
     want = u1 @ v1.T + u2 @ v2.T

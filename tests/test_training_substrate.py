@@ -1,6 +1,4 @@
 """Training loop, optimizer, checkpointing, fault tolerance, serving."""
-import functools
-import os
 
 import numpy as np
 import pytest
@@ -12,8 +10,8 @@ from repro.configs import get_arch
 from repro.dataio.tokens import MemmapCorpus, Prefetcher, SyntheticTokens
 from repro.models import forward, init_model
 from repro.serving.engine import generate, make_serve_fns
-from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
-from repro.training.train_step import TrainConfig, grads_fn, loss_fn, train_step
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import TrainConfig, grads_fn, train_step
 from repro.training.trainer import Trainer, TrainerConfig
 from repro.checkpointing.checkpoint import (latest_step, restore_checkpoint,
                                             save_checkpoint)
