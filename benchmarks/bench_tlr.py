@@ -109,11 +109,79 @@ def bench_gen_phase(quick=False):
         emit(f"fig10_gen_{gen}", us, f"tile_size={nb};vs_dense={us_dense/us:.2f}")
 
 
+def bench_factorize_forms(quick=False):
+    """Masked full-grid vs block-cyclic pair-batch distributed TLR Cholesky,
+    both jitted, same compressed tiles (m >= 288; the ISSUE-3 acceptance
+    comparison).  Returns the artifact fields check_bench gates on: the
+    pair-batch form must not regress past the masked baseline (it measures
+    ~1.5-1.6x faster on CPU at T = 8)."""
+    from repro.core.dist_tlr import dist_tlr_cholesky
+
+    n_side = 16 if quick else 20           # m = 512 / 800
+    locs, params, _ = _setup(n_side, nu22=2.5)
+    m = 2 * n_side * n_side
+    nb = T.choose_tile_size(m, m // 8, multiple_of=2)   # T = 8 tiles
+    t = T.tlr_compress_tiles(locs, params, tile_size=nb, tol=1e-7,
+                             max_rank=48, nugget=1e-8)
+    times = {}
+    for name, bc in (("masked", False), ("bc", True)):
+        fn = jax.jit(functools.partial(dist_tlr_cholesky, tol=1e-7,
+                                       scale=1.0, block_cyclic=bc))
+        jax.block_until_ready(fn(t.diag, t.u, t.v, t.ranks))  # compile
+        us, _ = time_fn(fn, t.diag, t.u, t.v, t.ranks, iters=3)
+        times[name] = us
+    speedup = times["masked"] / times["bc"]
+    emit("factorize_masked_vs_bc", times["bc"],
+         f"masked_us={times['masked']:.0f};speedup={speedup:.2f};m={m}")
+    return dict(factorize_m=m, factorize_tile_size=nb,
+                cholesky_masked_time_us=times["masked"],
+                cholesky_bc_time_us=times["bc"],
+                cholesky_bc_speedup=speedup)
+
+
+def _phase_temp_bytes(n, p, params, *, tile_size, max_rank, tol, nugget):
+    """Compile the pipeline phases on one device and read
+    memory_analysis().temp_size_in_bytes — the temp-footprint trajectory
+    (the dry-run reports the same stat on the 256-device pod mesh).  The
+    factorize stages donate their tile inputs, the production setting."""
+    from repro.core.dist_tlr import (dist_tlr_compress_lowerable,
+                                     dist_tlr_lowerable,
+                                     dist_tlr_pipeline_lowerable)
+
+    m = n * p
+    nb = T.choose_tile_size(m, tile_size, multiple_of=p)
+    t_tiles = m // nb
+    kmax = min(max_rank, nb)
+    out = {}
+    comp_fn, comp_specs = dist_tlr_compress_lowerable(
+        n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
+        gen="xla", mesh=None, dtype=jnp.float64)
+    out["gen_compress"] = (comp_fn, comp_specs, ())
+    for name, bc in (("factorize_masked", False), ("factorize_bc", True)):
+        fn, specs = dist_tlr_lowerable(t_tiles, nb, kmax, tol=tol, mesh=None,
+                                       dtype=jnp.float64, block_cyclic=bc,
+                                       return_factor=True)
+        out[name] = (fn, specs, (0, 1, 2, 3))
+    for name, bc in (("pipeline_masked", False), ("pipeline_bc", True)):
+        fn, specs = dist_tlr_pipeline_lowerable(
+            n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
+            gen="xla", mesh=None, dtype=jnp.float64, block_cyclic=bc)
+        out[name] = (fn, specs, ())
+    temps = {}
+    for name, (fn, specs, donate) in out.items():
+        comp = jax.jit(fn, donate_argnums=donate).lower(*specs).compile()
+        ms = comp.memory_analysis()
+        temps[name] = int(getattr(ms, "temp_size_in_bytes", 0))
+    return temps
+
+
 def collect_artifact(quick=False):
     """BENCH_tlr.json: separate GEN / compress / factorize timings, peak tile
-    memory, and the generator-direct loglik deltas vs the exact likelihood
-    for both the single-device path and the distributed streaming pipeline
-    (dist_compress_tiles -> fori_loop Cholesky, run unsharded here)."""
+    memory, the generator-direct loglik deltas vs the exact likelihood for
+    both the single-device path and the distributed streaming pipeline
+    (dist_compress_tiles -> fori_loop Cholesky, run unsharded here), the
+    masked vs block-cyclic factorization comparison, and per-phase compiled
+    temp bytes (peak_temp_bytes)."""
     from repro.core.dist_tlr import dist_compress_tiles, dist_tlr_loglik
 
     n_side = 12 if quick else 16
@@ -150,8 +218,18 @@ def collect_artifact(quick=False):
         max_rank=kmax, nugget=1e-8, tol=tol).loglik)
     dist_ll_us, ll_dist = time_fn(dist_ll, locs_j, z, iters=2)
     ll_dist = float(ll_dist)
+    # Pair-native block-cyclic pipeline: same problem, never builds the grid.
+    dist_ll_bc = jax.jit(lambda pts, zz: dist_tlr_loglik(
+        None, zz, locs=pts, params=params, from_tiles=True, tile_size=nb,
+        max_rank=kmax, nugget=1e-8, tol=tol, block_cyclic=True).loglik)
+    dist_ll_bc_us, ll_dist_bc = time_fn(dist_ll_bc, locs_j, z, iters=2)
+    ll_dist_bc = float(ll_dist_bc)
 
     return dict(
+        **bench_factorize_forms(quick),
+        peak_temp_bytes=_phase_temp_bytes(n_side * n_side, 2, params,
+                                          tile_size=nb, max_rank=kmax,
+                                          tol=tol, nugget=1e-8),
         m=m, tile_size=nb, tol=tol, max_rank=kmax, quick=bool(quick),
         gen_time_us=gen_us,
         compress_time_us=compress_us,       # includes GEN (end-to-end)
@@ -165,6 +243,9 @@ def collect_artifact(quick=False):
         loglik_delta_vs_exact=abs(ll_tlr - ll_exact),
         loglik_dist=ll_dist,
         loglik_delta_dist_vs_exact=abs(ll_dist - ll_exact),
+        dist_loglik_bc_time_us=dist_ll_bc_us,
+        loglik_dist_bc=ll_dist_bc,
+        loglik_delta_dist_bc_vs_exact=abs(ll_dist_bc - ll_exact),
     )
 
 

@@ -9,9 +9,16 @@ deltas versus the exact likelihood.  This script fails (exit 1) when
   * any ``loglik_delta*`` accuracy field exceeds the threshold (default
     1e-3, the acceptance bound for the TLR7 pipeline at quick sizes), or
   * a timing field is non-finite or non-positive (a zero GEN time means the
-    phase was optimized away and the trajectory is meaningless).
+    phase was optimized away and the trajectory is meaningless), or
+  * the block-cyclic pair-batch factorization regresses past the masked
+    full-grid baseline on the same tiles (``cholesky_bc_time_us`` must be
+    <= max-bc-ratio x ``cholesky_masked_time_us``; default 1.0 — the form
+    exists to be faster, measured ~1.5-1.6x on CPU), or
+  * a ``peak_temp_bytes`` phase entry is missing or non-positive (the
+    compiled temp-footprint trajectory for the 27 GB/device fix).
 
 Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
+                                         [--max-bc-ratio 1.0]
 """
 from __future__ import annotations
 
@@ -28,12 +35,21 @@ REQUIRED_KEYS = (
     # distributed streaming pipeline (PR 2)
     "dist_compress_time_us", "dist_loglik_time_us",
     "loglik_delta_dist_vs_exact",
+    # masked vs block-cyclic factorization + temp footprint (PR 3)
+    "cholesky_masked_time_us", "cholesky_bc_time_us", "cholesky_bc_speedup",
+    "dist_loglik_bc_time_us", "loglik_delta_dist_bc_vs_exact",
+    "peak_temp_bytes",
 )
 TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
-               "dist_compress_time_us", "dist_loglik_time_us")
+               "dist_compress_time_us", "dist_loglik_time_us",
+               "cholesky_masked_time_us", "cholesky_bc_time_us",
+               "dist_loglik_bc_time_us")
+TEMP_PHASE_KEYS = ("gen_compress", "factorize_masked", "factorize_bc",
+                   "pipeline_masked", "pipeline_bc")
 
 
-def check_artifact(artifact: dict, max_delta: float = 1e-3) -> list[str]:
+def check_artifact(artifact: dict, max_delta: float = 1e-3,
+                   max_bc_ratio: float = 1.0) -> list[str]:
     """Return a list of failure messages (empty == gate passes)."""
     errors = []
     for key in REQUIRED_KEYS:
@@ -52,6 +68,23 @@ def check_artifact(artifact: dict, max_delta: float = 1e-3) -> list[str]:
         if not isinstance(val, (int, float)) or not math.isfinite(val) \
                 or val <= 0.0:
             errors.append(f"{key} is not a positive finite timing: {val!r}")
+    masked = artifact.get("cholesky_masked_time_us")
+    bc = artifact.get("cholesky_bc_time_us")
+    if isinstance(masked, (int, float)) and isinstance(bc, (int, float)) \
+            and masked > 0 and bc > masked * max_bc_ratio:
+        errors.append(
+            f"block-cyclic factorization regressed: {bc:.0f}us > "
+            f"{max_bc_ratio:g}x masked baseline ({masked:.0f}us)")
+    temps = artifact.get("peak_temp_bytes")
+    if temps is not None:
+        if not isinstance(temps, dict):
+            errors.append(f"peak_temp_bytes is not a dict: {temps!r}")
+        else:
+            for key in TEMP_PHASE_KEYS:
+                val = temps.get(key)
+                if not isinstance(val, (int, float)) or val <= 0:
+                    errors.append(
+                        f"peak_temp_bytes[{key!r}] is not positive: {val!r}")
     return errors
 
 
@@ -60,6 +93,9 @@ def main(argv=None) -> int:
     ap.add_argument("artifact", nargs="?", default="BENCH_tlr.json")
     ap.add_argument("--max-delta", type=float, default=1e-3,
                     help="fail when any loglik_delta* exceeds this")
+    ap.add_argument("--max-bc-ratio", type=float, default=1.0,
+                    help="fail when cholesky_bc_time_us exceeds this times "
+                         "the masked baseline")
     args = ap.parse_args(argv)
 
     try:
@@ -69,7 +105,7 @@ def main(argv=None) -> int:
         print(f"FAIL: cannot read {args.artifact}: {e}", file=sys.stderr)
         return 1
 
-    errors = check_artifact(artifact, args.max_delta)
+    errors = check_artifact(artifact, args.max_delta, args.max_bc_ratio)
     if errors:
         for err in errors:
             print(f"FAIL: {err}", file=sys.stderr)
@@ -77,6 +113,7 @@ def main(argv=None) -> int:
     print(f"OK: {args.artifact} passes "
           f"(loglik_delta_vs_exact={artifact['loglik_delta_vs_exact']:.3e}, "
           f"dist={artifact['loglik_delta_dist_vs_exact']:.3e}, "
+          f"bc_speedup={artifact['cholesky_bc_speedup']:.2f}x, "
           f"max-delta={args.max_delta:g})")
     return 0
 

@@ -133,6 +133,9 @@ class GeoStatConfig:
     max_rank: int = 128
     tol: float = 1e-7
     super_panels: int = 1   # >1: two-level TLR Cholesky (§Perf hillclimb)
+    # Block-cyclic pair placement for the TLR factorization (strict-lower
+    # pair batch instead of the masked T^2 grid; distribution/block_cyclic).
+    block_cyclic: bool = False
     dtype: str = "float32"  # TPU path; CPU validation runs f64
     shapes: tuple = ()
 

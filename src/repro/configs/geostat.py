@@ -14,5 +14,8 @@ GEOSTAT_TLR = GeoStatConfig(
     tile_size=2048,              # nb = O(sqrt(pn)) trade-off (paper §5.3)
     max_rank=128,
     tol=1e-7,                    # TLR7 default
+    block_cyclic=True,           # pair-batch factorization (the §Perf form;
+                                 # --tlr-block-cyclic 0 re-runs the masked
+                                 # full-grid baseline)
     shapes=tuple(GEOSTAT_SHAPES),
 )

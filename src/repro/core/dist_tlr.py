@@ -1,60 +1,142 @@
 """Distributed TLR pipeline: generate -> compress -> factorize as fori_loop
-SPMD programs over a sharded tile grid (the paper's HiCMA workload).
+SPMD programs over a sharded tile set (the paper's HiCMA workload).
 
-Layout (DESIGN.md §2,4): fixed-kmax UV storage
+Two placements for the strict-lower UV tiles (DESIGN.md §2,4):
 
-    D     (T, nb, nb)        diagonal tiles,        sharded P("data")
-    U, V  (T, T, nb, kmax)   strict-lower UV tiles, sharded P("data","model")
+  * masked grid (the paper-faithful SPMD baseline)
 
-i.e. tile (i, j) lives on device grid cell (i mod Pr-block, j mod Pc-block) —
-the 2-D distribution of CHAMELEON with block (not cyclic) placement.
+        D     (T, nb, nb)        diagonal tiles,        sharded P("data")
+        U, V  (T, T, nb, kmax)   strict-lower UV tiles, sharded P("data","model")
 
-The *compression* stage (dist_compress_tiles) streams one Representation-I
-column panel at a time straight from the Matérn generator
-(covariance.build_sigma_column -> kernels.matern_tile / XLA K_nu): each
-fori_loop step j builds the (m, nb) panel under
-with_sharding_constraint(P(row, "model")), SVD-truncates its T tiles, and
-scatters column j of D/U/V — the dense (pn x pn) Sigma is never materialized
-on any device; the peak transient is one column panel, O(m * nb).
+    i.e. tile (i, j) lives on device grid cell (i mod Pr-block, j mod
+    Pc-block) — the 2-D distribution of CHAMELEON with block placement.
+    Static shapes mean every panel step's GEMM batch touches all T^2 tiles:
+    ~6x flop overcompute versus the exact triangle.
 
-The *factorization* stage shares its traced panel body with the single-device
-scan form (core.tlr.tlr_panel_body).  Each fori_loop step k performs the full
-panel of paper-Fig.-1 tasks as masked full-grid batched kernels:
+  * block-cyclic pair placement (distribution/block_cyclic.py, the
+    production form — ``block_cyclic=True``)
 
-    POTRF  — gather D[k] (one tile, replicated), factor
-    TRSM   — batched triangular solve of column k's V tiles  (T-batch)
-    SYRK   — batched TLR-MM onto the diagonal                (T-batch)
-    GEMM   — batched TLR-MM + QR/SVD recompression over the whole (T, T)
-             grid, masked to i > j > k                       (T^2-batch)
+        D      (T, nb, nb)           diagonal tiles,   sharded P("data")
+        U, V   (length, nb, kmax)    strict-lower pairs, block-cyclic over
+                                     P(("data", "model")) — length ~ T^2/2
 
-Static shapes mean the masked grid touches all T^2 tiles every step: ~6x
-flop overcompute versus the exact triangle.  That is the paper-faithful
-*baseline* for the roofline study; EXPERIMENTS.md §Perf hillclimbs it with a
-two-level (unrolled super-panel) loop whose trailing shapes shrink.
+    the ExaGeoStat/PaRSEC schedule (Abdulah et al. 2018; arXiv:1804.09137):
+    only the live strict-lower tasks are batched (~2.4x less QR/SVD work
+    per step), the cyclic deal keeps every device's share of the live
+    trailing submatrix balanced as panels retire, and the (T, T) grid is
+    never materialized (~2x less tile storage).  Per-step communication is
+    the panel-column broadcast through ``layout.pos[:, k]``, which the
+    right-looking algorithm needs under any placement.
+
+The *compression* stage (dist_compress_tiles) streams ``col_block`` tile
+columns of Representation-I panels at a time straight from the Matérn
+generator (covariance.build_sigma_column -> kernels.matern_tile / XLA K_nu):
+each fori_loop step builds the (m, col_block*nb) panel under
+with_sharding_constraint(P(row, "model")), SVD-truncates its tiles in one
+batch, and scatters the finished columns into either placement — the dense
+(pn x pn) Sigma is never materialized on any device; the peak transient is
+one column group, O(m * col_block * nb).
+
+The *factorization* stage shares its traced panel bodies with the
+single-device scan form (core.tlr.tlr_panel_body / tlr_panel_body_bc).
+Each fori_loop step k performs the full panel of paper-Fig.-1 tasks
+(POTRF / TRSM / SYRK / GEMM+recompress) as batched kernels; see the panel
+bodies for the masked-grid vs pair-batch cost trade-off.  launch/roofline.py
+``tlr_pair_update_stats`` gives the closed-form overcompute model; the
+quick bench (benchmarks/bench_tlr.py) measures both forms and
+benchmarks/check_bench.py gates the ratio.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..distribution.block_cyclic import (PairLayout, grid_to_pairs,
+                                         pair_axis, pair_layout, pair_shards,
+                                         pairs_to_grid, slice_positions)
 from .covariance import build_sigma_column
 from .likelihood import LoglikResult
 from .tlr import (TLRMatrix, _constrain, _truncate_svd, choose_tile_size,
-                  panel_loop)
+                  pair_panel_loop, panel_loop)
 
 __all__ = [
-    "dist_compress_tiles", "dist_tlr_cholesky", "dist_tlr_solve_lower",
-    "dist_tlr_loglik", "dist_tlr_lowerable", "dist_tlr_gen_lowerable",
+    "PairTLR", "dist_compress_tiles", "dist_tlr_cholesky",
+    "dist_tlr_cholesky_pairs", "dist_tlr_solve_lower",
+    "dist_tlr_solve_lower_pairs", "dist_tlr_loglik", "dist_tlr_lowerable",
+    "dist_tlr_in_shardings", "dist_tlr_gen_lowerable",
     "dist_tlr_compress_lowerable", "dist_tlr_pipeline_lowerable",
 ]
 
 
 def _row(row_axes):
     return row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
+
+
+# ---------------------------------------------------------------------------
+# Pair-major TLR container (block-cyclic placement)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PairTLR:
+    """TLR matrix with strict-lower tiles in block-cyclic pair-major
+    storage (see distribution/block_cyclic.py).  The slot order is
+    deterministic from (n_tiles, n_shards) via ``pair_layout``, so the
+    *shard count the tiles were scattered for* travels as static pytree
+    aux data — two layouts of the same T can share a length while ordering
+    slots differently, and reconstructing with the wrong one would be
+    silently wrong, not shape-checked.
+    """
+
+    diag: jax.Array    # (T, nb, nb) dense diagonal tiles
+    u: jax.Array       # (length, nb, kmax) pair-major strict-lower tiles
+    v: jax.Array       # (length, nb, kmax)
+    ranks: jax.Array   # (length,) int32 actual ranks (0 at pad slots)
+    n_shards: int = 1  # static: the pair_layout(n_tiles, n_shards) placement
+
+    def tree_flatten(self):
+        return (self.diag, self.u, self.v, self.ranks), self.n_shards
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_shards=aux)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.diag.shape[0]
+
+    @property
+    def tile_size(self) -> int:
+        return self.diag.shape[1]
+
+    @property
+    def max_rank(self) -> int:
+        return self.u.shape[-1]
+
+    @property
+    def shape(self):
+        m = self.n_tiles * self.tile_size
+        return (m, m)
+
+    def to_grid(self, layout: PairLayout) -> TLRMatrix:
+        """Materialize the (T, T) grid form (tests / interop only)."""
+        return TLRMatrix(diag=self.diag, u=pairs_to_grid(self.u, layout),
+                         v=pairs_to_grid(self.v, layout),
+                         ranks=pairs_to_grid(self.ranks, layout))
+
+
+def _pair_specs(mesh, row_axes):
+    """(diag, pair-tile, pair-rank) PartitionSpecs for the pair placement."""
+    row = _row(row_axes)
+    pax = pair_axis(mesh, row_axes)
+    return P(row, None, None), P(pax, None, None), P(pax)
 
 
 # ---------------------------------------------------------------------------
@@ -65,21 +147,27 @@ def _row(row_axes):
 def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
                         max_rank: int = 0, nugget: float = 0.0,
                         gen: str = "pallas", d_spatial: int = 2, scale=None,
-                        mesh=None, row_axes=("data",)) -> TLRMatrix:
+                        mesh=None, row_axes=("data",), layout=None,
+                        col_block: int = 1):
     """Build the fixed-kmax D/U/V layout straight from Morton-ordered
-    locations, one column panel at a time (the distributed production path).
+    locations, ``col_block`` column panels at a time (the distributed
+    production path).
 
     Equivalent to ``tlr_compress_tiles`` to SVD/fp tolerance, but as a
-    single fori_loop whose step j generates the Representation-I column
-    panel sigma[:, j*nb:(j+1)*nb] from the generator (never the dense
-    Sigma), constrains it to P(row, "model"), SVD-truncates its T tiles in
-    one batch, and scatters column j of the output.  Rows i <= j are masked
-    to zero (strict-lower storage); the diagonal tile gets the nugget,
-    exactly where ``build_sigma`` puts it.
+    single fori_loop whose step g generates the Representation-I column
+    group sigma[:, g*cb*nb:(g+1)*cb*nb] from the generator (never the dense
+    Sigma), constrains it to P(row, "model"), SVD-truncates its cb*T tiles
+    in one batch, and scatters the finished columns.  Rows i <= j are
+    masked to zero (strict-lower storage); the diagonal tile gets the
+    nugget, exactly where ``build_sigma`` puts it.
 
-    ``mesh=None`` runs the identical program on one device (the CPU test
-    path); per-tile ``ranks`` are real (threaded from the truncation), not
-    placeholders.
+    ``layout=None`` returns the masked-grid TLRMatrix; a PairLayout scatters
+    straight into block-cyclic pair-major storage (PairTLR) so the
+    block-cyclic factorization path never sees the (T, T) grid.
+    ``col_block > 1`` compresses super-panel column groups — fewer, larger
+    fori trips (ROADMAP temp-footprint item).  ``mesh=None`` runs the
+    identical program on one device (the CPU test path); per-tile ``ranks``
+    are real (threaded from the truncation), not placeholders.
     """
     locs = jnp.asarray(locs)
     n = locs.shape[0]
@@ -88,6 +176,9 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
     nb = choose_tile_size(m, tile_size, multiple_of=p)
     nbl = nb // p                       # locations per tile
     T = m // nb
+    cb = max(int(col_block), 1)
+    if T % cb:
+        raise ValueError(f"col_block={cb} must divide n_tiles={T}")
     if max_rank <= 0:
         max_rank = max(8, nb // 4)
     kmax = min(max_rank, nb)
@@ -97,70 +188,120 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
     dtype = jnp.result_type(locs.dtype, params.sigma2.dtype, jnp.float32)
     rows_idx = jnp.arange(T)
 
+    pair_mode = layout is not None
+    if pair_mode:
+        assert layout.n_tiles == T, (layout.n_tiles, T)
+        dspec, pspec, rspec = _pair_specs(mesh, row_axes)
+        u = jnp.zeros((layout.length, nb, kmax), dtype)
+        v = jnp.zeros((layout.length, nb, kmax), dtype)
+        ranks = jnp.zeros((layout.length,), jnp.int32)
+        pos = jnp.asarray(layout.pos)
+    else:
+        dspec = P(row, None, None)
+        uvspec = P(row, "model", None, None)
+        u = jnp.zeros((T, T, nb, kmax), dtype)
+        v = jnp.zeros((T, T, nb, kmax), dtype)
+        ranks = jnp.zeros((T, T), jnp.int32)
     diag = jnp.zeros((T, nb, nb), dtype)
-    u = jnp.zeros((T, T, nb, kmax), dtype)
-    v = jnp.zeros((T, T, nb, kmax), dtype)
-    ranks = jnp.zeros((T, T), jnp.int32)
 
-    def body(j, carry):
+    def body(g, carry):
         diag, u, v, ranks = carry
-        panel = build_sigma_column(locs, j, nbl, params, d_spatial=d_spatial,
-                                   gen=gen, block=nb)            # (m, nb)
+        panel = build_sigma_column(locs, g, cb * nbl, params,
+                                   d_spatial=d_spatial, gen=gen,
+                                   block=nb)                  # (m, cb*nb)
         panel = _constrain(panel, mesh, P(row, "model"))
-        tiles = panel.reshape(T, nb, nb)
-        dj = lax.dynamic_index_in_dim(tiles, j, 0, keepdims=False)
-        if nugget:
-            dj = dj + nugget * jnp.eye(nb, dtype=dtype)
-        diag = lax.dynamic_update_index_in_dim(diag, dj, j, 0)
-        uu, ss, vvt = jnp.linalg.svd(tiles, full_matrices=False)
+        tiles = panel.reshape(T, nb, cb, nb).transpose(2, 0, 1, 3)
+        uu, ss, vvt = jnp.linalg.svd(tiles.reshape(cb * T, nb, nb),
+                                     full_matrices=False)
         U, V, R = jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
                                                          scale))(uu, ss, vvt)
-        below = rows_idx > j
-        U = jnp.where(below[:, None, None], U, 0.0)
-        V = jnp.where(below[:, None, None], V, 0.0)
-        R = jnp.where(below, R, 0)
-        u = lax.dynamic_update_index_in_dim(u, U, j, 1)
-        v = lax.dynamic_update_index_in_dim(v, V, j, 1)
-        ranks = lax.dynamic_update_index_in_dim(ranks, R, j, 1)
-        return (_constrain(diag, mesh, P(row, None, None)),
-                _constrain(u, mesh, P(row, "model", None, None)),
-                _constrain(v, mesh, P(row, "model", None, None)), ranks)
+        U = U.reshape(cb, T, nb, kmax)
+        V = V.reshape(cb, T, nb, kmax)
+        R = R.reshape(cb, T)
+        for c in range(cb):             # static unroll over the group
+            j = g * cb + c
+            dj = lax.dynamic_index_in_dim(tiles[c], j, 0, keepdims=False)
+            if nugget:
+                dj = dj + nugget * jnp.eye(nb, dtype=dtype)
+            diag = lax.dynamic_update_index_in_dim(diag, dj, j, 0)
+            below = rows_idx > j
+            Uc = jnp.where(below[:, None, None], U[c], 0.0)
+            Vc = jnp.where(below[:, None, None], V[c], 0.0)
+            Rc = jnp.where(below, R[c], 0)
+            if pair_mode:
+                pcol = lax.dynamic_index_in_dim(pos, j, 1, keepdims=False)
+                u = u.at[pcol].set(Uc, mode="drop")  # OOB (i <= j) dropped
+                v = v.at[pcol].set(Vc, mode="drop")
+                ranks = ranks.at[pcol].set(Rc, mode="drop")
+            else:
+                u = lax.dynamic_update_index_in_dim(u, Uc, j, 1)
+                v = lax.dynamic_update_index_in_dim(v, Vc, j, 1)
+                ranks = lax.dynamic_update_index_in_dim(ranks, Rc, j, 1)
+        diag = _constrain(diag, mesh, dspec)
+        if pair_mode:
+            u = _constrain(u, mesh, pspec)
+            v = _constrain(v, mesh, pspec)
+            ranks = _constrain(ranks, mesh, rspec)
+        else:
+            u = _constrain(u, mesh, uvspec)
+            v = _constrain(v, mesh, uvspec)
+        return diag, u, v, ranks
 
-    diag, u, v, ranks = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
+    diag, u, v, ranks = lax.fori_loop(jnp.int32(0), jnp.int32(T // cb), body,
                                       (diag, u, v, ranks))
+    if pair_mode:
+        return PairTLR(diag=diag, u=u, v=v, ranks=ranks,
+                       n_shards=layout.n_shards)
     return TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
 
 
 # ---------------------------------------------------------------------------
-# Distributed TLR Cholesky (shared panel body, masked full-grid batching)
+# Distributed TLR Cholesky: masked full-grid baseline and the block-cyclic
+# pair-batch production form (shared panel bodies with core/tlr.py)
 # ---------------------------------------------------------------------------
 
 
 def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
                       scale: float = 1.0, mesh=None, row_axes=("data",),
-                      super_panels: int = 1):
-    """Factor the TLR matrix in place.  Returns (diag_L, u, v, ranks).
+                      super_panels: int = 1, block_cyclic: bool = False):
+    """Factor the TLR matrix in place.  Returns (diag_L, u, v, ranks) in the
+    masked-grid layout (the grid API — the block-cyclic streaming pipeline
+    stays pair-native through ``dist_tlr_cholesky_pairs``).
 
-    ``super_panels = 1``: one fori_loop over the shared panel body
-    (core.tlr.tlr_panel_body, pairs=None) with masked full-grid updates —
-    ~6x flop overcompute versus the triangle, but one trace regardless of T
-    (the paper-faithful SPMD baseline).
+    ``block_cyclic = False`` (paper-faithful SPMD baseline): one fori_loop
+    over the shared panel body (core.tlr.tlr_panel_body, pairs=None) with
+    masked full-grid updates — ~6x flop overcompute versus the triangle,
+    but one trace regardless of T.
+
+    ``block_cyclic = True``: the static strict-lower pair batch on
+    block-cyclic pair-major storage (core.tlr.tlr_panel_body_bc) — ~2.4x
+    less recompression work per step and load-balanced live pairs on every
+    device; the grid inputs are converted once at entry and back at exit.
 
     ``super_panels = S > 1``: python-unrolled outer loop over S shrinking
-    sub-matrices, fori_loop inside — the masked grid only spans the live
-    trailing slice, cutting the overcompute to ~2.4x at S = 8 for ~S-times
-    the trace size (the §Perf geostat-tlr hillclimb).
+    sub-matrices, fori_loop inside — the batch only spans the live trailing
+    slice, cutting the masked overcompute to ~2.4x at S = 8 for ~S-times
+    the trace size (the §Perf geostat-tlr hillclimb).  Composes with both
+    placements.
 
     ``ranks`` threads the real per-tile ranks through the factorization
     (recompression updates them); None starts from the fixed-kmax
     convention's zero metadata (see TLRMatrix)."""
     if ranks is None:
         ranks = jnp.zeros(u.shape[:2], jnp.int32)
+    T = diag.shape[0]
+    if block_cyclic:
+        layout = pair_layout(T, pair_shards(mesh, row_axes))
+        diag, up, vp, rp = dist_tlr_cholesky_pairs(
+            diag, grid_to_pairs(u, layout), grid_to_pairs(v, layout),
+            grid_to_pairs(ranks, layout), layout=layout, tol=tol, scale=scale,
+            mesh=mesh, row_axes=row_axes, super_panels=super_panels)
+        return (diag, pairs_to_grid(up, layout), pairs_to_grid(vp, layout),
+                pairs_to_grid(rp, layout))
     if super_panels > 1:
         return _tlr_cholesky_super(diag, u, v, ranks, tol=tol, scale=scale,
                                    mesh=mesh, row_axes=row_axes,
                                    super_panels=super_panels)
-    T = diag.shape[0]
     row = _row(row_axes)
     dspec = P(row, None, None)
     uvspec = P(row, "model", None, None)
@@ -173,11 +314,36 @@ def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
     return diag, u, v, ranks
 
 
+def dist_tlr_cholesky_pairs(diag, up, vp, ranks, *, layout: PairLayout,
+                            tol: float = 1e-7, scale: float = 1.0, mesh=None,
+                            row_axes=("data",), super_panels: int = 1):
+    """Pair-native block-cyclic TLR Cholesky: (diag, U, V, ranks) in
+    pair-major storage in, same storage out.  The (T, T) grid is never
+    materialized — this is the factorization the streaming production
+    pipeline runs."""
+    T = diag.shape[0]
+    if super_panels > 1:
+        return _tlr_cholesky_super_pairs(diag, up, vp, ranks, layout=layout,
+                                         tol=tol, scale=scale, mesh=mesh,
+                                         row_axes=row_axes,
+                                         super_panels=super_panels)
+    dspec, pspec, _ = _pair_specs(mesh, row_axes)
+    if T > 1:
+        diag, up, vp, ranks = pair_panel_loop(diag, up, vp, ranks, T - 1,
+                                              layout=layout, tol=tol,
+                                              scale=scale, mesh=mesh,
+                                              dspec=dspec, pspec=pspec)
+    diag = diag.at[T - 1].set(jnp.linalg.cholesky(diag[T - 1]))
+    diag = _constrain(diag, mesh, dspec)
+    return diag, up, vp, ranks
+
+
 def _tlr_cholesky_super(diag, u, v, ranks, *, tol, scale, mesh, row_axes,
                         super_panels: int):
-    """Two-level variant: unrolled outer loop over shrinking trailing slices,
-    fori_loop inside each.  Factored panels are written into full-size output
-    buffers; the live state shrinks every super-step."""
+    """Two-level masked-grid variant: unrolled outer loop over shrinking
+    trailing slices, fori_loop inside each.  Factored panels are written
+    into full-size output buffers; the live state shrinks every
+    super-step."""
     T = diag.shape[0]
     assert T % super_panels == 0, (T, super_panels)
     chunk = T // super_panels
@@ -214,8 +380,63 @@ def _tlr_cholesky_super(diag, u, v, ranks, *, tol, scale, mesh, row_axes,
     return out_diag, out_u, out_v, out_ranks
 
 
+def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
+                              tol, scale, mesh, row_axes, super_panels: int):
+    """Two-level block-cyclic variant: the live slice's pair set shrinks
+    every super-step (a fresh, smaller PairLayout per slice), so the
+    recompress batch spans only the live trailing pairs.  Slot remapping
+    between layouts is static numpy (slice_positions), lowering to
+    constant-index gathers."""
+    T = layout.n_tiles
+    assert T % super_panels == 0, (T, super_panels)
+    assert diag.shape[0] == T, (diag.shape, T)
+    chunk = T // super_panels
+    shards = layout.n_shards
+    dspec, pspec, rspec = _pair_specs(mesh, row_axes)
+
+    out_diag = jnp.zeros_like(diag)
+    out_u = jnp.zeros_like(up)
+    out_v = jnp.zeros_like(vp)
+    out_ranks = jnp.zeros_like(ranks)
+    dh, uh, vh, rh = diag, up, vp, ranks
+    cur = layout
+    for s in range(super_panels):
+        o = s * chunk
+        ts = T - o
+        k_hi = chunk - 1 if s == super_panels - 1 else chunk
+        if ts > 1 and k_hi > 0:
+            dh, uh, vh, rh = pair_panel_loop(dh, uh, vh, rh, k_hi,
+                                             layout=cur, tol=tol, scale=scale,
+                                             mesh=mesh, dspec=dspec,
+                                             pspec=pspec)
+        if s == super_panels - 1:
+            dh = dh.at[ts - 1].set(jnp.linalg.cholesky(dh[ts - 1]))
+        out_diag = out_diag.at[o:o + chunk].set(dh[:chunk])
+        # copy the factored pair columns (slice j < chunk) to global slots
+        done = cur.valid & (cur.jl < (chunk if s < super_panels - 1 else ts))
+        src = np.nonzero(done)[0]
+        if len(src):
+            dst = layout.pos[cur.il[src] + o, cur.jl[src] + o]
+            out_u = out_u.at[dst].set(uh[src])
+            out_v = out_v.at[dst].set(vh[src])
+            out_ranks = out_ranks.at[dst].set(rh[src])
+        if s < super_panels - 1:
+            nxt = pair_layout(ts - chunk, shards)
+            smap = jnp.asarray(slice_positions(cur, nxt, chunk))
+            dh = dh[chunk:]
+            uh = uh.at[smap].get(mode="fill", fill_value=0.0)
+            vh = vh.at[smap].get(mode="fill", fill_value=0.0)
+            rh = rh.at[smap].get(mode="fill", fill_value=0)
+            cur = nxt
+    out_diag = _constrain(out_diag, mesh, dspec)
+    out_u = _constrain(out_u, mesh, pspec)
+    out_v = _constrain(out_v, mesh, pspec)
+    out_ranks = _constrain(out_ranks, mesh, rspec)
+    return out_diag, out_u, out_v, out_ranks
+
+
 def dist_tlr_solve_lower(diag_l, u, v, z):
-    """Forward substitution with the TLR factor (fori_loop, masked)."""
+    """Forward substitution with the TLR factor (fori_loop, masked grid)."""
     T, nb = diag_l.shape[0], diag_l.shape[1]
     z = z.reshape(T, nb)
     rows = jnp.arange(T)
@@ -241,47 +462,127 @@ def dist_tlr_solve_lower(diag_l, u, v, z):
     return out.reshape(-1)
 
 
-def dist_tlr_loglik(t: TLRMatrix = None, z=None, *, locs=None, params=None,
+def dist_tlr_solve_lower_pairs(diag_l, up, vp, z, *, layout: PairLayout):
+    """Forward substitution on pair-major storage: step k gathers only the
+    live column-k tiles through ``layout.pos[:, k]`` (zero-filled above the
+    diagonal) instead of slicing a (T, T) grid — the factor never leaves
+    the block-cyclic placement."""
+    T, nb = diag_l.shape[0], diag_l.shape[1]
+    z = z.reshape(T, nb)
+    rows = jnp.arange(T)
+    pos = jnp.asarray(layout.pos)
+
+    def body(k, carry):
+        z, out = carry
+        lkk = lax.dynamic_index_in_dim(diag_l, k, 0, keepdims=False)
+        zk = lax.dynamic_index_in_dim(z, k, 0, keepdims=False)
+        ak = lax.linalg.triangular_solve(lkk, zk[:, None], left_side=True,
+                                         lower=True)[:, 0]
+        out = lax.dynamic_update_index_in_dim(out, ak, k, 0)
+        pcol = lax.dynamic_index_in_dim(pos, k, 1, keepdims=False)
+        uk = up.at[pcol].get(mode="fill", fill_value=0.0)
+        vk = vp.at[pcol].get(mode="fill", fill_value=0.0)
+        wk = jnp.einsum("tnk,n->tk", vk, ak)
+        delta = jnp.einsum("tnk,tk->tn", uk, wk)
+        below = (rows > k)[:, None]
+        z = z - jnp.where(below, delta, 0.0)
+        return z, out
+
+    _, out = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
+                           (z, jnp.zeros_like(z)))
+    return out.reshape(-1)
+
+
+def _loglik_of(diag_l, alpha, m: int) -> LoglikResult:
+    """Eq. 1 from the factored diagonal tiles and the forward solve."""
+    quad = jnp.sum(alpha * alpha)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(diag_l, axis1=-2, axis2=-1)))
+    ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
+    return LoglikResult(ll, logdet, quad, None)
+
+
+def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                     from_tiles: bool = False, tile_size: int = 0,
                     max_rank: int = 64, nugget: float = 0.0,
                     gen: str = "pallas", d_spatial: int = 2,
                     tol: float = 1e-7, scale=None, mesh=None,
-                    row_axes=("data",), super_panels: int = 1) -> LoglikResult:
+                    row_axes=("data",), super_panels: int = 1,
+                    block_cyclic: bool = False, layout: PairLayout = None,
+                    col_block: int = 1) -> LoglikResult:
     """Distributed TLR likelihood (Eq. 1 through the sharded TLR factor).
 
     Two entry modes:
 
-      * ``dist_tlr_loglik(t, z)`` — factorize pre-compressed tiles.
+      * ``dist_tlr_loglik(t, z)`` — factorize pre-compressed tiles
+        (TLRMatrix, or PairTLR already in block-cyclic storage).
       * ``dist_tlr_loglik(None, z, locs=..., params=..., from_tiles=True)``
-        — the full streaming pipeline: generate + compress column panels
+        — the full streaming pipeline: generate + compress column groups
         via dist_compress_tiles (never materializing dense Sigma), then
         factorize and solve.  ``scale`` defaults to max(sigma2) + nugget,
         matching the single-device generator-direct path.
+
+    ``block_cyclic=True`` keeps the whole evaluation pair-native: the
+    compression scatters straight into block-cyclic pair-major storage and
+    the factorization + forward solve never materialize the (T, T) grid.
+    A pre-built PairTLR carries the shard count it was scattered for, so
+    its layout is reconstructed correctly by default; an explicit
+    ``layout`` must match it (ValueError otherwise — two layouts of the
+    same T can share a length while ordering slots differently).
     """
+    if isinstance(t, PairTLR):
+        block_cyclic = True
     if from_tiles:
         if locs is None or params is None:
             raise ValueError("from_tiles=True requires locs and params")
         if scale is None:
             scale = jnp.max(params.sigma2) + nugget
+        if not block_cyclic:
+            layout = None
+        else:
+            m = jnp.asarray(locs).shape[0] * params.p
+            nb = choose_tile_size(m, tile_size, multiple_of=params.p)
+            if layout is None:
+                layout = pair_layout(m // nb, pair_shards(mesh, row_axes))
+            elif layout.n_tiles != m // nb:
+                raise ValueError(f"layout covers n_tiles={layout.n_tiles} "
+                                 f"but the tile grid has {m // nb}")
         t = dist_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
                                 max_rank=max_rank, nugget=nugget, gen=gen,
                                 d_spatial=d_spatial, scale=scale, mesh=mesh,
-                                row_axes=row_axes)
+                                row_axes=row_axes, layout=layout,
+                                col_block=col_block)
     elif t is None:
-        raise ValueError("pass a TLRMatrix, or locs/params with "
+        raise ValueError("pass a TLRMatrix/PairTLR, or locs/params with "
                          "from_tiles=True")
     if scale is None:
         scale = 1.0
-    diag_l, u, v, _ = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=tol,
-                                        scale=scale, mesh=mesh,
-                                        row_axes=row_axes,
-                                        super_panels=super_panels)
-    alpha = dist_tlr_solve_lower(diag_l, u, v, z)
-    quad = jnp.sum(alpha * alpha)
-    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(diag_l, axis1=-2, axis2=-1)))
-    m = t.shape[0]
-    ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
-    return LoglikResult(ll, logdet, quad, None)
+    if block_cyclic:
+        if isinstance(t, PairTLR):
+            if layout is None:
+                layout = pair_layout(t.n_tiles, t.n_shards)
+            elif layout.n_shards != t.n_shards:
+                raise ValueError(
+                    f"PairTLR was scattered for n_shards={t.n_shards} but "
+                    f"layout has n_shards={layout.n_shards}; slot orders "
+                    "differ")
+        else:
+            if layout is None:
+                layout = pair_layout(t.n_tiles, pair_shards(mesh, row_axes))
+            t = PairTLR(diag=t.diag, u=grid_to_pairs(t.u, layout),
+                        v=grid_to_pairs(t.v, layout),
+                        ranks=grid_to_pairs(t.ranks, layout),
+                        n_shards=layout.n_shards)
+        diag_l, u, v, _ = dist_tlr_cholesky_pairs(
+            t.diag, t.u, t.v, t.ranks, layout=layout, tol=tol, scale=scale,
+            mesh=mesh, row_axes=row_axes, super_panels=super_panels)
+        alpha = dist_tlr_solve_lower_pairs(diag_l, u, v, z, layout=layout)
+    else:
+        diag_l, u, v, _ = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks,
+                                            tol=tol, scale=scale, mesh=mesh,
+                                            row_axes=row_axes,
+                                            super_panels=super_panels)
+        alpha = dist_tlr_solve_lower(diag_l, u, v, z)
+    return _loglik_of(diag_l, alpha, t.shape[0])
 
 
 # ---------------------------------------------------------------------------
@@ -292,28 +593,81 @@ def dist_tlr_loglik(t: TLRMatrix = None, z=None, *, locs=None, params=None,
 
 def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
                        mesh, dtype=jnp.float32, row_axes=("data",),
-                       super_panels: int = 1):
+                       super_panels: int = 1, block_cyclic: bool = False,
+                       return_factor: bool = False):
     """(fn, input specs) for the factorize + solve stage from pre-compressed
     tiles.  Real per-tile ranks are threaded as an input — consumers must not
     fabricate them (rank-0 strict-lower tiles would misread as empty; see the
-    fixed-kmax convention on TLRMatrix)."""
+    fixed-kmax convention on TLRMatrix).  ``block_cyclic=True`` takes the
+    tiles in pair-major storage ((length, nb, kmax) U/V, (length,) ranks) so
+    dry-run cost tables can compare both forms in one invocation.
+
+    ``return_factor=True`` additionally returns the factored (diag_L, U, V,
+    ranks) — the in-place production semantics.  Jit that variant with
+    ``donate_argnums=(0, 1, 2, 3)``: the tile inputs then alias the factor
+    outputs instead of being double-buffered (the donate/alias half of the
+    §Perf temp-footprint item; the dry-run and bench record the resulting
+    alias/temp bytes)."""
     row = _row(row_axes)
+    T, nb = n_tiles, tile_size
+
+    if block_cyclic:
+        layout = pair_layout(T, pair_shards(mesh, row_axes))
+        dspec, pspec, _ = _pair_specs(mesh, row_axes)
+
+        def fn(diag, u, v, ranks, z):
+            diag = _constrain(diag, mesh, dspec)
+            u = _constrain(u, mesh, pspec)
+            v = _constrain(v, mesh, pspec)
+            diag_l, u, v, ranks = dist_tlr_cholesky_pairs(
+                diag, u, v, ranks, layout=layout, tol=tol, scale=1.0,
+                mesh=mesh, row_axes=row_axes, super_panels=super_panels)
+            alpha = dist_tlr_solve_lower_pairs(diag_l, u, v, z, layout=layout)
+            res = _loglik_of(diag_l, alpha, T * nb)
+            if return_factor:
+                return res, (diag_l, u, v, ranks)
+            return res
+
+        specs = (jax.ShapeDtypeStruct((T, nb, nb), dtype),
+                 jax.ShapeDtypeStruct((layout.length, nb, kmax), dtype),
+                 jax.ShapeDtypeStruct((layout.length, nb, kmax), dtype),
+                 jax.ShapeDtypeStruct((layout.length,), jnp.int32),
+                 jax.ShapeDtypeStruct((T * nb,), dtype))
+        return fn, specs
 
     def fn(diag, u, v, ranks, z):
         diag = _constrain(diag, mesh, P(row, None, None))
         u = _constrain(u, mesh, P(row, "model", None, None))
         v = _constrain(v, mesh, P(row, "model", None, None))
-        t = TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
-        return dist_tlr_loglik(t, z, tol=tol, scale=1.0, mesh=mesh,
-                               row_axes=row_axes, super_panels=super_panels)
+        diag_l, u, v, ranks = dist_tlr_cholesky(
+            diag, u, v, ranks, tol=tol, scale=1.0, mesh=mesh,
+            row_axes=row_axes, super_panels=super_panels)
+        alpha = dist_tlr_solve_lower(diag_l, u, v, z)
+        res = _loglik_of(diag_l, alpha, T * nb)
+        if return_factor:
+            return res, (diag_l, u, v, ranks)
+        return res
 
-    T, nb = n_tiles, tile_size
     specs = (jax.ShapeDtypeStruct((T, nb, nb), dtype),
              jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
              jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
              jax.ShapeDtypeStruct((T, T), jnp.int32),
              jax.ShapeDtypeStruct((T * nb,), dtype))
     return fn, specs
+
+
+def dist_tlr_in_shardings(*, mesh, row_axes=("data",),
+                          block_cyclic: bool = False):
+    """NamedShardings matching dist_tlr_lowerable's input specs."""
+    from jax.sharding import NamedSharding
+    row = _row(row_axes)
+    if block_cyclic:
+        dspec, pspec, rspec = _pair_specs(mesh, row_axes)
+        specs = (dspec, pspec, pspec, rspec, P(row))
+    else:
+        specs = (P(row, None, None), P(row, "model", None, None),
+                 P(row, "model", None, None), P(row, "model"), P(row))
+    return tuple(NamedSharding(mesh, s) for s in specs)
 
 
 def dist_tlr_gen_lowerable(n: int, p: int, params, *, tile_size: int,
@@ -346,13 +700,21 @@ def dist_tlr_gen_lowerable(n: int, p: int, params, *, tile_size: int,
 def dist_tlr_compress_lowerable(n: int, p: int, params, *, tile_size: int,
                                 max_rank: int, tol: float, nugget: float = 0.0,
                                 gen: str = "xla", mesh, dtype=jnp.float32,
-                                row_axes=("data",)):
-    """GEN + compress: locations -> sharded fixed-kmax D/U/V/ranks."""
+                                row_axes=("data",), block_cyclic: bool = False,
+                                col_block: int = 1):
+    """GEN + compress: locations -> sharded fixed-kmax D/U/V/ranks (grid or
+    block-cyclic pair-major)."""
+    layout = None
+    if block_cyclic:
+        m = n * p
+        nb = choose_tile_size(m, tile_size, multiple_of=p)
+        layout = pair_layout(m // nb, pair_shards(mesh, row_axes))
 
     def fn(locs):
         t = dist_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
                                 max_rank=max_rank, nugget=nugget, gen=gen,
-                                mesh=mesh, row_axes=row_axes)
+                                mesh=mesh, row_axes=row_axes, layout=layout,
+                                col_block=col_block)
         return t.diag, t.u, t.v, t.ranks
 
     return fn, (jax.ShapeDtypeStruct((n, 2), dtype),)
@@ -361,7 +723,9 @@ def dist_tlr_compress_lowerable(n: int, p: int, params, *, tile_size: int,
 def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                 max_rank: int, tol: float, nugget: float = 0.0,
                                 gen: str = "xla", mesh, dtype=jnp.float32,
-                                row_axes=("data",), super_panels: int = 1):
+                                row_axes=("data",), super_panels: int = 1,
+                                block_cyclic: bool = False,
+                                col_block: int = 1):
     """End-to-end generator-direct pipeline: (locs, z) -> GEN -> compress ->
     factorize -> loglik, with real Matérn tiles (no random-spec stand-ins)."""
 
@@ -370,7 +734,9 @@ def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                from_tiles=True, tile_size=tile_size,
                                max_rank=max_rank, nugget=nugget, gen=gen,
                                tol=tol, mesh=mesh, row_axes=row_axes,
-                               super_panels=super_panels)
+                               super_panels=super_panels,
+                               block_cyclic=block_cyclic,
+                               col_block=col_block)
 
     specs = (jax.ShapeDtypeStruct((n, 2), dtype),
              jax.ShapeDtypeStruct((n * p,), dtype))

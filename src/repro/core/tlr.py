@@ -421,6 +421,77 @@ def panel_loop(diag, u, v, ranks, k_hi: int, *, tol, scale, pairs=None,
                          (diag, u, v, ranks))
 
 
+def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
+                      mesh=None, dspec=None, pspec=None):
+    """One right-looking panel step k on *pair-major* strict-lower storage
+    (distribution.block_cyclic.PairLayout): the static strict-lower pair
+    batch of the single-device form, made shardable.
+
+    ``up``/``vp`` are (length, nb, kmax) with the leading axis laid out
+    block-cyclically over the devices (pspec), so the GEMM + recompress —
+    the dominant work — is a purely local batch of length/S pairs per
+    shard, load-balanced at every k.  The only per-step communication is
+    the panel-column gather/scatter through ``layout.pos[:, k]`` (the
+    broadcast of column k that the right-looking algorithm needs anyway).
+    Compared with the masked full-grid body (tlr_panel_body, pairs=None)
+    this recompresses ~T(T-1)/2 instead of T^2 tiles per step (~2.4x less
+    QR/SVD work) and never materializes the (T, T) grid.
+    """
+    T, nb = diag.shape[0], diag.shape[1]
+    rows = jnp.arange(T)
+    il = jnp.asarray(layout.il)
+    jl = jnp.asarray(layout.jl)
+    pos = jnp.asarray(layout.pos)
+    # ---- POTRF on tile (k, k): replicated small factorization.
+    dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
+    lkk = jnp.linalg.cholesky(dkk)
+    row_is_k = (rows == k)[:, None, None]
+    below = (rows > k)[:, None, None]
+    # ---- gather panel column k from the pair slots (i <= k reads an out-
+    # of-bounds slot -> zero-filled, masked below anyway).
+    pcol = lax.dynamic_index_in_dim(pos, k, 1, keepdims=False)       # (T,)
+    vk = vp.at[pcol].get(mode="fill", fill_value=0.0)        # (T, nb, kmax)
+    uk = up.at[pcol].get(mode="fill", fill_value=0.0)
+    # ---- TRSM on panel column k (V only; U untouched — §5.3).
+    vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
+        lkk, b, left_side=True, lower=True))(vk)
+    vk = jnp.where(below, vk_solved, vk)
+    vp = vp.at[pcol].set(vk, mode="drop")  # OOB slots (i <= k) are dropped
+    # ---- SYRK onto trailing diagonal tiles i > k: D_i -= U (V^T V) U^T.
+    w = jnp.einsum("tnk,tnl->tkl", vk, vk)
+    upd = jnp.einsum("tnk,tkl,tml->tnm", uk, w, uk)
+    diag = diag - jnp.where(below, upd, 0.0)
+    diag = jnp.where(row_is_k, lkk[None], diag)
+    # ---- GEMM + recompress over the pair list (local per shard).
+    wij = jnp.einsum("lnk,lnq->lkq", vk[il], vk[jl])          # V_ik^T V_jk
+    du = jnp.einsum("lnk,lkq->lnq", uk[il], wij)              # U_ik W
+    dv = -uk[jl]
+    act = ((il > jl) & (jl > k))[:, None, None]     # pads fail il > jl
+    du = jnp.where(act, du, 0.0)
+    dv = jnp.where(act, dv, 0.0)
+    du = _constrain(du, mesh, pspec)
+    un, vn, rn = _batched_recompress(up, vp, du, dv, tol, scale)
+    up = jnp.where(act, un, up)
+    vp = jnp.where(act, vn, vp)
+    ranks = jnp.where(act[:, 0, 0], rn, ranks)
+    up = _constrain(up, mesh, pspec)
+    vp = _constrain(vp, mesh, pspec)
+    diag = _constrain(diag, mesh, dspec)
+    return diag, up, vp, ranks
+
+
+def pair_panel_loop(diag, up, vp, ranks, k_hi: int, *, layout, tol, scale,
+                    mesh=None, dspec=None, pspec=None):
+    """fori_loop of the block-cyclic pair body for k in [0, k_hi)."""
+    def body(k, carry):
+        return tlr_panel_body_bc(k, *carry, layout=layout, tol=tol,
+                                 scale=scale, mesh=mesh, dspec=dspec,
+                                 pspec=pspec)
+
+    return lax.fori_loop(jnp.int32(0), jnp.int32(k_hi), body,
+                         (diag, up, vp, ranks))
+
+
 def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRCholesky:
     """Factor A = L L^T keeping off-diagonal tiles compressed.
 

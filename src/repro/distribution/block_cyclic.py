@@ -1,0 +1,151 @@
+"""Block-cyclic placement of the strict-lower TLR tile-pair set.
+
+The masked full-grid factorization (core/dist_tlr.py, the paper-faithful
+SPMD baseline) batches every panel step's GEMM + recompress over all T^2
+tiles of the (T, T) grid so the 2-D tile sharding never moves: ~6x flop
+overcompute versus the live triangle.  The single-device scan form instead
+batches the *static strict-lower pair list* — T(T-1)/2 tasks, ~2.4x cheaper
+— but a naive gather of that list from a P(row, "model") grid would reshard
+every step.
+
+This module makes the pair-batch form shardable the way ExaGeoStat/PaRSEC
+schedule it (Abdulah et al. 2018; arXiv:1804.09137): keep the strict-lower
+tiles in a *pair-major* layout, a (length,) leading axis laid out
+block-cyclically over the devices, and never materialize the (T, T) grid.
+
+Layout contract (``pair_layout``):
+
+  * pairs are enumerated column-major — (1,0), (2,0), ..., (T-1,0), (2,1),
+    ... — so the pairs a panel step k retires (column j = k) form a prefix
+    of the enumeration;
+  * enumeration index q is placed at slot ``(q % S) * pairs_per_shard +
+    (q // S)`` for S shards.  Standard contiguous sharding of the leading
+    axis then gives shard d the cyclically-dealt pairs {d, d+S, d+2S, ...},
+    so at *every* panel step each shard holds within one pair of
+    live_pairs/S — the live trailing-submatrix work stays load-balanced as
+    columns die, which contiguous (block) placement cannot do;
+  * the list is zero-padded to a multiple of S with (0, 0) entries, which
+    fail the strict-lower predicate ``il > jl`` and are masked everywhere.
+
+``pos`` inverts the map: ``pos[i, j]`` is the slot of strict-lower pair
+(i, j), and ``length`` (one past the end — genuinely out-of-bounds, since
+jax wraps *negative* indices instead of dropping them) elsewhere, so a
+traced panel index k can gather/scatter its column's tiles with
+``x.at[pos[:, k]].get(mode="fill")`` / ``.set(mode="drop")`` — the only
+per-step communication is the panel-column broadcast the algorithm needs
+anyway.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = ["PairLayout", "pair_layout", "pair_shards", "pair_axis",
+           "grid_to_pairs", "pairs_to_grid", "slice_positions"]
+
+
+class PairLayout(NamedTuple):
+    """Static (numpy) description of one block-cyclic pair placement."""
+
+    n_tiles: int
+    n_shards: int
+    pairs_per_shard: int
+    il: np.ndarray      # (length,) int32 row tile index; pads are (0, 0)
+    jl: np.ndarray      # (length,) int32 col tile index
+    pos: np.ndarray     # (T, T) int32 slot of pair (i, j); `length`
+                        # (out-of-bounds) elsewhere
+
+    @property
+    def length(self) -> int:
+        return int(self.il.shape[0])
+
+    @property
+    def n_pairs(self) -> int:
+        return self.n_tiles * (self.n_tiles - 1) // 2
+
+    @property
+    def valid(self) -> np.ndarray:
+        return self.il > self.jl
+
+
+@functools.lru_cache(maxsize=None)
+def pair_layout(n_tiles: int, n_shards: int = 1) -> PairLayout:
+    """Block-cyclic layout of the strict-lower pairs of a (T, T) tile grid."""
+    if n_tiles < 1 or n_shards < 1:
+        raise ValueError(f"need n_tiles, n_shards >= 1, got "
+                         f"{(n_tiles, n_shards)}")
+    jj, ii = np.meshgrid(np.arange(n_tiles), np.arange(n_tiles),
+                         indexing="ij")          # column-major enumeration
+    keep = ii > jj
+    ei, ej = ii[keep], jj[keep]                  # sorted by j, then i
+    n_pairs = len(ei)
+    pairs_per_shard = max(-(-n_pairs // n_shards), 1)
+    length = pairs_per_shard * n_shards
+    il = np.zeros(length, np.int32)
+    jl = np.zeros(length, np.int32)
+    q = np.arange(n_pairs)
+    slot = (q % n_shards) * pairs_per_shard + q // n_shards
+    il[slot] = ei
+    jl[slot] = ej
+    pos = np.full((n_tiles, n_tiles), length, np.int32)
+    pos[ei, ej] = slot
+    return PairLayout(n_tiles=n_tiles, n_shards=n_shards,
+                      pairs_per_shard=pairs_per_shard, il=il, jl=jl, pos=pos)
+
+
+def pair_shards(mesh, row_axes=("data",)) -> int:
+    """Number of shards the pair axis spans: every row axis AND "model" —
+    the pair list is 1-D, so the whole mesh can split it."""
+    if mesh is None:
+        return 1
+    axes = tuple(row_axes) + ("model",)
+    total = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            total *= mesh.shape[a]
+    return total
+
+
+def pair_axis(mesh, row_axes=("data",)):
+    """The PartitionSpec entry for the pair axis (None off-mesh)."""
+    if mesh is None:
+        return None
+    return tuple(a for a in tuple(row_axes) + ("model",)
+                 if a in mesh.axis_names)
+
+
+def grid_to_pairs(x, layout: PairLayout):
+    """(T, T, ...) strict-lower grid -> (length, ...) pair-major array.
+
+    Pads read grid[0, 0], which is structurally zero in strict-lower
+    storage, so pad slots carry zeros.
+    """
+    return x[jnp.asarray(layout.il), jnp.asarray(layout.jl)]
+
+
+def pairs_to_grid(xp, layout: PairLayout):
+    """(length, ...) pair-major array -> dense (T, T, ...) grid (zeros
+    outside the strict lower triangle)."""
+    T = layout.n_tiles
+    keep = np.nonzero(layout.valid)[0]
+    out = jnp.zeros((T, T) + xp.shape[1:], xp.dtype)
+    return out.at[layout.il[keep], layout.jl[keep]].set(xp[keep])
+
+
+def slice_positions(outer: PairLayout, inner: PairLayout, offset: int
+                    ) -> np.ndarray:
+    """Slot map for trailing-submatrix slicing (the super-panel loop).
+
+    Returns src (length_inner,) int32: inner slot q holds the pair that
+    lives at outer slot src[q] (pair (i + offset, j + offset));
+    ``outer.length`` (out-of-bounds, for mode="fill" gathers) at inner
+    pads.  All static numpy, so gathers lower as constant-index ops.
+    """
+    src = np.full(inner.length, outer.length, np.int32)
+    keep = inner.valid
+    src[keep] = outer.pos[inner.il[keep] + offset, inner.jl[keep] + offset]
+    return src

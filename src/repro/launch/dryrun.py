@@ -251,7 +251,8 @@ def build_geostat_cell(cfg: GeoStatConfig, shape, mesh, variant: str = ""):
     fn, specs = dist_tlr_pipeline_lowerable(
         shape.n_locations, shape.p, params, tile_size=cfg.tile_size,
         max_rank=cfg.max_rank, tol=cfg.tol, nugget=1e-8, gen="xla",
-        mesh=mesh, row_axes=row, super_panels=cfg.super_panels)
+        mesh=mesh, row_axes=row, super_panels=cfg.super_panels,
+        block_cyclic=cfg.block_cyclic)
     sh = (NamedSharding(mesh, P(row, None)),
           NamedSharding(mesh, P(row)))
     lowered = jax.jit(fn, in_shardings=sh).lower(*specs)
@@ -259,17 +260,26 @@ def build_geostat_cell(cfg: GeoStatConfig, shape, mesh, variant: str = ""):
 
 
 def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
-    """Compile the three TLR pipeline stages separately and return
-    trip-corrected per-phase costs: GEN (panel generation only),
-    gen_compress (GEN + SVD truncation), factorize (Cholesky + solve from
-    pre-compressed tiles), plus the derived compress_only difference.
+    """Compile the TLR pipeline stages separately and return trip-corrected
+    per-phase costs: GEN (panel generation only), gen_compress (GEN + SVD
+    truncation), factorize_masked / factorize_bc (Cholesky + solve from
+    pre-compressed tiles, both batching forms so one invocation compares
+    them), plus the derived compress_only difference.  ``factorize`` aliases
+    the form the config selects (cfg.block_cyclic).
 
     Each stage is a fori_loop whose body XLA's cost_analysis counts ONCE, so
     every phase gets its own trip multiplier: T for the generation and
     compression loops, T/S per unrolled super-step for the factorization
-    (whose trace already contains S body copies)."""
+    (whose trace already contains S body copies).  Each phase also reports
+    ``temp_bytes`` / ``alias_bytes`` from memory_analysis (NOT trip-scaled —
+    buffers are reused across trips); the factorize stages are compiled with
+    their tile inputs donated, the production setting.  ``pair_stats`` adds
+    the closed-form overcompute model (roofline.tlr_pair_update_stats) the
+    measured flops should track: masked ~6x live, pair-batch ~2.4x."""
     from ..core.dist_tlr import (dist_tlr_compress_lowerable,
-                                 dist_tlr_gen_lowerable, dist_tlr_lowerable)
+                                 dist_tlr_gen_lowerable,
+                                 dist_tlr_in_shardings, dist_tlr_lowerable)
+    from ..distribution.block_cyclic import pair_shards
 
     params = _geostat_params()
     row = _row_axes(mesh)
@@ -283,33 +293,42 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         gen="xla", mesh=mesh, row_axes=row)
     comp_fn, comp_specs = dist_tlr_compress_lowerable(
         shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
-        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row)
-    fac_fn, fac_specs = dist_tlr_lowerable(
-        t_tiles, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
-        super_panels=cfg.super_panels)
+        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
+        block_cyclic=cfg.block_cyclic)
 
     locs_sh = (NamedSharding(mesh, P(row, None)),)
-    tile_sh = (NamedSharding(mesh, P(row, None, None)),
-               NamedSharding(mesh, P(row, "model", None, None)),
-               NamedSharding(mesh, P(row, "model", None, None)),
-               NamedSharding(mesh, P(row, "model")),
-               NamedSharding(mesh, P(row)))
     cells = dict(
-        gen=(gen_fn, gen_specs, locs_sh, t_tiles),
-        gen_compress=(comp_fn, comp_specs, locs_sh, t_tiles),
-        factorize=(fac_fn, fac_specs, tile_sh, fac_trips),
+        gen=(gen_fn, gen_specs, locs_sh, t_tiles, ()),
+        gen_compress=(comp_fn, comp_specs, locs_sh, t_tiles, ()),
     )
+    for name, bc in (("factorize_masked", False), ("factorize_bc", True)):
+        fac_fn, fac_specs = dist_tlr_lowerable(
+            t_tiles, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
+            super_panels=cfg.super_panels, block_cyclic=bc,
+            return_factor=True)
+        fac_sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
+                                       block_cyclic=bc)
+        cells[name] = (fac_fn, fac_specs, fac_sh, fac_trips, (0, 1, 2, 3))
     out = {}
-    for name, (fn, specs, sh, trips) in cells.items():
-        comp = jax.jit(fn, in_shardings=sh).lower(*specs).compile()
+    for name, (fn, specs, sh, trips, donate) in cells.items():
+        comp = jax.jit(fn, in_shardings=sh,
+                       donate_argnums=donate).lower(*specs).compile()
         ca = rl.cost_analysis_dict(comp)
         coll = rl.collective_bytes(comp.as_text())
+        ms = comp.memory_analysis()
         out[name] = dict(flops=float(ca.get("flops", 0.0)) * trips,
                          bytes=float(ca.get("bytes accessed", 0.0)) * trips,
-                         coll=float(coll["total"]) * trips, trips=trips)
+                         coll=float(coll["total"]) * trips, trips=trips,
+                         temp_bytes=int(getattr(ms, "temp_size_in_bytes", 0)),
+                         alias_bytes=int(getattr(ms, "alias_size_in_bytes",
+                                                 0)))
     out["compress_only"] = {
         k: max(out["gen_compress"][k] - out["gen"][k], 0.0)
         for k in ("flops", "bytes", "coll")}
+    out["factorize"] = out["factorize_bc" if cfg.block_cyclic else
+                           "factorize_masked"]
+    out["pair_stats"] = rl.tlr_pair_update_stats(
+        t_tiles, cfg.super_panels, pair_shards(mesh, row))
     return out
 
 
@@ -406,10 +425,19 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
                variant=variant, status="ok", cost_correction=correction)
     if phases is not None:
         rec["tlr_phases"] = phases
-        for name in ("gen", "gen_compress", "compress_only", "factorize"):
+        for name in ("gen", "gen_compress", "compress_only",
+                     "factorize_masked", "factorize_bc"):
             ph = phases[name]
-            print(f"tlr_phase {name:14s} flops={ph['flops']:.4g} "
-                  f"bytes={ph['bytes']:.4g} coll={ph['coll']:.4g}")
+            tb = (f" temp={ph['temp_bytes']:.4g}" if "temp_bytes" in ph
+                  else "")
+            print(f"tlr_phase {name:16s} flops={ph['flops']:.4g} "
+                  f"bytes={ph['bytes']:.4g} coll={ph['coll']:.4g}{tb}")
+        ps = phases["pair_stats"]
+        print(f"tlr_pair_updates live={ps['live_updates']} "
+              f"masked={ps['masked_updates']} "
+              f"(x{ps['masked_overcompute']:.2f}) "
+              f"pair={ps['pair_updates']} (x{ps['pair_overcompute']:.2f}; "
+              f"{ps['pair_vs_masked']:.2f}x fewer than masked)")
 
     print(f"== {arch_name} x {shape_name} x {mesh_name} [{variant}] ==")
     print("memory_analysis:", compiled.memory_analysis())
@@ -440,6 +468,10 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--tlr-super-panels", type=int, default=0,
                     help="override GeoStatConfig.super_panels for TLR cells")
+    ap.add_argument("--tlr-block-cyclic", type=int, default=-1,
+                    choices=[-1, 0, 1],
+                    help="override GeoStatConfig.block_cyclic for TLR cells "
+                         "(0: masked full-grid baseline, 1: pair-batch)")
     ap.add_argument("--no-correct", action="store_true",
                     help="skip the trip-count cost-correction compiles "
                          "(multipod fit-proof pass; roofline is pod-only)")
@@ -471,9 +503,13 @@ def main():
                 print(f"skip existing {fname}")
                 continue
             try:
-                overrides = ({"super_panels": args.tlr_super_panels}
-                             if (args.tlr_super_panels and
-                                 arch_name == "geostat-tlr") else None)
+                overrides = {}
+                if arch_name == "geostat-tlr":
+                    if args.tlr_super_panels:
+                        overrides["super_panels"] = args.tlr_super_panels
+                    if args.tlr_block_cyclic >= 0:
+                        overrides["block_cyclic"] = bool(args.tlr_block_cyclic)
+                overrides = overrides or None
                 run_cell(arch_name, shape_name, mesh_name, args.attn_impl,
                          args.out_dir, args.variant,
                          correct_costs=not args.no_correct,

@@ -237,6 +237,43 @@ def lm_model_flops(cfg, shape) -> float:
     return flops
 
 
+def tlr_pair_update_stats(n_tiles: int, super_panels: int = 1,
+                          n_shards: int = 1) -> dict:
+    """Closed-form GEMM+recompress *pair-update* counts for one TLR
+    factorization, by batching form (the §Perf overcompute model the
+    dry-run prints next to the measured HLO flops).
+
+      live    — pair tasks the exact triangle needs: sum_k C(T-1-k, 2)
+                = C(T, 3) (only i > j > k tiles are live at step k).
+      masked  — the masked full-grid batch recompresses every (T', T') slot
+                of the live slice each step: the paper-faithful baseline,
+                ~6x live at S = 1.
+      pair    — the static strict-lower pair batch (block-cyclic placement):
+                C(T', 2) slots padded to a multiple of n_shards, ~2.4x live.
+
+    ``super_panels = S > 1`` shrinks the live slice every outer step for
+    both forms.  Counts are whole-factorization task counts (multiply by
+    the per-task recompress cost for flops).
+    """
+    T, S = n_tiles, max(super_panels, 1)
+    assert T % S == 0, (T, S)
+    chunk = T // S
+    live = T * (T - 1) * (T - 2) // 6
+    masked = pair = 0
+    for s in range(S):
+        ts = T - s * chunk                       # live slice width
+        steps = chunk - 1 if s == S - 1 else chunk
+        n_pairs = ts * (ts - 1) // 2
+        padded = -(-n_pairs // n_shards) * n_shards if n_pairs else 0
+        masked += steps * ts * ts
+        pair += steps * padded
+    return dict(
+        live_updates=live, masked_updates=masked, pair_updates=pair,
+        masked_overcompute=masked / max(live, 1),
+        pair_overcompute=pair / max(live, 1),
+        pair_vs_masked=masked / max(pair, 1))
+
+
 def geostat_model_flops(shape, backend: str, tile_size: int, max_rank: int) -> float:
     """Useful flops of one MLE iteration (or a cokriging prediction batch).
 

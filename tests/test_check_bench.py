@@ -27,6 +27,12 @@ def _artifact(**overrides):
         loglik_exact=-186.95, loglik_tlr=-186.9501,
         loglik_delta_vs_exact=2e-5,
         loglik_dist=-186.9501, loglik_delta_dist_vs_exact=2e-5,
+        cholesky_masked_time_us=8e5, cholesky_bc_time_us=5e5,
+        cholesky_bc_speedup=1.6,
+        dist_loglik_bc_time_us=7e4, loglik_delta_dist_bc_vs_exact=2e-5,
+        peak_temp_bytes=dict(gen_compress=1051040, factorize_masked=5543992,
+                             factorize_bc=2513208, pipeline_masked=5557528,
+                             pipeline_bc=2526808),
     )
     art.update(overrides)
     return art
@@ -57,6 +63,33 @@ def test_missing_or_bad_fields_fail(check_bench):
     errs = check_bench.check_artifact(
         _artifact(loglik_delta_vs_exact=float("nan")))
     assert any("not finite" in e for e in errs)
+
+
+def test_block_cyclic_regression_gate(check_bench):
+    """The pair-batch form must stay <= max-bc-ratio x the masked baseline."""
+    errs = check_bench.check_artifact(
+        _artifact(cholesky_bc_time_us=9e5))        # slower than masked 8e5
+    assert any("block-cyclic factorization regressed" in e for e in errs)
+    # exactly at the default 1.0x bound passes
+    assert check_bench.check_artifact(
+        _artifact(cholesky_bc_time_us=8e5, cholesky_bc_speedup=1.0)) == []
+    # a looser explicit ratio admits the regression
+    assert check_bench.check_artifact(
+        _artifact(cholesky_bc_time_us=9e5), max_bc_ratio=1.2) == []
+
+
+def test_peak_temp_bytes_gate(check_bench):
+    art = _artifact()
+    del art["peak_temp_bytes"]["factorize_bc"]
+    errs = check_bench.check_artifact(art)
+    assert any("peak_temp_bytes['factorize_bc']" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(peak_temp_bytes="oops"))
+    assert any("peak_temp_bytes is not a dict" in e for e in errs)
+    art = _artifact()
+    art["peak_temp_bytes"]["pipeline_bc"] = 0
+    errs = check_bench.check_artifact(art)
+    assert any("pipeline_bc" in e for e in errs)
 
 
 def test_cli_on_real_and_broken_artifacts(check_bench, tmp_path):

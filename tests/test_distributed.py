@@ -16,9 +16,12 @@ from repro.core import tlr as T
 from repro.core.covariance import build_sigma, morton_order
 from repro.core.dist_cholesky import (blocked_cholesky, dist_exact_loglik,
                                       forward_substitution)
-from repro.core.dist_tlr import (dist_compress_tiles, dist_tlr_cholesky,
-                                 dist_tlr_loglik, dist_tlr_lowerable)
+from repro.core.dist_tlr import (PairTLR, dist_compress_tiles,
+                                 dist_tlr_cholesky, dist_tlr_loglik,
+                                 dist_tlr_lowerable)
 from repro.core.simulate import grid_locations, simulate_mgrf
+from repro.distribution.block_cyclic import (grid_to_pairs, pair_layout,
+                                             pairs_to_grid)
 
 
 def _setup(n_side=12, a=0.09):
@@ -90,6 +93,61 @@ def test_dist_tlr_loglik_matches_exact():
     assert got == pytest.approx(want, rel=1e-6)
 
 
+def _tiles_m512():
+    """m = 512, T = 8 compressed tiles + the dense Cholesky reference."""
+    locs = grid_locations(16, jitter=0.2, seed=0)          # 256 locs, m = 512
+    locs = np.asarray(locs)[morton_order(locs)]
+    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=1.0, beta=0.5)
+    dists = pairwise_distances(locs)
+    sigma = build_sigma(None, params, dists=dists, nugget=1e-8)
+    t = T.tlr_compress(sigma, tile_size=64, tol=1e-10, max_rank=48)
+    return t, sigma
+
+
+def test_block_cyclic_cholesky_matches_masked_and_dense():
+    """m = 512: the block-cyclic pair-batch factorization == the masked
+    full-grid one (values AND ranks), and both reconstruct the dense
+    Cholesky factor to TLR accuracy."""
+    t, sigma = _tiles_m512()
+    ref = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=1e-12, scale=1.0)
+    got = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=1e-12, scale=1.0,
+                            block_cyclic=True)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                               atol=1e-8)
+    assert np.array_equal(np.asarray(got[3]), np.asarray(ref[3]))
+    Tn, nb = t.n_tiles, t.tile_size
+    dense_l = np.asarray(jnp.linalg.cholesky(sigma))
+    for i in range(Tn):
+        for j in range(i):
+            blk = np.asarray(got[1][i, j] @ got[2][i, j].T)
+            np.testing.assert_allclose(
+                blk, np.asarray(ref[1][i, j] @ ref[2][i, j].T), atol=1e-8)
+            np.testing.assert_allclose(
+                blk, dense_l[i * nb:(i + 1) * nb, j * nb:(j + 1) * nb],
+                atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(got[0][i]),
+            dense_l[i * nb:(i + 1) * nb, i * nb:(i + 1) * nb], atol=1e-5)
+
+
+def test_block_cyclic_cholesky_super_panels():
+    """Two-level block-cyclic factorization == single-level, ranks
+    included (the shrinking-pair-layout slot remap is exact)."""
+    t, _ = _tiles_m512()
+    one = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=1e-12, scale=1.0,
+                            block_cyclic=True)
+    two = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=1e-12, scale=1.0,
+                            block_cyclic=True, super_panels=2)
+    np.testing.assert_allclose(np.asarray(two[0]), np.asarray(one[0]),
+                               atol=1e-8)
+    assert np.array_equal(np.asarray(two[3]), np.asarray(one[3]))
+    for i in range(t.n_tiles):
+        for j in range(i):
+            np.testing.assert_allclose(
+                np.asarray(two[1][i, j] @ two[2][i, j].T),
+                np.asarray(one[1][i, j] @ one[2][i, j].T), atol=1e-8)
+
+
 # ---------------------------------------------------------------------------
 # Streaming generator-direct pipeline (dist_compress_tiles -> dist_tlr_loglik)
 # ---------------------------------------------------------------------------
@@ -142,6 +200,94 @@ def test_dist_tlr_loglik_from_tiles_super_panels():
     assert two == pytest.approx(one, rel=1e-9)
 
 
+def test_dist_tlr_loglik_block_cyclic_matches_masked():
+    """m = 512 acceptance for the pair-native path: the block-cyclic
+    generator-direct likelihood equals the masked-grid one bit-for-bit-ish
+    and stays within 1e-3 of the dense exact likelihood; col_block groups
+    change nothing."""
+    locs = grid_locations(16, jitter=0.2, seed=0)
+    locs = np.asarray(locs)[morton_order(locs)]
+    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=1.0, beta=0.5)
+    z = simulate_mgrf(jax.random.PRNGKey(5), locs, params, nugget=1e-8)[0]
+    want = float(exact_loglik(locs, z, params, nugget=1e-8).loglik)
+    kw = dict(locs=locs, params=params, from_tiles=True, tile_size=64,
+              max_rank=64, nugget=1e-8, tol=1e-7)
+    masked = float(dist_tlr_loglik(None, z, **kw).loglik)
+    bc = float(dist_tlr_loglik(None, z, block_cyclic=True, **kw).loglik)
+    bc_grouped = float(dist_tlr_loglik(None, z, block_cyclic=True,
+                                       super_panels=2, col_block=2,
+                                       **kw).loglik)
+    assert abs(bc - want) <= 1e-3 * abs(want)
+    assert bc == pytest.approx(masked, rel=1e-9)
+    assert bc_grouped == pytest.approx(masked, rel=1e-9)
+
+
+def test_dist_compress_tiles_pair_native_matches_grid():
+    """Pair-major compression scatters the same tiles/ranks the grid form
+    produces, for several shard counts and column groupings."""
+    locs = grid_locations(8, jitter=0.2, seed=0)
+    locs = np.asarray(locs)[morton_order(locs)]
+    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=1.5, beta=0.5)
+    want = dist_compress_tiles(locs, params, tile_size=32, tol=1e-7,
+                               max_rank=32, nugget=1e-8)
+    for shards, cb in ((1, 1), (4, 1), (4, 2)):
+        lay = pair_layout(want.n_tiles, shards)
+        got = dist_compress_tiles(locs, params, tile_size=32, tol=1e-7,
+                                  max_rank=32, nugget=1e-8, layout=lay,
+                                  col_block=cb)
+        assert isinstance(got, PairTLR)
+        assert got.u.shape == (lay.length, 32, 32)
+        assert np.array_equal(np.asarray(pairs_to_grid(got.ranks, lay)),
+                              np.asarray(want.ranks))
+        np.testing.assert_allclose(np.asarray(got.diag),
+                                   np.asarray(want.diag), atol=1e-11)
+        np.testing.assert_allclose(
+            np.asarray(T.tlr_to_dense(got.to_grid(lay))),
+            np.asarray(T.tlr_to_dense(want)), rtol=1e-9, atol=1e-9)
+
+
+def test_block_cyclic_pipeline_never_densifies(monkeypatch):
+    """The pair-native streaming path must not call the dense assembly
+    routine, must never materialize the (T, T) tile grid, and no output
+    may reach the dense m*m size."""
+    import repro.core.covariance as C
+    import repro.core.dist_cholesky as DC
+
+    def boom(*a, **k):
+        raise AssertionError("dense build_sigma was called")
+
+    monkeypatch.setattr(C, "build_sigma", boom)
+    monkeypatch.setattr(T, "build_sigma", boom)
+    monkeypatch.setattr(DC, "build_sigma", boom)
+    locs = grid_locations(16, jitter=0.2, seed=0)
+    locs = np.asarray(locs)[morton_order(locs)]
+    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=1.5, beta=0.4)
+    lay = pair_layout(8, 4)
+    t = dist_compress_tiles(locs, params, tile_size=64, tol=1e-7, max_rank=32,
+                            nugget=1e-8, layout=lay)
+    m = t.shape[0]
+    assert m == 512
+    grid_elems = t.n_tiles * t.n_tiles * t.tile_size * t.max_rank
+    for arr in (t.diag, t.u, t.v):
+        assert arr.size < m * m, (arr.shape, m)
+        assert arr.size < grid_elems, (arr.shape, grid_elems)
+    # pair-major strict-lower storage is ~half the grid
+    assert t.u.shape == (lay.length, 64, 32)
+    # the factorization + solve stay pair-native (monkeypatched boom still
+    # armed) and reproduce the masked-grid loglik; the PairTLR carries the
+    # shard count it was scattered for, so no layout needs to be re-passed
+    assert t.n_shards == lay.n_shards
+    z = jnp.asarray(np.random.default_rng(3).normal(size=m))
+    got = float(dist_tlr_loglik(t, z, tol=1e-9, scale=1.0).loglik)
+    grid = dist_compress_tiles(locs, params, tile_size=64, tol=1e-7,
+                               max_rank=32, nugget=1e-8)
+    want = float(dist_tlr_loglik(grid, z, tol=1e-9, scale=1.0).loglik)
+    assert got == pytest.approx(want, rel=1e-9)
+    # an explicit layout with a different slot order is rejected loudly
+    with pytest.raises(ValueError, match="n_shards"):
+        dist_tlr_loglik(t, z, tol=1e-9, scale=1.0, layout=pair_layout(8, 1))
+
+
 def test_dist_pipeline_never_densifies(monkeypatch):
     """The streaming path must not call the dense assembly routine, and no
     component of its output may reach the dense m*m size (mirrors
@@ -181,6 +327,33 @@ def test_dist_tlr_lowerable_threads_real_ranks():
     got = float(fn(t.diag, t.u, t.v, t.ranks, z).loglik)
     want = float(dist_tlr_loglik(t, z, tol=1e-12, scale=1.0).loglik)
     assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_dist_tlr_lowerable_block_cyclic_pair_specs():
+    """block_cyclic=True lowerables take pair-major inputs; return_factor
+    jitted with donated tile args aliases them into the factor outputs
+    (alias_size_in_bytes > 0 — the donate/alias temp-footprint fix)."""
+    _, _, _, sigma = _setup()
+    rng = np.random.default_rng(7)
+    z = jnp.asarray(rng.normal(size=sigma.shape[0]))
+    t = T.tlr_compress(sigma, tile_size=48, tol=1e-10, max_rank=48)
+    lay = pair_layout(t.n_tiles, 1)
+    fn, specs = dist_tlr_lowerable(t.n_tiles, t.tile_size, t.max_rank,
+                                   tol=1e-12, mesh=None, block_cyclic=True)
+    assert specs[1].shape == (lay.length, t.tile_size, t.max_rank)
+    assert specs[3].shape == (lay.length,)
+    up, vp, rp = (grid_to_pairs(x, lay) for x in (t.u, t.v, t.ranks))
+    got = float(fn(t.diag, up, vp, rp, z).loglik)
+    want = float(dist_tlr_loglik(t, z, tol=1e-12, scale=1.0).loglik)
+    assert got == pytest.approx(want, rel=1e-12)
+
+    fn_f, specs_f = dist_tlr_lowerable(t.n_tiles, t.tile_size, t.max_rank,
+                                       tol=1e-12, mesh=None,
+                                       block_cyclic=True, return_factor=True)
+    comp = jax.jit(fn_f, donate_argnums=(0, 1, 2, 3)).lower(
+        *specs_f).compile()
+    ms = comp.memory_analysis()
+    assert int(ms.alias_size_in_bytes) > 0
 
 
 # ---------------------------------------------------------------------------
@@ -291,13 +464,16 @@ def test_elastic_checkpoint_restore_across_topologies(tmp_path):
 
 def test_dist_tlr_pipeline_multidevice():
     """The full generator-direct pipeline (locs -> compress -> factorize ->
-    loglik) compiles and runs SPMD on a (2, 4) = (data, model) mesh and
-    matches the dense exact likelihood."""
+    loglik) compiles and runs SPMD on a (2, 4) = (data, model) mesh in BOTH
+    batching forms — masked full-grid and block-cyclic pair-batch — and
+    matches the dense exact likelihood; the two factorizations agree on
+    values and ranks on the 8-device mesh (m = 512)."""
     out = _run_subprocess("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import MaternParams, exact_loglik
     from repro.core.covariance import morton_order
-    from repro.core.dist_tlr import dist_tlr_pipeline_lowerable
+    from repro.core.dist_tlr import (dist_compress_tiles, dist_tlr_cholesky,
+                                     dist_tlr_pipeline_lowerable)
     from repro.core.simulate import grid_locations, simulate_mgrf
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -306,17 +482,37 @@ def test_dist_tlr_pipeline_multidevice():
     params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=1.0, beta=0.5,
                                     dtype=jnp.float32)
     z = simulate_mgrf(jax.random.PRNGKey(5), locs, params, nugget=1e-6)[0]
-    fn, specs = dist_tlr_pipeline_lowerable(
-        256, 2, params, tile_size=64, max_rank=32, tol=1e-7, nugget=1e-6,
-        gen="xla", mesh=mesh, row_axes=("data",))
-    sh = (NamedSharding(mesh, P("data", None)),
-          NamedSharding(mesh, P("data")))
-    jitted = jax.jit(fn, in_shardings=sh)
-    got = float(jitted(jnp.asarray(locs, jnp.float32), z).loglik)
     want = float(exact_loglik(locs.astype(np.float32), z, params,
                               nugget=1e-6).loglik)
-    assert abs(got - want) <= 1e-3 * abs(want), (got, want)
-    print("PIPELINE", got)
+    sh = (NamedSharding(mesh, P("data", None)),
+          NamedSharding(mesh, P("data")))
+    lls = {}
+    for bc in (False, True):
+        fn, specs = dist_tlr_pipeline_lowerable(
+            256, 2, params, tile_size=64, max_rank=32, tol=1e-7, nugget=1e-6,
+            gen="xla", mesh=mesh, row_axes=("data",), block_cyclic=bc)
+        jitted = jax.jit(fn, in_shardings=sh)
+        got = float(jitted(jnp.asarray(locs, jnp.float32), z).loglik)
+        assert abs(got - want) <= 1e-3 * abs(want), (bc, got, want)
+        lls[bc] = got
+    assert abs(lls[True] - lls[False]) <= 1e-5 * abs(want), lls
+
+    # factorization forms agree (values + ranks) on the 8-device mesh
+    t = dist_compress_tiles(locs.astype(np.float32), params, tile_size=64,
+                            tol=1e-9, max_rank=48, nugget=1e-6, mesh=mesh)
+    ref = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=1e-11, scale=1.0,
+                            mesh=mesh)
+    got = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks, tol=1e-11, scale=1.0,
+                            mesh=mesh, block_cyclic=True)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                               atol=1e-5)
+    assert np.array_equal(np.asarray(got[3]), np.asarray(ref[3]))
+    for i in range(t.diag.shape[0]):
+        for j in range(i):
+            np.testing.assert_allclose(
+                np.asarray(got[1][i, j] @ got[2][i, j].T),
+                np.asarray(ref[1][i, j] @ ref[2][i, j].T), atol=1e-5)
+    print("PIPELINE", lls[True])
     """)
     assert "PIPELINE" in out
 

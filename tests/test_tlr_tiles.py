@@ -139,6 +139,21 @@ def test_mle_objective_dist_tlr_matches_dense_backend():
     assert float(obj_dist(x)) == pytest.approx(float(obj_dense(x)), rel=1e-9)
 
 
+def test_mle_objective_block_cyclic_matches_masked():
+    """MLEConfig.block_cyclic flips the distributed TLR backend onto the
+    pair-batch factorization; the jitted objective is unchanged."""
+    locs = _locs(8)
+    params = MaternParams.bivariate(a=0.09, nu11=0.6, nu22=1.2, beta=0.4)
+    z = simulate_mgrf(jax.random.PRNGKey(0), locs, params, nugget=1e-8)[0]
+    cfg = MLEConfig(p=2, profile=False, backend="tlr", tile_size=32,
+                    nugget=1e-8, morton=False, dist_tlr_from_tiles=True)
+    x = pack_params(params, profile=False)
+    obj_masked, _ = make_objective(locs, z, cfg)
+    obj_bc, _ = make_objective(
+        locs, z, dataclasses.replace(cfg, block_cyclic=True))
+    assert float(obj_bc(x)) == pytest.approx(float(obj_masked(x)), rel=1e-9)
+
+
 def test_mle_objective_generator_direct_skips_dense_distances(monkeypatch):
     """Non-profile generator-direct backends never build the (n, n) distance
     matrix — at production n it would be the fit's largest allocation."""
