@@ -23,6 +23,12 @@ from repro.core.simulate import grid_locations, simulate_mgrf
 from .common import emit, time_fn
 
 
+def _mesh1():
+    """1-device ("data", "model") mesh: activates the shard_map recompress
+    path (and the compress-phase sharding constraints) on a single CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
 def _setup(n_side, a=0.09, nu22=1.0):
     locs = grid_locations(n_side, jitter=0.2, seed=0)
     locs = np.asarray(locs)[morton_order(locs)]
@@ -114,7 +120,10 @@ def bench_factorize_forms(quick=False):
     both jitted, same compressed tiles (m >= 288; the ISSUE-3 acceptance
     comparison).  Returns the artifact fields check_bench gates on: the
     pair-batch form must not regress past the masked baseline (it measures
-    ~1.5-1.6x faster on CPU at T = 8)."""
+    ~1.5-1.6x faster on CPU at T = 8).  A third run times the pair-batch
+    form with the recompress QR/SVD under shard_map over the pair axis
+    (distribution/pair_qr.py, here on a 1-device mesh — the production
+    sharded form; ``recompress_sharded_time_us``)."""
     from repro.core.dist_tlr import dist_tlr_cholesky
 
     n_side = 16 if quick else 20           # m = 512 / 800
@@ -123,27 +132,36 @@ def bench_factorize_forms(quick=False):
     nb = T.choose_tile_size(m, m // 8, multiple_of=2)   # T = 8 tiles
     t = T.tlr_compress_tiles(locs, params, tile_size=nb, tol=1e-7,
                              max_rank=48, nugget=1e-8)
+    mesh1 = _mesh1()
     times = {}
-    for name, bc in (("masked", False), ("bc", True)):
+    for name, kw in (("masked", dict()),
+                     ("bc", dict(block_cyclic=True)),
+                     ("bc_sharded", dict(block_cyclic=True, mesh=mesh1))):
         fn = jax.jit(functools.partial(dist_tlr_cholesky, tol=1e-7,
-                                       scale=1.0, block_cyclic=bc))
+                                       scale=1.0, **kw))
         jax.block_until_ready(fn(t.diag, t.u, t.v, t.ranks))  # compile
         us, _ = time_fn(fn, t.diag, t.u, t.v, t.ranks, iters=3)
         times[name] = us
     speedup = times["masked"] / times["bc"]
     emit("factorize_masked_vs_bc", times["bc"],
          f"masked_us={times['masked']:.0f};speedup={speedup:.2f};m={m}")
+    emit("factorize_bc_sharded", times["bc_sharded"],
+         f"bc_us={times['bc']:.0f};"
+         f"shard_map_overhead={times['bc_sharded'] / times['bc']:.2f};m={m}")
     return dict(factorize_m=m, factorize_tile_size=nb,
                 cholesky_masked_time_us=times["masked"],
                 cholesky_bc_time_us=times["bc"],
-                cholesky_bc_speedup=speedup)
+                cholesky_bc_speedup=speedup,
+                recompress_sharded_time_us=times["bc_sharded"])
 
 
 def _phase_temp_bytes(n, p, params, *, tile_size, max_rank, tol, nugget):
     """Compile the pipeline phases on one device and read
     memory_analysis().temp_size_in_bytes — the temp-footprint trajectory
     (the dry-run reports the same stat on the 256-device pod mesh).  The
-    factorize stages donate their tile inputs, the production setting."""
+    factorize stages donate their tile inputs, the production setting.
+    ``*_bc_sharded`` compiles the pair-axis-sharded recompress form
+    (shard_map on a 1-device mesh) so its compiled temps are gated too."""
     from repro.core.dist_tlr import (dist_tlr_compress_lowerable,
                                      dist_tlr_lowerable,
                                      dist_tlr_pipeline_lowerable)
@@ -152,20 +170,25 @@ def _phase_temp_bytes(n, p, params, *, tile_size, max_rank, tol, nugget):
     nb = T.choose_tile_size(m, tile_size, multiple_of=p)
     t_tiles = m // nb
     kmax = min(max_rank, nb)
+    mesh1 = _mesh1()
     out = {}
     comp_fn, comp_specs = dist_tlr_compress_lowerable(
         n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
         gen="xla", mesh=None, dtype=jnp.float64)
     out["gen_compress"] = (comp_fn, comp_specs, ())
-    for name, bc in (("factorize_masked", False), ("factorize_bc", True)):
-        fn, specs = dist_tlr_lowerable(t_tiles, nb, kmax, tol=tol, mesh=None,
+    for name, bc, mesh in (("factorize_masked", False, None),
+                           ("factorize_bc", True, None),
+                           ("factorize_bc_sharded", True, mesh1)):
+        fn, specs = dist_tlr_lowerable(t_tiles, nb, kmax, tol=tol, mesh=mesh,
                                        dtype=jnp.float64, block_cyclic=bc,
                                        return_factor=True)
         out[name] = (fn, specs, (0, 1, 2, 3))
-    for name, bc in (("pipeline_masked", False), ("pipeline_bc", True)):
+    for name, bc, mesh in (("pipeline_masked", False, None),
+                           ("pipeline_bc", True, None),
+                           ("pipeline_bc_sharded", True, mesh1)):
         fn, specs = dist_tlr_pipeline_lowerable(
             n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
-            gen="xla", mesh=None, dtype=jnp.float64, block_cyclic=bc)
+            gen="xla", mesh=mesh, dtype=jnp.float64, block_cyclic=bc)
         out[name] = (fn, specs, ())
     temps = {}
     for name, (fn, specs, donate) in out.items():
@@ -224,6 +247,16 @@ def collect_artifact(quick=False):
         max_rank=kmax, nugget=1e-8, tol=tol, block_cyclic=True).loglik)
     dist_ll_bc_us, ll_dist_bc = time_fn(dist_ll_bc, locs_j, z, iters=2)
     ll_dist_bc = float(ll_dist_bc)
+    # Sharded-recompress form: the same pair-native pipeline with the
+    # recompress QR/SVD under shard_map over the pair axis (1-device mesh
+    # here; the dry-run compiles the same program on the pod meshes).
+    mesh1 = _mesh1()
+    dist_ll_sh = jax.jit(lambda pts, zz: dist_tlr_loglik(
+        None, zz, locs=pts, params=params, from_tiles=True, tile_size=nb,
+        max_rank=kmax, nugget=1e-8, tol=tol, block_cyclic=True,
+        mesh=mesh1).loglik)
+    dist_ll_sh_us, ll_dist_sh = time_fn(dist_ll_sh, locs_j, z, iters=2)
+    ll_dist_sh = float(ll_dist_sh)
 
     return dict(
         **bench_factorize_forms(quick),
@@ -246,6 +279,11 @@ def collect_artifact(quick=False):
         dist_loglik_bc_time_us=dist_ll_bc_us,
         loglik_dist_bc=ll_dist_bc,
         loglik_delta_dist_bc_vs_exact=abs(ll_dist_bc - ll_exact),
+        dist_loglik_bc_sharded_time_us=dist_ll_sh_us,
+        loglik_dist_bc_sharded=ll_dist_sh,
+        loglik_delta_bc_sharded_vs_exact=abs(ll_dist_sh - ll_exact),
+        # sharded vs replicated recompress must agree (check_bench gates it)
+        loglik_delta_sharded_vs_bc=abs(ll_dist_sh - ll_dist_bc),
     )
 
 

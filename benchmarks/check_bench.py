@@ -15,7 +15,11 @@ deltas versus the exact likelihood.  This script fails (exit 1) when
     <= max-bc-ratio x ``cholesky_masked_time_us``; default 1.0 — the form
     exists to be faster, measured ~1.5-1.6x on CPU), or
   * a ``peak_temp_bytes`` phase entry is missing or non-positive (the
-    compiled temp-footprint trajectory for the 27 GB/device fix).
+    compiled temp-footprint trajectory for the 27 GB/device fix), including
+    the ``*_bc_sharded`` pair-axis-sharded recompress phases, or
+  * the sharded-recompress pipeline drifts from the replicated one
+    (``loglik_delta_sharded_vs_bc`` — the shard_map path must be a pure
+    re-placement of the same math; gated by the same loglik_delta* bound).
 
 Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
                                          [--max-bc-ratio 1.0]
@@ -39,13 +43,18 @@ REQUIRED_KEYS = (
     "cholesky_masked_time_us", "cholesky_bc_time_us", "cholesky_bc_speedup",
     "dist_loglik_bc_time_us", "loglik_delta_dist_bc_vs_exact",
     "peak_temp_bytes",
+    # pair-axis-sharded recompress (PR 4)
+    "recompress_sharded_time_us", "dist_loglik_bc_sharded_time_us",
+    "loglik_delta_bc_sharded_vs_exact", "loglik_delta_sharded_vs_bc",
 )
 TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
                "dist_compress_time_us", "dist_loglik_time_us",
                "cholesky_masked_time_us", "cholesky_bc_time_us",
-               "dist_loglik_bc_time_us")
+               "dist_loglik_bc_time_us", "recompress_sharded_time_us",
+               "dist_loglik_bc_sharded_time_us")
 TEMP_PHASE_KEYS = ("gen_compress", "factorize_masked", "factorize_bc",
-                   "pipeline_masked", "pipeline_bc")
+                   "pipeline_masked", "pipeline_bc",
+                   "factorize_bc_sharded", "pipeline_bc_sharded")
 
 
 def check_artifact(artifact: dict, max_delta: float = 1e-3,
@@ -113,6 +122,7 @@ def main(argv=None) -> int:
     print(f"OK: {args.artifact} passes "
           f"(loglik_delta_vs_exact={artifact['loglik_delta_vs_exact']:.3e}, "
           f"dist={artifact['loglik_delta_dist_vs_exact']:.3e}, "
+          f"sharded_vs_bc={artifact['loglik_delta_sharded_vs_bc']:.3e}, "
           f"bc_speedup={artifact['cholesky_bc_speedup']:.2f}x, "
           f"max-delta={args.max_delta:g})")
     return 0

@@ -150,15 +150,22 @@ def _dist_loglik_body(dists, z, params: MaternParams, nugget: float,
                       panel: int, representation: str, mesh,
                       row_axes=("data",)):
     """Un-jitted body so concrete (closure) params keep the closed-form GEN
-    fast path (covariance._pair_correlations)."""
+    fast path (covariance._pair_correlations).
+
+    Stays in panel form end-to-end (blocked_cholesky_panels +
+    panels_forward_solve / panels_logdet): the factor is never assembled
+    back into the full (m, m) buffer — the old blocked_cholesky +
+    forward_substitution pairing round-tripped the whole sharded factor
+    through dense storage every call, contradicting the module contract
+    above."""
     row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
     sigma = build_sigma(None, params, representation=representation,
                         nugget=nugget, dists=dists)
     sigma = _constrain(sigma, mesh, P(row, "model"))
-    chol = blocked_cholesky(sigma, panel, mesh, row_axes)
-    alpha = forward_substitution(chol, z, panel)
+    panels = blocked_cholesky_panels(sigma, panel, mesh, row_axes)
+    alpha = panels_forward_solve(panels, z, panel)
     quad = jnp.sum(alpha * alpha)
-    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    logdet = panels_logdet(panels)
     m = z.shape[-1]
     ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
     return LoglikResult(ll, logdet, quad, None)
@@ -208,7 +215,11 @@ def dist_cokrige_lowerable(n: int, n_pred: int, p: int, params: MaternParams,
                            *, panel: int, mesh, nugget: float = 1e-6,
                            dtype=jnp.float32, row_axes=("data",)):
     """Dry-run cokriging (Eq. 3): GEN -> Cholesky -> batched solves ->
-    c0^T alpha for all prediction locations at once."""
+    c0^T alpha for all prediction locations at once.
+
+    Panel form throughout: Sigma^{-1} z is panels_forward_solve followed by
+    panels_backward_solve on the same (L_kk, panel) list — the dense (m, m)
+    factor is never assembled (the old blocked_cholesky round-trip)."""
     from .covariance import build_c0
     row = row_axes if len(row_axes) > 1 else row_axes[0] if row_axes else None
 
@@ -217,14 +228,12 @@ def dist_cokrige_lowerable(n: int, n_pred: int, p: int, params: MaternParams,
                            P(row, "model"))
         sigma = build_sigma(None, params, nugget=nugget, dists=dists)
         sigma = _constrain(sigma, mesh, P(row, "model"))
-        chol = blocked_cholesky(sigma, panel, mesh, row_axes)
+        panels = blocked_cholesky_panels(sigma, panel, mesh, row_axes)
         c0 = build_c0(pred_locs, obs_locs, params)        # (npred, pn, p)
         c0 = jnp.moveaxis(c0, 0, 1).reshape(n * p, n_pred * p)
         c0 = _constrain(c0, mesh, P(row, "model"))
-        alpha = forward_substitution(chol, z, panel)
-        beta = jax.lax.linalg.triangular_solve(chol, alpha[:, None],
-                                               left_side=True, lower=True,
-                                               transpose_a=True)[:, 0]
+        alpha = panels_forward_solve(panels, z, panel)
+        beta = panels_backward_solve(panels, alpha, panel)
         preds = beta @ c0                                  # (npred*p,)
         return preds.reshape(n_pred, p)
 

@@ -63,7 +63,7 @@ from ..distribution.block_cyclic import (PairLayout, grid_to_pairs,
 from .covariance import build_sigma_column
 from .likelihood import LoglikResult
 from .tlr import (TLRMatrix, _constrain, _truncate_svd, choose_tile_size,
-                  pair_panel_loop, panel_loop)
+                  pair_panel_loop, panel_loop, solve_lower_grid)
 
 __all__ = [
     "PairTLR", "dist_compress_tiles", "dist_tlr_cholesky",
@@ -263,7 +263,8 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
 
 def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
                       scale: float = 1.0, mesh=None, row_axes=("data",),
-                      super_panels: int = 1, block_cyclic: bool = False):
+                      super_panels: int = 1, block_cyclic: bool = False,
+                      shard_recompress: bool = True):
     """Factor the TLR matrix in place.  Returns (diag_L, u, v, ranks) in the
     masked-grid layout (the grid API — the block-cyclic streaming pipeline
     stays pair-native through ``dist_tlr_cholesky_pairs``).
@@ -286,7 +287,13 @@ def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
 
     ``ranks`` threads the real per-tile ranks through the factorization
     (recompression updates them); None starts from the fixed-kmax
-    convention's zero metadata (see TLRMatrix)."""
+    convention's zero metadata (see TLRMatrix).
+
+    ``shard_recompress`` (pair placements only) runs the recompress QR/SVD
+    under shard_map over the pair axis — each device factorizes only its
+    own ~length/S slots (distribution/pair_qr.py) instead of the whole
+    replicated batch; False keeps the PR-3 replicated form for comparison.
+    mesh=None ignores it (the batch is local either way)."""
     if ranks is None:
         ranks = jnp.zeros(u.shape[:2], jnp.int32)
     T = diag.shape[0]
@@ -295,7 +302,8 @@ def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
         diag, up, vp, rp = dist_tlr_cholesky_pairs(
             diag, grid_to_pairs(u, layout), grid_to_pairs(v, layout),
             grid_to_pairs(ranks, layout), layout=layout, tol=tol, scale=scale,
-            mesh=mesh, row_axes=row_axes, super_panels=super_panels)
+            mesh=mesh, row_axes=row_axes, super_panels=super_panels,
+            shard_recompress=shard_recompress)
         return (diag, pairs_to_grid(up, layout), pairs_to_grid(vp, layout),
                 pairs_to_grid(rp, layout))
     if super_panels > 1:
@@ -316,23 +324,28 @@ def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
 
 def dist_tlr_cholesky_pairs(diag, up, vp, ranks, *, layout: PairLayout,
                             tol: float = 1e-7, scale: float = 1.0, mesh=None,
-                            row_axes=("data",), super_panels: int = 1):
+                            row_axes=("data",), super_panels: int = 1,
+                            shard_recompress: bool = True):
     """Pair-native block-cyclic TLR Cholesky: (diag, U, V, ranks) in
     pair-major storage in, same storage out.  The (T, T) grid is never
     materialized — this is the factorization the streaming production
-    pipeline runs."""
+    pipeline runs.  ``shard_recompress`` shards the recompress QR/SVD over
+    the pair axis via shard_map (see dist_tlr_cholesky)."""
     T = diag.shape[0]
     if super_panels > 1:
         return _tlr_cholesky_super_pairs(diag, up, vp, ranks, layout=layout,
                                          tol=tol, scale=scale, mesh=mesh,
                                          row_axes=row_axes,
-                                         super_panels=super_panels)
+                                         super_panels=super_panels,
+                                         shard_recompress=shard_recompress)
     dspec, pspec, _ = _pair_specs(mesh, row_axes)
+    axes = pair_axis(mesh, row_axes) if shard_recompress else None
     if T > 1:
         diag, up, vp, ranks = pair_panel_loop(diag, up, vp, ranks, T - 1,
                                               layout=layout, tol=tol,
                                               scale=scale, mesh=mesh,
-                                              dspec=dspec, pspec=pspec)
+                                              dspec=dspec, pspec=pspec,
+                                              shard_axes=axes)
     diag = diag.at[T - 1].set(jnp.linalg.cholesky(diag[T - 1]))
     diag = _constrain(diag, mesh, dspec)
     return diag, up, vp, ranks
@@ -381,7 +394,8 @@ def _tlr_cholesky_super(diag, u, v, ranks, *, tol, scale, mesh, row_axes,
 
 
 def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
-                              tol, scale, mesh, row_axes, super_panels: int):
+                              tol, scale, mesh, row_axes, super_panels: int,
+                              shard_recompress: bool = True):
     """Two-level block-cyclic variant: the live slice's pair set shrinks
     every super-step (a fresh, smaller PairLayout per slice), so the
     recompress batch spans only the live trailing pairs.  Slot remapping
@@ -393,6 +407,7 @@ def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
     chunk = T // super_panels
     shards = layout.n_shards
     dspec, pspec, rspec = _pair_specs(mesh, row_axes)
+    axes = pair_axis(mesh, row_axes) if shard_recompress else None
 
     out_diag = jnp.zeros_like(diag)
     out_u = jnp.zeros_like(up)
@@ -408,7 +423,7 @@ def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
             dh, uh, vh, rh = pair_panel_loop(dh, uh, vh, rh, k_hi,
                                              layout=cur, tol=tol, scale=scale,
                                              mesh=mesh, dspec=dspec,
-                                             pspec=pspec)
+                                             pspec=pspec, shard_axes=axes)
         if s == super_panels - 1:
             dh = dh.at[ts - 1].set(jnp.linalg.cholesky(dh[ts - 1]))
         out_diag = out_diag.at[o:o + chunk].set(dh[:chunk])
@@ -436,30 +451,10 @@ def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
 
 
 def dist_tlr_solve_lower(diag_l, u, v, z):
-    """Forward substitution with the TLR factor (fori_loop, masked grid)."""
-    T, nb = diag_l.shape[0], diag_l.shape[1]
-    z = z.reshape(T, nb)
-    rows = jnp.arange(T)
-
-    def body(k, carry):
-        z, out = carry
-        lkk = lax.dynamic_index_in_dim(diag_l, k, 0, keepdims=False)
-        zk = lax.dynamic_index_in_dim(z, k, 0, keepdims=False)
-        ak = lax.linalg.triangular_solve(lkk, zk[:, None], left_side=True,
-                                         lower=True)[:, 0]
-        out = lax.dynamic_update_index_in_dim(out, ak, k, 0)
-        # z_i -= U_ik (V_ik^T a_k) for i > k  (masked batched).
-        uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)
-        vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)
-        wk = jnp.einsum("tnk,n->tk", vk, ak)
-        delta = jnp.einsum("tnk,tk->tn", uk, wk)
-        below = (rows > k)[:, None]
-        z = z - jnp.where(below, delta, 0.0)
-        return z, out
-
-    _, out = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
-                           (z, jnp.zeros_like(z)))
-    return out.reshape(-1)
+    """Forward substitution with the TLR factor (fori_loop, masked grid) —
+    the shared scan body in core.tlr (the single-device tlr_solve_lower is
+    the same trace)."""
+    return solve_lower_grid(diag_l, u, v, z)
 
 
 def dist_tlr_solve_lower_pairs(diag_l, up, vp, z, *, layout: PairLayout):
@@ -508,7 +503,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                     tol: float = 1e-7, scale=None, mesh=None,
                     row_axes=("data",), super_panels: int = 1,
                     block_cyclic: bool = False, layout: PairLayout = None,
-                    col_block: int = 1) -> LoglikResult:
+                    col_block: int = 1,
+                    shard_recompress: bool = True) -> LoglikResult:
     """Distributed TLR likelihood (Eq. 1 through the sharded TLR factor).
 
     Two entry modes:
@@ -528,6 +524,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
     its layout is reconstructed correctly by default; an explicit
     ``layout`` must match it (ValueError otherwise — two layouts of the
     same T can share a length while ordering slots differently).
+    ``shard_recompress`` (block-cyclic only) runs the recompress QR/SVD
+    under shard_map over the pair axis (distribution/pair_qr.py).
     """
     if isinstance(t, PairTLR):
         block_cyclic = True
@@ -574,7 +572,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                         n_shards=layout.n_shards)
         diag_l, u, v, _ = dist_tlr_cholesky_pairs(
             t.diag, t.u, t.v, t.ranks, layout=layout, tol=tol, scale=scale,
-            mesh=mesh, row_axes=row_axes, super_panels=super_panels)
+            mesh=mesh, row_axes=row_axes, super_panels=super_panels,
+            shard_recompress=shard_recompress)
         alpha = dist_tlr_solve_lower_pairs(diag_l, u, v, z, layout=layout)
     else:
         diag_l, u, v, _ = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks,
@@ -594,7 +593,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
 def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
                        mesh, dtype=jnp.float32, row_axes=("data",),
                        super_panels: int = 1, block_cyclic: bool = False,
-                       return_factor: bool = False):
+                       return_factor: bool = False,
+                       shard_recompress: bool = True):
     """(fn, input specs) for the factorize + solve stage from pre-compressed
     tiles.  Real per-tile ranks are threaded as an input — consumers must not
     fabricate them (rank-0 strict-lower tiles would misread as empty; see the
@@ -607,7 +607,12 @@ def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
     ``donate_argnums=(0, 1, 2, 3)``: the tile inputs then alias the factor
     outputs instead of being double-buffered (the donate/alias half of the
     §Perf temp-footprint item; the dry-run and bench record the resulting
-    alias/temp bytes)."""
+    alias/temp bytes).
+
+    ``shard_recompress`` (block_cyclic only) shards the recompress QR/SVD
+    over the pair axis via shard_map — the production setting; False
+    compiles the PR-3 replicated-batch form so the dry-run can report the
+    per-device recompress temp drop."""
     row = _row(row_axes)
     T, nb = n_tiles, tile_size
 
@@ -621,7 +626,8 @@ def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
             v = _constrain(v, mesh, pspec)
             diag_l, u, v, ranks = dist_tlr_cholesky_pairs(
                 diag, u, v, ranks, layout=layout, tol=tol, scale=1.0,
-                mesh=mesh, row_axes=row_axes, super_panels=super_panels)
+                mesh=mesh, row_axes=row_axes, super_panels=super_panels,
+                shard_recompress=shard_recompress)
             alpha = dist_tlr_solve_lower_pairs(diag_l, u, v, z, layout=layout)
             res = _loglik_of(diag_l, alpha, T * nb)
             if return_factor:
@@ -725,7 +731,8 @@ def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                 gen: str = "xla", mesh, dtype=jnp.float32,
                                 row_axes=("data",), super_panels: int = 1,
                                 block_cyclic: bool = False,
-                                col_block: int = 1):
+                                col_block: int = 1,
+                                shard_recompress: bool = True):
     """End-to-end generator-direct pipeline: (locs, z) -> GEN -> compress ->
     factorize -> loglik, with real Matérn tiles (no random-spec stand-ins)."""
 
@@ -736,7 +743,8 @@ def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                tol=tol, mesh=mesh, row_axes=row_axes,
                                super_panels=super_panels,
                                block_cyclic=block_cyclic,
-                               col_block=col_block)
+                               col_block=col_block,
+                               shard_recompress=shard_recompress)
 
     specs = (jax.ShapeDtypeStruct((n, 2), dtype),
              jax.ShapeDtypeStruct((n * p,), dtype))

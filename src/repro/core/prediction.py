@@ -28,13 +28,15 @@ def cokrige(obs_locs, z_obs, pred_locs, params: MaternParams,
     """Best linear unbiased cokriging predictor at ``pred_locs``.
 
     Returns (npred, p) predictions for all p variables at each location.
+    ``chol`` takes a pre-computed lower Cholesky factor of Sigma so callers
+    that already factorized (repeated prediction batches, scoring loops)
+    skip the O(m^3) rebuild.
     """
     if chol is None:
         sigma = build_sigma(obs_locs, params, representation=representation,
                             nugget=nugget)
         chol = jnp.linalg.cholesky(sigma)
     c0 = build_c0(pred_locs, obs_locs, params, representation=representation)
-    npred, pn, p = c0.shape
     # Solve Sigma^{-1} Z once, then contract with all c0 blocks at once.
     alpha = jax.scipy.linalg.cho_solve((chol, True), z_obs)
     return jnp.einsum("lrp,r->lp", c0, alpha)
@@ -56,9 +58,13 @@ def msrp(pred, truth, eps: float = 1e-12):
 
 
 def cokrige_and_score(obs_locs, z_obs, pred_locs, z_pred_true, params: MaternParams,
-                      representation: str = "I", nugget: float = 0.0) -> CokrigingResult:
+                      representation: str = "I", nugget: float = 0.0,
+                      chol=None) -> CokrigingResult:
+    """Predict and score in one call.  ``chol`` threads a pre-computed
+    Cholesky factor of Sigma through to ``cokrige`` — a caller that already
+    factorized does not rebuild + refactorize the (m, m) matrix."""
     pred = cokrige(obs_locs, z_obs, pred_locs, params,
-                   representation=representation, nugget=nugget)
+                   representation=representation, nugget=nugget, chol=chol)
     p = params.p
     truth = z_pred_true.reshape(-1, p) if representation.upper() == "I" else \
         z_pred_true.reshape(p, -1).T

@@ -48,6 +48,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding
 
+from ..distribution.pair_qr import sharded_recompress
 from .covariance import MaternParams, build_sigma, build_sigma_panel
 from .likelihood import LoglikResult
 
@@ -422,7 +423,7 @@ def panel_loop(diag, u, v, ranks, k_hi: int, *, tol, scale, pairs=None,
 
 
 def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
-                      mesh=None, dspec=None, pspec=None):
+                      mesh=None, dspec=None, pspec=None, shard_axes=None):
     """One right-looking panel step k on *pair-major* strict-lower storage
     (distribution.block_cyclic.PairLayout): the static strict-lower pair
     batch of the single-device form, made shardable.
@@ -436,6 +437,13 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
     Compared with the masked full-grid body (tlr_panel_body, pairs=None)
     this recompresses ~T(T-1)/2 instead of T^2 tiles per step (~2.4x less
     QR/SVD work) and never materializes the (T, T) grid.
+
+    ``shard_axes`` names the mesh axes the pair axis is laid out over:
+    the recompress QR/SVD then runs under shard_map so each device
+    factorizes only its own ~length/S slots (distribution/pair_qr.py) —
+    without it GSPMD replicates the whole (length, nb, 2k) QR batch on
+    every device.  None keeps the replicated batch (the mesh=None /
+    fallback path).
     """
     T, nb = diag.shape[0], diag.shape[1]
     rows = jnp.arange(T)
@@ -470,7 +478,8 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
     du = jnp.where(act, du, 0.0)
     dv = jnp.where(act, dv, 0.0)
     du = _constrain(du, mesh, pspec)
-    un, vn, rn = _batched_recompress(up, vp, du, dv, tol, scale)
+    un, vn, rn = sharded_recompress(up, vp, du, dv, tol, scale,
+                                    mesh=mesh, axes=shard_axes)
     up = jnp.where(act, un, up)
     vp = jnp.where(act, vn, vp)
     ranks = jnp.where(act[:, 0, 0], rn, ranks)
@@ -481,12 +490,12 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
 
 
 def pair_panel_loop(diag, up, vp, ranks, k_hi: int, *, layout, tol, scale,
-                    mesh=None, dspec=None, pspec=None):
+                    mesh=None, dspec=None, pspec=None, shard_axes=None):
     """fori_loop of the block-cyclic pair body for k in [0, k_hi)."""
     def body(k, carry):
         return tlr_panel_body_bc(k, *carry, layout=layout, tol=tol,
                                  scale=scale, mesh=mesh, dspec=dspec,
-                                 pspec=pspec)
+                                 pspec=pspec, shard_axes=shard_axes)
 
     return lax.fori_loop(jnp.int32(0), jnp.int32(k_hi), body,
                          (diag, up, vp, ranks))
@@ -514,20 +523,41 @@ def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRChol
     return TLRCholesky(diag=diag, u=u, v=v, ranks=ranks)
 
 
+def solve_lower_grid(diag_l, u, v, z) -> jax.Array:
+    """Forward substitution L alpha = z on grid-form TLR factors as one
+    lax.fori_loop: a single traced step (trace size O(1) in T, versus the
+    former Python-unrolled O(T) slices), shared with the distributed solve
+    (core.dist_tlr.dist_tlr_solve_lower).  Step k's trailing update is a
+    masked batch over all T rows — the same static-shape overcompute trade
+    the panel bodies make."""
+    T, nb = diag_l.shape[0], diag_l.shape[1]
+    z = jnp.asarray(z).reshape(T, nb)
+    rows = jnp.arange(T)
+
+    def body(k, carry):
+        z, out = carry
+        lkk = lax.dynamic_index_in_dim(diag_l, k, 0, keepdims=False)
+        zk = lax.dynamic_index_in_dim(z, k, 0, keepdims=False)
+        ak = lax.linalg.triangular_solve(lkk, zk[:, None], left_side=True,
+                                         lower=True)[:, 0]
+        out = lax.dynamic_update_index_in_dim(out, ak, k, 0)
+        # z_i -= U_ik (V_ik^T a_k) for i > k  (masked batched).
+        uk = lax.dynamic_index_in_dim(u, k, 1, keepdims=False)
+        vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)
+        wk = jnp.einsum("tnk,n->tk", vk, ak)
+        delta = jnp.einsum("tnk,tk->tn", uk, wk)
+        below = (rows > k)[:, None]
+        z = z - jnp.where(below, delta, 0.0)
+        return z, out
+
+    _, out = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
+                           (z, jnp.zeros_like(z)))
+    return out.reshape(-1)
+
+
 def tlr_solve_lower(chol: TLRCholesky, z) -> jax.Array:
     """Solve L alpha = z with L in TLR form (forward substitution)."""
-    T, nb = chol.diag.shape[0], chol.diag.shape[1]
-    z = jnp.asarray(z).reshape(T, nb)
-    out = jnp.zeros_like(z)
-    for k in range(T):
-        rhs = z[k]
-        alpha_k = jax.scipy.linalg.solve_triangular(chol.diag[k], rhs, lower=True)
-        out = out.at[k].set(alpha_k)
-        if k + 1 < T:
-            # z_i -= U_ik (V_ik^T alpha_k) for i > k.
-            w = jnp.einsum("rnk,n->rk", chol.v[k + 1:, k], alpha_k)
-            z = z.at[k + 1:].add(-jnp.einsum("rnk,rk->rn", chol.u[k + 1:, k], w))
-    return out.reshape(-1)
+    return solve_lower_grid(chol.diag, chol.u, chol.v, z)
 
 
 def tlr_logdet(chol: TLRCholesky) -> jax.Array:
@@ -536,15 +566,31 @@ def tlr_logdet(chol: TLRCholesky) -> jax.Array:
 
 
 def tlr_matvec(t: TLRMatrix, x) -> jax.Array:
-    """y = A x with A symmetric in TLR form."""
+    """y = A x with A symmetric in TLR form.
+
+    One lax.fori_loop over tile columns k (trace size O(1) in T, versus the
+    former doubly-unrolled O(T^2) trace): step k applies column k's tiles
+    both below the diagonal (y_i += U_ik V_ik^T x_k, i > k) and, transposed,
+    above it (y_k += sum_{i>k} V_ik U_ik^T x_i) as masked batches.
+    """
     T, nb = t.n_tiles, t.tile_size
     x = jnp.asarray(x).reshape(T, nb)
-    y = jnp.einsum("tnm,tm->tn", t.diag, x)
-    for i in range(T):
-        for j in range(i):
-            uij, vij = t.u[i, j], t.v[i, j]
-            y = y.at[i].add(uij @ (vij.T @ x[j]))
-            y = y.at[j].add(vij @ (uij.T @ x[i]))
+    y0 = jnp.einsum("tnm,tm->tn", t.diag, x)
+    rows = jnp.arange(T)
+
+    def body(k, y):
+        uk = lax.dynamic_index_in_dim(t.u, k, 1, keepdims=False)  # (T,nb,kmax)
+        vk = lax.dynamic_index_in_dim(t.v, k, 1, keepdims=False)
+        xk = lax.dynamic_index_in_dim(x, k, 0, keepdims=False)    # (nb,)
+        below = (rows > k)[:, None]
+        # strict-lower tiles of column k: y_i += U_ik (V_ik^T x_k).
+        w = jnp.einsum("tnk,n->tk", vk, xk)
+        y = y + jnp.where(below, jnp.einsum("tnk,tk->tn", uk, w), 0.0)
+        # their transposes (row k): y_k += sum_{i>k} V_ik (U_ik^T x_i).
+        wu = jnp.where(below, jnp.einsum("tnk,tn->tk", uk, x), 0.0)
+        return y.at[k].add(jnp.einsum("tnk,tk->n", vk, wu))
+
+    y = lax.fori_loop(jnp.int32(0), jnp.int32(T), body, y0)
     return y.reshape(-1)
 
 

@@ -275,7 +275,15 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
     buffers are reused across trips); the factorize stages are compiled with
     their tile inputs donated, the production setting.  ``pair_stats`` adds
     the closed-form overcompute model (roofline.tlr_pair_update_stats) the
-    measured flops should track: masked ~6x live, pair-batch ~2.4x."""
+    measured flops should track: masked ~6x live, pair-batch ~2.4x.
+
+    ``factorize_bc`` is the production form: the recompress QR/SVD sharded
+    over the pair axis (distribution/pair_qr.py).  ``factorize_bc_repl``
+    compiles the same pair-batch factorization with the PR-3 *replicated*
+    recompress batch, so the report shows the per-device temp drop the
+    sharding buys; ``recompress_temp_model`` is the closed-form prediction
+    (roofline.tlr_recompress_temp_model) the measured temps should track —
+    the recompress workspace shrinks ~S-fold."""
     from ..core.dist_tlr import (dist_tlr_compress_lowerable,
                                  dist_tlr_gen_lowerable,
                                  dist_tlr_in_shardings, dist_tlr_lowerable)
@@ -301,11 +309,13 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         gen=(gen_fn, gen_specs, locs_sh, t_tiles, ()),
         gen_compress=(comp_fn, comp_specs, locs_sh, t_tiles, ()),
     )
-    for name, bc in (("factorize_masked", False), ("factorize_bc", True)):
+    for name, bc, shard_qr in (("factorize_masked", False, True),
+                               ("factorize_bc", True, True),
+                               ("factorize_bc_repl", True, False)):
         fac_fn, fac_specs = dist_tlr_lowerable(
             t_tiles, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
             super_panels=cfg.super_panels, block_cyclic=bc,
-            return_factor=True)
+            return_factor=True, shard_recompress=shard_qr)
         fac_sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
                                        block_cyclic=bc)
         cells[name] = (fac_fn, fac_specs, fac_sh, fac_trips, (0, 1, 2, 3))
@@ -329,6 +339,8 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
                            "factorize_masked"]
     out["pair_stats"] = rl.tlr_pair_update_stats(
         t_tiles, cfg.super_panels, pair_shards(mesh, row))
+    out["recompress_temp_model"] = rl.tlr_recompress_temp_model(
+        t_tiles, nb, kmax, pair_shards(mesh, row))
     return out
 
 
@@ -426,11 +438,12 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
     if phases is not None:
         rec["tlr_phases"] = phases
         for name in ("gen", "gen_compress", "compress_only",
-                     "factorize_masked", "factorize_bc"):
+                     "factorize_masked", "factorize_bc",
+                     "factorize_bc_repl"):
             ph = phases[name]
             tb = (f" temp={ph['temp_bytes']:.4g}" if "temp_bytes" in ph
                   else "")
-            print(f"tlr_phase {name:16s} flops={ph['flops']:.4g} "
+            print(f"tlr_phase {name:17s} flops={ph['flops']:.4g} "
                   f"bytes={ph['bytes']:.4g} coll={ph['coll']:.4g}{tb}")
         ps = phases["pair_stats"]
         print(f"tlr_pair_updates live={ps['live_updates']} "
@@ -438,6 +451,13 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
               f"(x{ps['masked_overcompute']:.2f}) "
               f"pair={ps['pair_updates']} (x{ps['pair_overcompute']:.2f}; "
               f"{ps['pair_vs_masked']:.2f}x fewer than masked)")
+        rt = phases["recompress_temp_model"]
+        drop = (phases["factorize_bc_repl"]["temp_bytes"] /
+                max(phases["factorize_bc"]["temp_bytes"], 1))
+        print(f"tlr_recompress_temps model: replicated="
+              f"{rt['replicated_bytes']:.4g} sharded={rt['sharded_bytes']:.4g}"
+              f" (/{rt['shrink']:.0f}); measured factorize_bc temp drop "
+              f"{drop:.2f}x vs replicated recompress")
 
     print(f"== {arch_name} x {shape_name} x {mesh_name} [{variant}] ==")
     print("memory_analysis:", compiled.memory_analysis())

@@ -274,6 +274,33 @@ def tlr_pair_update_stats(n_tiles: int, super_panels: int = 1,
         pair_vs_masked=masked / max(pair, 1))
 
 
+def tlr_recompress_temp_model(n_tiles: int, tile_size: int, kmax: int,
+                              n_shards: int = 1, itemsize: int = 4) -> dict:
+    """Closed-form per-device working set of the GEMM-phase recompress batch
+    (the QR/QR + core-SVD workspace the dry-run's factorize temp is made of).
+
+    Each live pair slot holds the (nb, 2k) concat pair + its two Q factors,
+    the (2k, 2k) R/R^T/core triangle, and the core SVD outputs.  Under plain
+    GSPMD the batched QR/SVD has no partitioning rule, so the whole padded
+    pair batch is *replicated* per device (``replicated_bytes``);
+    ``distribution.pair_qr.sharded_recompress`` runs it under shard_map over
+    the pair axis, so each device holds only padded/S slots
+    (``sharded_bytes`` — the O(pairs/S) scaling the ROADMAP item asks for).
+    """
+    assert n_shards >= 1
+    pairs = n_tiles * (n_tiles - 1) // 2
+    padded = -(-pairs // n_shards) * n_shards if pairs else 0
+    nb, k2 = tile_size, 2 * kmax
+    per_pair = (4 * nb * k2          # U/V concats + their Q factors
+                + 3 * k2 * k2        # R_u, R_v, core
+                + 2 * k2 * k2 + k2   # core SVD U, V^T, singular values
+                ) * itemsize
+    return dict(pairs=pairs, padded_pairs=padded, per_pair_bytes=per_pair,
+                replicated_bytes=padded * per_pair,
+                sharded_bytes=(padded // n_shards) * per_pair,
+                shrink=float(n_shards))
+
+
 def geostat_model_flops(shape, backend: str, tile_size: int, max_rank: int) -> float:
     """Useful flops of one MLE iteration (or a cokriging prediction batch).
 

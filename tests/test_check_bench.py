@@ -30,9 +30,14 @@ def _artifact(**overrides):
         cholesky_masked_time_us=8e5, cholesky_bc_time_us=5e5,
         cholesky_bc_speedup=1.6,
         dist_loglik_bc_time_us=7e4, loglik_delta_dist_bc_vs_exact=2e-5,
+        recompress_sharded_time_us=5.2e5,
+        dist_loglik_bc_sharded_time_us=7.2e4,
+        loglik_delta_bc_sharded_vs_exact=2e-5,
+        loglik_delta_sharded_vs_bc=1e-12,
         peak_temp_bytes=dict(gen_compress=1051040, factorize_masked=5543992,
                              factorize_bc=2513208, pipeline_masked=5557528,
-                             pipeline_bc=2526808),
+                             pipeline_bc=2526808, factorize_bc_sharded=2513208,
+                             pipeline_bc_sharded=2526808),
     )
     art.update(overrides)
     return art
@@ -76,6 +81,31 @@ def test_block_cyclic_regression_gate(check_bench):
     # a looser explicit ratio admits the regression
     assert check_bench.check_artifact(
         _artifact(cholesky_bc_time_us=9e5), max_bc_ratio=1.2) == []
+
+
+def test_sharded_recompress_gate(check_bench):
+    """The pair-axis-sharded recompress keys are required: the sharded-vs-
+    replicated loglik delta is bounded, its timings must be positive, and
+    the sharded phases must appear in peak_temp_bytes."""
+    art = _artifact()
+    del art["recompress_sharded_time_us"]
+    errs = check_bench.check_artifact(art)
+    assert any("missing key: recompress_sharded_time_us" in e for e in errs)
+    # shard_map must be a pure re-placement: drift past max-delta fails
+    errs = check_bench.check_artifact(
+        _artifact(loglik_delta_sharded_vs_bc=5e-3))
+    assert any("loglik_delta_sharded_vs_bc" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(dist_loglik_bc_sharded_time_us=0.0))
+    assert any("dist_loglik_bc_sharded_time_us" in e for e in errs)
+    art = _artifact()
+    del art["peak_temp_bytes"]["factorize_bc_sharded"]
+    errs = check_bench.check_artifact(art)
+    assert any("peak_temp_bytes['factorize_bc_sharded']" in e for e in errs)
+    art = _artifact()
+    art["peak_temp_bytes"]["pipeline_bc_sharded"] = -1
+    errs = check_bench.check_artifact(art)
+    assert any("pipeline_bc_sharded" in e for e in errs)
 
 
 def test_peak_temp_bytes_gate(check_bench):

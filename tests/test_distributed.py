@@ -14,8 +14,11 @@ import jax.numpy as jnp
 from repro.core import MaternParams, exact_loglik, pairwise_distances
 from repro.core import tlr as T
 from repro.core.covariance import build_sigma, morton_order
-from repro.core.dist_cholesky import (blocked_cholesky, dist_exact_loglik,
-                                      forward_substitution)
+from repro.core.dist_cholesky import (_dist_loglik_body, blocked_cholesky,
+                                      blocked_cholesky_panels,
+                                      dist_cokrige_lowerable,
+                                      dist_exact_loglik, forward_substitution,
+                                      panels_backward_solve)
 from repro.core.dist_tlr import (PairTLR, dist_compress_tiles,
                                  dist_tlr_cholesky, dist_tlr_loglik,
                                  dist_tlr_lowerable)
@@ -50,6 +53,68 @@ def test_forward_substitution():
     want = np.asarray(jax.scipy.linalg.solve_triangular(lfac, z,
                                                         lower=True))
     np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+def test_panel_form_loglik_matches_dense_assembly():
+    """The distributed loglik body stays in panel form (no (m, m) factor
+    round-trip) and equals the dense-assembly formulation exactly: same
+    POTRF/TRSM/SYRK dataflow, only the storage differs."""
+    import math as _math
+
+    locs, params, dists, sigma = _setup()
+    z = simulate_mgrf(jax.random.PRNGKey(4), locs, params, nugget=1e-8)[0]
+    panel = 36
+    got = _dist_loglik_body(dists, z, params, 1e-8, panel, "I", None)
+    chol = blocked_cholesky(sigma, panel)
+    alpha = forward_substitution(chol, z, panel)
+    quad = float(jnp.sum(alpha * alpha))
+    logdet = float(2.0 * jnp.sum(jnp.log(jnp.diagonal(chol))))
+    want = -0.5 * (z.shape[-1] * _math.log(2.0 * _math.pi) + logdet + quad)
+    assert float(got.logdet) == pytest.approx(logdet, rel=1e-12)
+    assert float(got.quad) == pytest.approx(quad, rel=1e-10)
+    assert float(got.loglik) == pytest.approx(want, rel=1e-12)
+
+
+def test_panels_backward_solve_matches_dense():
+    """panels_backward_solve solves L^T x = y against the LAPACK factor."""
+    _, _, _, sigma = _setup()
+    panel = 48
+    panels = blocked_cholesky_panels(sigma, panel)
+    lfac = jnp.linalg.cholesky(sigma)
+    rng = np.random.default_rng(2)
+    y = jnp.asarray(rng.normal(size=sigma.shape[0]))
+    got = np.asarray(panels_backward_solve(panels, y, panel))
+    want = np.asarray(jax.scipy.linalg.solve_triangular(lfac.T, y,
+                                                        lower=False))
+    np.testing.assert_allclose(got, want, atol=1e-8)
+    # multi-RHS path
+    ym = jnp.asarray(rng.normal(size=(sigma.shape[0], 3)))
+    got = np.asarray(panels_backward_solve(panels, ym, panel))
+    want = np.asarray(jax.scipy.linalg.solve_triangular(lfac.T, ym,
+                                                        lower=False))
+    np.testing.assert_allclose(got, want, atol=1e-8)
+
+
+def test_dist_cokrige_lowerable_panel_form_matches_dense():
+    """The dry-run cokriging cell (now panel form end-to-end) reproduces the
+    dense c0^T Sigma^{-1} z predictor."""
+    from repro.core.covariance import build_c0
+
+    locs, params, dists, sigma = _setup(n_side=8)
+    n = locs.shape[0]
+    n_pred = 6
+    rng = np.random.default_rng(9)
+    pred_locs = jnp.asarray(rng.uniform(size=(n_pred, 2)))
+    z = simulate_mgrf(jax.random.PRNGKey(6), locs, params, nugget=1e-8)[0]
+    fn, specs = dist_cokrige_lowerable(n, n_pred, params.p, params, panel=32,
+                                       mesh=None, nugget=1e-8,
+                                       dtype=jnp.float64)
+    assert specs[0].shape == (n, 2) and specs[1].shape == (n_pred, 2)
+    got = np.asarray(fn(jnp.asarray(locs), pred_locs, z))
+    alpha = jnp.linalg.solve(sigma, z)
+    c0 = build_c0(pred_locs, jnp.asarray(locs), params)     # (npred, pn, p)
+    want = np.asarray(jnp.einsum("lrp,r->lp", c0, alpha))
+    np.testing.assert_allclose(got, want, rtol=1e-7, atol=1e-9)
 
 
 def test_dist_exact_loglik_matches_dense():

@@ -100,6 +100,31 @@ def test_naive_vs_cokriging_criteria_differ():
     assert abs(float(ck.mloe) - float(naive_loe)) > 1e-6
 
 
+def test_cokrige_chol_threading(monkeypatch):
+    """A pre-computed Cholesky threads through cokrige AND cokrige_and_score
+    unchanged — and neither rebuilds/refactorizes Sigma when it is given."""
+    import repro.core.prediction as PR
+    from repro.core.covariance import build_sigma
+
+    params, obs, z_obs, pred, z_true = _data(n=80, n_pred=6)
+    chol = jnp.linalg.cholesky(build_sigma(obs, params, nugget=1e-10))
+    want = cokrige(obs, z_obs, pred, params, nugget=1e-10)
+    want_scored = cokrige_and_score(obs, z_obs, pred, z_true, params,
+                                    nugget=1e-10)
+
+    def boom(*a, **k):
+        raise AssertionError("Sigma was rebuilt despite chol= being passed")
+
+    monkeypatch.setattr(PR, "build_sigma", boom)
+    got = cokrige(obs, z_obs, pred, params, chol=chol)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-9)
+    scored = cokrige_and_score(obs, z_obs, pred, z_true, params, chol=chol)
+    np.testing.assert_allclose(np.asarray(scored.predictions),
+                               np.asarray(want_scored.predictions), atol=1e-9)
+    assert float(scored.mspe) == pytest.approx(float(want_scored.mspe),
+                                               rel=1e-9)
+
+
 def test_mspe_shapes():
     total, per_var = mspe(jnp.ones((7, 2)), jnp.zeros((7, 2)))
     assert float(total) == pytest.approx(2.0)
