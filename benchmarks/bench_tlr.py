@@ -176,6 +176,13 @@ def _phase_temp_bytes(n, p, params, *, tile_size, max_rank, tol, nugget):
         n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
         gen="xla", mesh=None, dtype=jnp.float64)
     out["gen_compress"] = (comp_fn, comp_specs, ())
+    # compress-phase sharding alone: owned-slot gen + truncation SVD under
+    # shard_map over the pair axis (ISSUE-5)
+    comp_sh_fn, comp_sh_specs = dist_tlr_compress_lowerable(
+        n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
+        gen="xla", mesh=mesh1, dtype=jnp.float64, block_cyclic=True,
+        shard_svd=True)
+    out["compress_sharded"] = (comp_sh_fn, comp_sh_specs, ())
     for name, bc, mesh in (("factorize_masked", False, None),
                            ("factorize_bc", True, None),
                            ("factorize_bc_sharded", True, mesh1)):
@@ -183,12 +190,18 @@ def _phase_temp_bytes(n, p, params, *, tile_size, max_rank, tol, nugget):
                                        dtype=jnp.float64, block_cyclic=bc,
                                        return_factor=True)
         out[name] = (fn, specs, (0, 1, 2, 3))
-    for name, bc, mesh in (("pipeline_masked", False, None),
-                           ("pipeline_bc", True, None),
-                           ("pipeline_bc_sharded", True, mesh1)):
+    # pipeline_bc_sharded keeps its PR-4 meaning (recompress sharding only:
+    # shard_svd=False); pipeline_compress_sharded turns both shardings on —
+    # the production form the dry-run compiles on the pod meshes.
+    for name, bc, mesh, ssvd in (("pipeline_masked", False, None, False),
+                                 ("pipeline_bc", True, None, False),
+                                 ("pipeline_bc_sharded", True, mesh1, False),
+                                 ("pipeline_compress_sharded", True, mesh1,
+                                  True)):
         fn, specs = dist_tlr_pipeline_lowerable(
             n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
-            gen="xla", mesh=mesh, dtype=jnp.float64, block_cyclic=bc)
+            gen="xla", mesh=mesh, dtype=jnp.float64, block_cyclic=bc,
+            shard_svd=ssvd)
         out[name] = (fn, specs, ())
     temps = {}
     for name, (fn, specs, donate) in out.items():
@@ -250,13 +263,28 @@ def collect_artifact(quick=False):
     # Sharded-recompress form: the same pair-native pipeline with the
     # recompress QR/SVD under shard_map over the pair axis (1-device mesh
     # here; the dry-run compiles the same program on the pod meshes).
+    # shard_svd=False keeps this measurement recompress-sharding-only.
     mesh1 = _mesh1()
     dist_ll_sh = jax.jit(lambda pts, zz: dist_tlr_loglik(
         None, zz, locs=pts, params=params, from_tiles=True, tile_size=nb,
         max_rank=kmax, nugget=1e-8, tol=tol, block_cyclic=True,
-        mesh=mesh1).loglik)
+        mesh=mesh1, shard_svd=False).loglik)
     dist_ll_sh_us, ll_dist_sh = time_fn(dist_ll_sh, locs_j, z, iters=2)
     ll_dist_sh = float(ll_dist_sh)
+    # Compress-sharded form (ISSUE-5): owned-slot GEN + truncation SVD under
+    # shard_map, plus the sharded recompress — the full production setting.
+    from repro.distribution.block_cyclic import pair_layout, pair_shards
+    layout1 = pair_layout(m // nb, pair_shards(mesh1))
+    comp_sh = jax.jit(lambda pts: dist_compress_tiles(
+        pts, params, tile_size=nb, tol=tol, max_rank=kmax, nugget=1e-8,
+        mesh=mesh1, layout=layout1))
+    comp_sh_us, _ = time_fn(comp_sh, locs_j, iters=2)
+    dist_ll_csh = jax.jit(lambda pts, zz: dist_tlr_loglik(
+        None, zz, locs=pts, params=params, from_tiles=True, tile_size=nb,
+        max_rank=kmax, nugget=1e-8, tol=tol, block_cyclic=True,
+        mesh=mesh1).loglik)
+    dist_ll_csh_us, ll_dist_csh = time_fn(dist_ll_csh, locs_j, z, iters=2)
+    ll_dist_csh = float(ll_dist_csh)
 
     return dict(
         **bench_factorize_forms(quick),
@@ -284,6 +312,12 @@ def collect_artifact(quick=False):
         loglik_delta_bc_sharded_vs_exact=abs(ll_dist_sh - ll_exact),
         # sharded vs replicated recompress must agree (check_bench gates it)
         loglik_delta_sharded_vs_bc=abs(ll_dist_sh - ll_dist_bc),
+        # compress-phase sharding (ISSUE-5): owned-slot gen + sharded SVD
+        compress_sharded_time_us=comp_sh_us,
+        dist_loglik_compress_sharded_time_us=dist_ll_csh_us,
+        loglik_dist_compress_sharded=ll_dist_csh,
+        loglik_delta_compress_sharded=abs(ll_dist_csh - ll_exact),
+        loglik_delta_compress_sharded_vs_bc=abs(ll_dist_csh - ll_dist_bc),
     )
 
 

@@ -19,7 +19,12 @@ deltas versus the exact likelihood.  This script fails (exit 1) when
     the ``*_bc_sharded`` pair-axis-sharded recompress phases, or
   * the sharded-recompress pipeline drifts from the replicated one
     (``loglik_delta_sharded_vs_bc`` — the shard_map path must be a pure
-    re-placement of the same math; gated by the same loglik_delta* bound).
+    re-placement of the same math; gated by the same loglik_delta* bound), or
+  * the compress-sharded pipeline (owned-slot GEN + truncation SVD under
+    shard_map, PR 5) is missing, mistimed, or drifts past the bound
+    (``compress_sharded_time_us`` / ``loglik_delta_compress_sharded``,
+    plus the ``compress_sharded`` / ``pipeline_compress_sharded``
+    peak_temp_bytes phases).
 
 Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
                                          [--max-bc-ratio 1.0]
@@ -46,15 +51,20 @@ REQUIRED_KEYS = (
     # pair-axis-sharded recompress (PR 4)
     "recompress_sharded_time_us", "dist_loglik_bc_sharded_time_us",
     "loglik_delta_bc_sharded_vs_exact", "loglik_delta_sharded_vs_bc",
+    # pair-axis-sharded compression (PR 5)
+    "compress_sharded_time_us", "dist_loglik_compress_sharded_time_us",
+    "loglik_delta_compress_sharded",
 )
 TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
                "dist_compress_time_us", "dist_loglik_time_us",
                "cholesky_masked_time_us", "cholesky_bc_time_us",
                "dist_loglik_bc_time_us", "recompress_sharded_time_us",
-               "dist_loglik_bc_sharded_time_us")
+               "dist_loglik_bc_sharded_time_us", "compress_sharded_time_us",
+               "dist_loglik_compress_sharded_time_us")
 TEMP_PHASE_KEYS = ("gen_compress", "factorize_masked", "factorize_bc",
                    "pipeline_masked", "pipeline_bc",
-                   "factorize_bc_sharded", "pipeline_bc_sharded")
+                   "factorize_bc_sharded", "pipeline_bc_sharded",
+                   "compress_sharded", "pipeline_compress_sharded")
 
 
 def check_artifact(artifact: dict, max_delta: float = 1e-3,
@@ -123,6 +133,7 @@ def main(argv=None) -> int:
           f"(loglik_delta_vs_exact={artifact['loglik_delta_vs_exact']:.3e}, "
           f"dist={artifact['loglik_delta_dist_vs_exact']:.3e}, "
           f"sharded_vs_bc={artifact['loglik_delta_sharded_vs_bc']:.3e}, "
+          f"compress_sharded={artifact['loglik_delta_compress_sharded']:.3e}, "
           f"bc_speedup={artifact['cholesky_bc_speedup']:.2f}x, "
           f"max-delta={args.max_delta:g})")
     return 0

@@ -31,11 +31,21 @@ Two placements for the strict-lower UV tiles (DESIGN.md §2,4):
 The *compression* stage (dist_compress_tiles) streams ``col_block`` tile
 columns of Representation-I panels at a time straight from the Matérn
 generator (covariance.build_sigma_column -> kernels.matern_tile / XLA K_nu):
-each fori_loop step builds the (m, col_block*nb) panel under
-with_sharding_constraint(P(row, "model")), SVD-truncates its tiles in one
-batch, and scatters the finished columns into either placement — the dense
-(pn x pn) Sigma is never materialized on any device; the peak transient is
-one column group, O(m * col_block * nb).
+each fori_loop step builds the column-group panel, SVD-truncates its tiles,
+and scatters the finished columns into either placement — the dense
+(pn x pn) Sigma is never materialized on any device.  ``shard_svd`` (the
+default) partitions the compression itself the way PR 4 partitioned the
+GEMM-phase QR/SVD: in pair mode each device *generates and compresses only
+the strict-lower tiles whose block-cyclic slots it owns*
+(_compress_tiles_pair_sharded over distribution.block_cyclic
+.column_owner_tables), so the per-device GEN panel is O(ceil((T-1)/S) * nb
+* col_block*nb) and the truncation-SVD workspace scales O(tiles/S) — under
+plain GSPMD the batched jnp.linalg.svd has no partitioning rule and the
+whole (cb*T, nb, nb) batch replicated on every device (~3.2 GB/device at
+mle_65k, the post-PR-4 dominant temp).  In grid mode the truncation SVDs
+run under shard_map via distribution.compress_svd.sharded_truncate_svd;
+mesh=None / shard_svd=False keep the exact replicated batch (the PR-4
+fallback contract).
 
 The *factorization* stage shares its traced panel bodies with the
 single-device scan form (core.tlr.tlr_panel_body / tlr_panel_body_bc).
@@ -55,15 +65,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from ..distribution.block_cyclic import (PairLayout, grid_to_pairs,
-                                         pair_axis, pair_layout, pair_shards,
+from ..distribution.block_cyclic import (PairLayout, column_owner_tables,
+                                         grid_to_pairs, pair_axis,
+                                         pair_layout, pair_shards,
                                          pairs_to_grid, slice_positions)
-from .covariance import build_sigma_column
+from ..distribution.compress_svd import (sharded_truncate_svd,
+                                         svd_truncate_batch)
+from ..distribution.pair_qr import warn_fallback_once
+from .covariance import build_sigma_column, build_sigma_panel
 from .likelihood import LoglikResult
-from .tlr import (TLRMatrix, _constrain, _truncate_svd, choose_tile_size,
-                  pair_panel_loop, panel_loop, solve_lower_grid)
+from .tlr import (TLRMatrix, _constrain, apply_nugget, choose_tile_size,
+                  indexed_scan, pair_panel_loop, panel_loop,
+                  solve_lower_grid)
 
 __all__ = [
     "PairTLR", "dist_compress_tiles", "dist_tlr_cholesky",
@@ -148,7 +164,7 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
                         max_rank: int = 0, nugget: float = 0.0,
                         gen: str = "pallas", d_spatial: int = 2, scale=None,
                         mesh=None, row_axes=("data",), layout=None,
-                        col_block: int = 1):
+                        col_block: int = 1, shard_svd: bool = True):
     """Build the fixed-kmax D/U/V layout straight from Morton-ordered
     locations, ``col_block`` column panels at a time (the distributed
     production path).
@@ -156,10 +172,10 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
     Equivalent to ``tlr_compress_tiles`` to SVD/fp tolerance, but as a
     single fori_loop whose step g generates the Representation-I column
     group sigma[:, g*cb*nb:(g+1)*cb*nb] from the generator (never the dense
-    Sigma), constrains it to P(row, "model"), SVD-truncates its cb*T tiles
-    in one batch, and scatters the finished columns.  Rows i <= j are
-    masked to zero (strict-lower storage); the diagonal tile gets the
-    nugget, exactly where ``build_sigma`` puts it.
+    Sigma), SVD-truncates its cb*T tiles, and scatters the finished columns.
+    Rows i <= j are masked to zero (strict-lower storage); the diagonal tile
+    gets the nugget, exactly where ``build_sigma`` puts it (``nugget`` may
+    be a traced scalar — the MLE estimating it under jit).
 
     ``layout=None`` returns the masked-grid TLRMatrix; a PairLayout scatters
     straight into block-cyclic pair-major storage (PairTLR) so the
@@ -168,6 +184,15 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
     fori trips (ROADMAP temp-footprint item).  ``mesh=None`` runs the
     identical program on one device (the CPU test path); per-tile ``ranks``
     are real (threaded from the truncation), not placeholders.
+
+    ``shard_svd`` (the default) partitions the compression over the devices
+    the pair axis spans: in pair mode each device generates *and* SVDs only
+    the strict-lower tiles whose block-cyclic slots it owns
+    (_compress_tiles_pair_sharded), so both the GEN panel and the
+    truncation-SVD workspace scale O(tiles/S) per device; in grid mode the
+    (cb*T, nb, nb) truncation batch runs under shard_map
+    (distribution.compress_svd.sharded_truncate_svd).  ``False`` (or
+    ``mesh=None``) keeps the PR-4 fully replicated batch for comparison.
     """
     locs = jnp.asarray(locs)
     n = locs.shape[0]
@@ -187,10 +212,27 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
     row = _row(row_axes)
     dtype = jnp.result_type(locs.dtype, params.sigma2.dtype, jnp.float32)
     rows_idx = jnp.arange(T)
+    svd_axes = pair_axis(mesh, row_axes)
+    svd_mesh = mesh if (shard_svd and mesh is not None and svd_axes) else None
 
     pair_mode = layout is not None
     if pair_mode:
         assert layout.n_tiles == T, (layout.n_tiles, T)
+        if svd_mesh is not None:
+            if layout.n_shards == pair_shards(mesh, row_axes):
+                return _compress_tiles_pair_sharded(
+                    locs, params, layout=layout, nb=nb, nbl=nbl, T=T, cb=cb,
+                    tol=tol, kmax=kmax, nugget=nugget, gen=gen,
+                    d_spatial=d_spatial, scale=scale, mesh=mesh,
+                    row_axes=row_axes, dtype=dtype)
+            warn_fallback_once(
+                "compress-layout-shards",
+                f"dist_compress_tiles: layout was built for n_shards="
+                f"{layout.n_shards} but the mesh pair axes span "
+                f"{pair_shards(mesh, row_axes)} devices — falling back to "
+                "the replicated compression batch (a per-device memory "
+                "cliff); build the layout with pair_shards(mesh, row_axes)")
+            svd_mesh = None
         dspec, pspec, rspec = _pair_specs(mesh, row_axes)
         u = jnp.zeros((layout.length, nb, kmax), dtype)
         v = jnp.zeros((layout.length, nb, kmax), dtype)
@@ -211,18 +253,16 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
                                    block=nb)                  # (m, cb*nb)
         panel = _constrain(panel, mesh, P(row, "model"))
         tiles = panel.reshape(T, nb, cb, nb).transpose(2, 0, 1, 3)
-        uu, ss, vvt = jnp.linalg.svd(tiles.reshape(cb * T, nb, nb),
-                                     full_matrices=False)
-        U, V, R = jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
-                                                         scale))(uu, ss, vvt)
+        U, V, R = sharded_truncate_svd(tiles.reshape(cb * T, nb, nb), tol,
+                                       kmax, scale, mesh=svd_mesh,
+                                       axes=svd_axes)
         U = U.reshape(cb, T, nb, kmax)
         V = V.reshape(cb, T, nb, kmax)
         R = R.reshape(cb, T)
         for c in range(cb):             # static unroll over the group
             j = g * cb + c
             dj = lax.dynamic_index_in_dim(tiles[c], j, 0, keepdims=False)
-            if nugget:
-                dj = dj + nugget * jnp.eye(nb, dtype=dtype)
+            dj = apply_nugget(dj, nugget, dtype)
             diag = lax.dynamic_update_index_in_dim(diag, dj, j, 0)
             below = rows_idx > j
             Uc = jnp.where(below[:, None, None], U[c], 0.0)
@@ -247,12 +287,98 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
             v = _constrain(v, mesh, uvspec)
         return diag, u, v, ranks
 
-    diag, u, v, ranks = lax.fori_loop(jnp.int32(0), jnp.int32(T // cb), body,
-                                      (diag, u, v, ranks))
+    diag, u, v, ranks = indexed_scan(body, T // cb, (diag, u, v, ranks))
     if pair_mode:
         return PairTLR(diag=diag, u=u, v=v, ranks=ranks,
                        n_shards=layout.n_shards)
     return TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
+
+
+def _compress_tiles_pair_sharded(locs, params, *, layout: PairLayout, nb, nbl,
+                                 T, cb, tol, kmax, nugget, gen, d_spatial,
+                                 scale, mesh, row_axes, dtype):
+    """Owned-slot generator-direct compression: every device generates and
+    SVD-truncates only the strict-lower tiles whose block-cyclic pair slots
+    it owns, straight into its local shard.
+
+    The fori step g runs one shard_map over the pair axes.  Per column j of
+    the group, each device reads its owned row-tile list from
+    ``column_owner_tables`` (a sharded (S, T, L) operand, L =
+    ceil((T-1)/S)), gathers those L location blocks, generates the local
+    (L*nb, nb) sub-panel with ``build_sigma_panel`` (identical per-tile
+    values to the full build_sigma_column panel — entries are elementwise in
+    the pairwise distances), SVD-truncates its L tiles, and scatters them at
+    the shard-*local* slots.  Sentinel entries (column-j pads) gather zero
+    locations and scatter to the out-of-bounds local slot, so they drop;
+    upper-triangle tiles are never generated at all.  Per-device transient:
+    O(L * nb * nb) panel + O(L) tiles of SVD workspace per column, versus
+    the replicated form's O(m * cb*nb) panel + the whole cb*T batch — the
+    O(tiles/S) compress scaling of the ROADMAP item.  The only per-step
+    communication is the replicated locs broadcast the generator needs
+    anyway.
+
+    Diagonal tiles (not in the pair set) are generated outside the
+    shard_map, one (nb, nb) block per column, with the nugget applied
+    jit-safely (core.tlr.apply_nugget)."""
+    dspec, pspec, rspec = _pair_specs(mesh, row_axes)
+    axes = pair_axis(mesh, row_axes)
+    own_rows, own_slots = column_owner_tables(layout)
+    L = own_rows.shape[-1]
+    own_rows = jnp.asarray(own_rows)        # (S, T, L)
+    own_slots = jnp.asarray(own_slots)
+    ospec = P(axes, None, None)
+    scale = jnp.asarray(scale)
+    col_off = jnp.arange(nbl)
+
+    def local(g, u_l, v_l, r_l, rows_l, slots_l, locs_f, sc):
+        rows_l = rows_l.reshape(T, L)       # this shard's (1, T, L) slice
+        slots_l = slots_l.reshape(T, L)
+        for c in range(cb):                 # static unroll over the group
+            j = g * cb + c
+            rj = lax.dynamic_index_in_dim(rows_l, j, 0, keepdims=False)
+            sj = lax.dynamic_index_in_dim(slots_l, j, 0, keepdims=False)
+            idx = (rj[:, None] * nbl + col_off[None, :]).reshape(-1)
+            row_locs = locs_f.at[idx].get(mode="fill", fill_value=0.0)
+            cols = lax.dynamic_slice_in_dim(locs_f, j * nbl, nbl, axis=0)
+            panel = build_sigma_panel(row_locs, cols, params,
+                                      d_spatial=d_spatial, gen=gen, block=nb)
+            tiles = panel.reshape(L, nb, nb).astype(u_l.dtype)
+            Uj, Vj, Rj = svd_truncate_batch(tiles, tol, kmax, sc)
+            u_l = u_l.at[sj].set(Uj, mode="drop")   # sentinel slots drop
+            v_l = v_l.at[sj].set(Vj, mode="drop")
+            r_l = r_l.at[sj].set(Rj, mode="drop")
+        return u_l, v_l, r_l
+
+    step = shard_map(local, mesh,
+                     in_specs=(P(), pspec, pspec, rspec, ospec, ospec,
+                               P(None, None), P()),
+                     out_specs=(pspec, pspec, rspec),
+                     check_rep=False)
+
+    u = jnp.zeros((layout.length, nb, kmax), dtype)
+    v = jnp.zeros((layout.length, nb, kmax), dtype)
+    ranks = jnp.zeros((layout.length,), jnp.int32)
+    diag = jnp.zeros((T, nb, nb), dtype)
+
+    def body(g, carry):
+        diag, u, v, ranks = carry
+        u, v, ranks = step(g, u, v, ranks, own_rows, own_slots, locs, scale)
+        for c in range(cb):
+            j = g * cb + c
+            pj = lax.dynamic_slice_in_dim(locs, j * nbl, nbl, axis=0)
+            dj = build_sigma_panel(pj, pj, params, d_spatial=d_spatial,
+                                   gen=gen, block=nb).astype(dtype)
+            dj = apply_nugget(dj, nugget, dtype)
+            diag = lax.dynamic_update_index_in_dim(diag, dj, j, 0)
+        diag = _constrain(diag, mesh, dspec)
+        u = _constrain(u, mesh, pspec)
+        v = _constrain(v, mesh, pspec)
+        ranks = _constrain(ranks, mesh, rspec)
+        return diag, u, v, ranks
+
+    diag, u, v, ranks = indexed_scan(body, T // cb, (diag, u, v, ranks))
+    return PairTLR(diag=diag, u=u, v=v, ranks=ranks,
+                   n_shards=layout.n_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -483,8 +609,7 @@ def dist_tlr_solve_lower_pairs(diag_l, up, vp, z, *, layout: PairLayout):
         z = z - jnp.where(below, delta, 0.0)
         return z, out
 
-    _, out = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
-                           (z, jnp.zeros_like(z)))
+    _, out = indexed_scan(body, T, (z, jnp.zeros_like(z)))
     return out.reshape(-1)
 
 
@@ -503,8 +628,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                     tol: float = 1e-7, scale=None, mesh=None,
                     row_axes=("data",), super_panels: int = 1,
                     block_cyclic: bool = False, layout: PairLayout = None,
-                    col_block: int = 1,
-                    shard_recompress: bool = True) -> LoglikResult:
+                    col_block: int = 1, shard_recompress: bool = True,
+                    shard_svd: bool = True) -> LoglikResult:
     """Distributed TLR likelihood (Eq. 1 through the sharded TLR factor).
 
     Two entry modes:
@@ -525,7 +650,9 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
     ``layout`` must match it (ValueError otherwise — two layouts of the
     same T can share a length while ordering slots differently).
     ``shard_recompress`` (block-cyclic only) runs the recompress QR/SVD
-    under shard_map over the pair axis (distribution/pair_qr.py).
+    under shard_map over the pair axis (distribution/pair_qr.py);
+    ``shard_svd`` does the same for the compression-phase truncation SVDs
+    (and, pair-native, the GEN panel itself — see dist_compress_tiles).
     """
     if isinstance(t, PairTLR):
         block_cyclic = True
@@ -548,7 +675,7 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                                 max_rank=max_rank, nugget=nugget, gen=gen,
                                 d_spatial=d_spatial, scale=scale, mesh=mesh,
                                 row_axes=row_axes, layout=layout,
-                                col_block=col_block)
+                                col_block=col_block, shard_svd=shard_svd)
     elif t is None:
         raise ValueError("pass a TLRMatrix/PairTLR, or locs/params with "
                          "from_tiles=True")
@@ -697,8 +824,7 @@ def dist_tlr_gen_lowerable(n: int, p: int, params, *, tile_size: int,
             panel = _constrain(panel, mesh, P(row, "model"))
             return acc + jnp.sum(panel * panel)
 
-        return lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
-                             jnp.zeros((), dtype))
+        return indexed_scan(body, T, jnp.zeros((), dtype))
 
     return fn, (jax.ShapeDtypeStruct((n, 2), dtype),)
 
@@ -707,9 +833,11 @@ def dist_tlr_compress_lowerable(n: int, p: int, params, *, tile_size: int,
                                 max_rank: int, tol: float, nugget: float = 0.0,
                                 gen: str = "xla", mesh, dtype=jnp.float32,
                                 row_axes=("data",), block_cyclic: bool = False,
-                                col_block: int = 1):
+                                col_block: int = 1, shard_svd: bool = True):
     """GEN + compress: locations -> sharded fixed-kmax D/U/V/ranks (grid or
-    block-cyclic pair-major)."""
+    block-cyclic pair-major).  ``shard_svd=False`` compiles the PR-4
+    replicated truncation batch so the dry-run can report the per-device
+    compress temp drop the sharding buys."""
     layout = None
     if block_cyclic:
         m = n * p
@@ -720,7 +848,7 @@ def dist_tlr_compress_lowerable(n: int, p: int, params, *, tile_size: int,
         t = dist_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
                                 max_rank=max_rank, nugget=nugget, gen=gen,
                                 mesh=mesh, row_axes=row_axes, layout=layout,
-                                col_block=col_block)
+                                col_block=col_block, shard_svd=shard_svd)
         return t.diag, t.u, t.v, t.ranks
 
     return fn, (jax.ShapeDtypeStruct((n, 2), dtype),)
@@ -732,7 +860,8 @@ def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                 row_axes=("data",), super_panels: int = 1,
                                 block_cyclic: bool = False,
                                 col_block: int = 1,
-                                shard_recompress: bool = True):
+                                shard_recompress: bool = True,
+                                shard_svd: bool = True):
     """End-to-end generator-direct pipeline: (locs, z) -> GEN -> compress ->
     factorize -> loglik, with real Matérn tiles (no random-spec stand-ins)."""
 
@@ -744,7 +873,8 @@ def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                super_panels=super_panels,
                                block_cyclic=block_cyclic,
                                col_block=col_block,
-                               shard_recompress=shard_recompress)
+                               shard_recompress=shard_recompress,
+                               shard_svd=shard_svd)
 
     specs = (jax.ShapeDtypeStruct((n, 2), dtype),
              jax.ShapeDtypeStruct((n * p,), dtype))

@@ -49,6 +49,12 @@ class MLEConfig:
     # and pair-native end-to-end.  Only read by the dist_tlr path.
     block_cyclic: bool = False
     super_panels: int = 1           # >1: two-level dist factorization (§Perf)
+    # Shard the compression-phase truncation SVDs (and, pair-native, the GEN
+    # panel itself) over the pair axis via shard_map — each device generates
+    # and compresses only the block-cyclic slots it owns
+    # (distribution/compress_svd.py).  Only read by the dist_tlr path; on a
+    # single device (mesh=None) the replicated batch runs either way.
+    shard_svd: bool = True
     gen: str = "pallas"             # tile generator: pallas half-integer fast
                                     # path (per-pair XLA fallback) | xla
     tile_size: int = 0              # 0 -> auto (~sqrt(pn))
@@ -132,7 +138,8 @@ def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig, locs=None):
                                    nugget=cfg.nugget, gen=cfg.gen,
                                    tol=cfg.tlr_tol,
                                    super_panels=cfg.super_panels,
-                                   block_cyclic=cfg.block_cyclic).loglik
+                                   block_cyclic=cfg.block_cyclic,
+                                   shard_svd=cfg.shard_svd).loglik
         from .tlr import tlr_loglik
         return tlr_loglik(dists, z, params, tol=cfg.tlr_tol,
                           max_rank=cfg.tlr_max_rank, tile_size=cfg.tile_size,

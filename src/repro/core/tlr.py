@@ -48,6 +48,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding
 
+from ..distribution.compress_svd import svd_truncate_batch
 from ..distribution.pair_qr import sharded_recompress
 from .covariance import MaternParams, build_sigma, build_sigma_panel
 from .likelihood import LoglikResult
@@ -118,6 +119,13 @@ def choose_tile_size(m: int, target: int = 0, multiple_of: int = 1) -> int:
         gap = abs(nb - target)
         if best is None or gap < best_gap:
             best, best_gap = nb, gap
+    if best is None:
+        # Returning None here used to crash far downstream with an opaque
+        # "unsupported operand type(s) for //: 'int' and 'NoneType'".
+        raise ValueError(
+            f"choose_tile_size: no divisor of m={m} is a multiple of "
+            f"multiple_of={multiple_of} (target={target}); pass a tile size "
+            "that divides m, or fix m/multiple_of")
     return best
 
 
@@ -168,13 +176,23 @@ def tlr_compress(sigma, tile_size: int = 0, tol: float = 1e-7,
     il, jl = np.tril_indices(T, k=-1)
     if len(il):
         low = tiles[il, jl]                                  # (L, nb, nb)
-        uu, ss, vvt = jnp.linalg.svd(low, full_matrices=False)
-        U, V, R = jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
-                                                         scale))(uu, ss, vvt)
+        U, V, R = svd_truncate_batch(low, tol, kmax, scale)
         u = u.at[il, jl].set(U)
         v = v.at[il, jl].set(V)
         ranks = ranks.at[il, jl].set(R)
     return TLRMatrix(diag=diag, u=u, v=v, ranks=ranks)
+
+
+def apply_nugget(diag_tiles, nugget, dtype):
+    """Nugget on (..., nb, nb) diagonal tiles — `is not None`, not
+    truthiness: a traced nugget (the MLE estimating it under jit) raises
+    TracerBoolConversionError in a bool context.  Placement matches
+    ``build_sigma``: diagonal tiles only.  Shared by the single-device
+    (generate_tiles) and distributed (dist_compress_tiles) paths."""
+    if nugget is None:
+        return diag_tiles
+    nb = diag_tiles.shape[-1]
+    return diag_tiles + jnp.asarray(nugget, dtype) * jnp.eye(nb, dtype=dtype)
 
 
 def generate_tiles(locs, params: MaternParams, tile_size: int = 0,
@@ -205,8 +223,7 @@ def generate_tiles(locs, params: MaternParams, tile_size: int = 0,
     diag = jnp.stack([build_sigma_panel(panels[t], panels[t], params,
                                         d_spatial=d_spatial, gen=gen)
                       for t in range(T)])
-    if nugget:
-        diag = diag + nugget * jnp.eye(nb, dtype=diag.dtype)[None]
+    diag = apply_nugget(diag, nugget, diag.dtype)
 
     def lower_panels():
         for j in range(T - 1):
@@ -246,9 +263,7 @@ def tlr_compress_tiles(locs, params: MaternParams, tile_size: int = 0,
     v = jnp.zeros((T, T, nb, kmax), diag.dtype)
     ranks = jnp.zeros((T, T), jnp.int32)
     for j, tiles in enumerate(lower):
-        uu, ss, vvt = jnp.linalg.svd(tiles, full_matrices=False)
-        U, V, R = jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
-                                                         scale))(uu, ss, vvt)
+        U, V, R = svd_truncate_batch(tiles, tol, kmax, scale)
         u = u.at[j + 1:, j].set(U)
         v = v.at[j + 1:, j].set(V)
         ranks = ranks.at[j + 1:, j].set(R)
@@ -282,6 +297,76 @@ def _constrain(x, mesh, spec):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+@jax.custom_jvp
+def _safe_qr(a):
+    """Reduced QR with rank-deficiency-safe derivatives.
+
+    The recompress concats carry zero-padded rank columns, so R is exactly
+    singular and the textbook QR JVP (a triangular solve against R) returns
+    NaN.  The primal is jnp.linalg.qr verbatim; the JVP bumps (near-)zero R
+    diagonal entries to 1 before the solve — those directions correspond to
+    the padded columns, whose downstream contributions the tol*scale rank
+    mask zeroes anyway, so the guard only replaces NaN with a finite
+    subgradient choice."""
+    q, r = jnp.linalg.qr(a)
+    return q, r              # plain tuple: custom_jvp needs one pytree shape
+
+
+@_safe_qr.defjvp
+def _safe_qr_jvp(primals, tangents):
+    (a,), (da,) = primals, tangents
+    q, r = _safe_qr(a)
+    k = r.shape[-1]
+    diag = jnp.diagonal(r, axis1=-2, axis2=-1)
+    lim = 1e-40 + 1e-12 * jnp.max(jnp.abs(diag), axis=-1, keepdims=True)
+    bump = jnp.where(jnp.abs(diag) > lim, 0.0, 1.0)
+    r_safe = r + jnp.eye(k, dtype=r.dtype) * bump[..., None, :]
+    da_rinv = lax.linalg.triangular_solve(r_safe, da)       # da @ r^{-1}
+    qt_da_rinv = jnp.swapaxes(q, -1, -2) @ da_rinv
+    low = jnp.tril(qt_da_rinv, -1)
+    do = low - jnp.swapaxes(low, -1, -2)                    # skew-symmetric
+    dq = q @ (do - qt_da_rinv) + da_rinv
+    dr = (qt_da_rinv - do) @ r
+    return (q, r), (dq, dr)
+
+
+@jax.custom_jvp
+def _core_svd(core):
+    """SVD of the square recompress core with degenerate-gap-safe
+    derivatives.
+
+    The core's zero-padded rank columns give it *exactly repeated* zero
+    singular values, and the textbook SVD JVP divides by s_j^2 - s_i^2 —
+    NaN gradients for every traced-parameter MLE that differentiates
+    through the factorization.  The primal is jnp.linalg.svd verbatim
+    (full_matrices=False — identical for a square core); the custom JVP
+    zeroes the 1/(s_j^2 - s_i^2) terms inside (near-)degenerate blocks.
+    Those components are exactly the ones the tol*scale rank mask zeroes
+    downstream, so the product derivative the likelihood consumes is
+    unaffected — the guard only replaces NaN with a finite subgradient
+    choice."""
+    u, s, vt = jnp.linalg.svd(core, full_matrices=False)
+    return u, s, vt          # plain tuple: custom_jvp needs one pytree shape
+
+
+@_core_svd.defjvp
+def _core_svd_jvp(primals, tangents):
+    (a,), (da,) = primals, tangents
+    u, s, vt = _core_svd(a)
+    v = jnp.swapaxes(vt, -1, -2)
+    dp = jnp.swapaxes(u, -1, -2) @ da @ v               # (..., n, n)
+    ds = jnp.diagonal(dp, axis1=-2, axis2=-1)
+    s2 = s * s
+    gap = s2[..., None, :] - s2[..., :, None]           # gap[i,j] = s_j^2-s_i^2
+    lim = 1e-40 + 1e-12 * jnp.max(s2, axis=-1, keepdims=True)[..., None]
+    safe = jnp.abs(gap) > lim
+    f = jnp.where(safe, 1.0, 0.0) / jnp.where(safe, gap, 1.0)
+    dpt = jnp.swapaxes(dp, -1, -2)
+    du = u @ (f * (dp * s[..., None, :] + s[..., :, None] * dpt))
+    dv = v @ (f * (s[..., :, None] * dp + dpt * s[..., None, :]))
+    return (u, s, vt), (du, ds, jnp.swapaxes(dv, -1, -2))
+
+
 def _batched_recompress(u1, v1, u2, v2, tol, scale):
     """(B..., nb, k) pairs -> recompressed sum with rank <= kmax, batched.
 
@@ -291,10 +376,10 @@ def _batched_recompress(u1, v1, u2, v2, tol, scale):
     kmax = u1.shape[-1]
     ucat = jnp.concatenate([u1, u2], axis=-1)       # (..., nb, 2k)
     vcat = jnp.concatenate([v1, v2], axis=-1)
-    qu, ru = jnp.linalg.qr(ucat)
-    qv, rv = jnp.linalg.qr(vcat)
+    qu, ru = _safe_qr(ucat)
+    qv, rv = _safe_qr(vcat)
     core = ru @ jnp.swapaxes(rv, -1, -2)
-    cu, cs, cvt = jnp.linalg.svd(core)
+    cu, cs, cvt = _core_svd(core)
     # cs is sorted descending, so thresholding the first kmax values gives
     # min(#kept, kmax) — the same rank the unbatched form reports.
     mask = (cs[..., :kmax] > tol * scale)
@@ -408,18 +493,34 @@ def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
     return diag, u, v, ranks
 
 
+def indexed_scan(body, k_hi: int, carry):
+    """fori_loop(0, k_hi) with an s32 induction variable that reverse-mode
+    AD can handle: one lax.scan over a static int32 arange.
+
+    Two constraints meet here.  The SPMD partitioner rejects mixed s64/s32
+    index arithmetic in dynamic updates, so under jax_enable_x64 the loop
+    index must be s32 — but fori_loop only keeps it s32 when given jnp.int32
+    bounds, which reverse-mode AD then refuses ("dynamic start/stop").
+    Scanning over jnp.arange(k_hi, dtype=int32) gives a static trip count
+    (reverse-differentiable — the MLE gradding through a traced nugget) and
+    an s32 index, and lowers to the same while loop.  ``body`` has the
+    fori_loop signature (k, carry) -> carry."""
+    def step(c, k):
+        return body(k, c), None
+
+    carry, _ = lax.scan(step, carry, jnp.arange(k_hi, dtype=jnp.int32))
+    return carry
+
+
 def panel_loop(diag, u, v, ranks, k_hi: int, *, tol, scale, pairs=None,
                mesh=None, dspec=None, uvspec=None):
-    """Run the shared panel body for k in [0, k_hi) under one lax.fori_loop
-    (static trip count, so XLA lowers it as a scan — one traced body)."""
+    """Run the shared panel body for k in [0, k_hi) under one indexed_scan
+    (static trip count — one traced body, reverse-differentiable)."""
     def body(k, carry):
         return tlr_panel_body(k, *carry, tol=tol, scale=scale, pairs=pairs,
                               mesh=mesh, dspec=dspec, uvspec=uvspec)
 
-    # int32 bounds keep the loop index s32 under jax_enable_x64 — the SPMD
-    # partitioner rejects mixed s64/s32 index arithmetic in dynamic updates.
-    return lax.fori_loop(jnp.int32(0), jnp.int32(k_hi), body,
-                         (diag, u, v, ranks))
+    return indexed_scan(body, k_hi, (diag, u, v, ranks))
 
 
 def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
@@ -491,14 +592,13 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
 
 def pair_panel_loop(diag, up, vp, ranks, k_hi: int, *, layout, tol, scale,
                     mesh=None, dspec=None, pspec=None, shard_axes=None):
-    """fori_loop of the block-cyclic pair body for k in [0, k_hi)."""
+    """indexed_scan of the block-cyclic pair body for k in [0, k_hi)."""
     def body(k, carry):
         return tlr_panel_body_bc(k, *carry, layout=layout, tol=tol,
                                  scale=scale, mesh=mesh, dspec=dspec,
                                  pspec=pspec, shard_axes=shard_axes)
 
-    return lax.fori_loop(jnp.int32(0), jnp.int32(k_hi), body,
-                         (diag, up, vp, ranks))
+    return indexed_scan(body, k_hi, (diag, up, vp, ranks))
 
 
 def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRCholesky:
@@ -550,8 +650,7 @@ def solve_lower_grid(diag_l, u, v, z) -> jax.Array:
         z = z - jnp.where(below, delta, 0.0)
         return z, out
 
-    _, out = lax.fori_loop(jnp.int32(0), jnp.int32(T), body,
-                           (z, jnp.zeros_like(z)))
+    _, out = indexed_scan(body, T, (z, jnp.zeros_like(z)))
     return out.reshape(-1)
 
 
@@ -590,7 +689,7 @@ def tlr_matvec(t: TLRMatrix, x) -> jax.Array:
         wu = jnp.where(below, jnp.einsum("tnk,tn->tk", uk, x), 0.0)
         return y.at[k].add(jnp.einsum("tnk,tk->n", vk, wu))
 
-    y = lax.fori_loop(jnp.int32(0), jnp.int32(T), body, y0)
+    y = indexed_scan(body, T, y0)
     return y.reshape(-1)
 
 

@@ -45,7 +45,8 @@ import numpy as np
 import jax.numpy as jnp
 
 __all__ = ["PairLayout", "pair_layout", "pair_shards", "pair_axis",
-           "grid_to_pairs", "pairs_to_grid", "slice_positions"]
+           "grid_to_pairs", "pairs_to_grid", "slice_positions",
+           "column_owner_tables"]
 
 
 class PairLayout(NamedTuple):
@@ -134,6 +135,45 @@ def pairs_to_grid(xp, layout: PairLayout):
     keep = np.nonzero(layout.valid)[0]
     out = jnp.zeros((T, T) + xp.shape[1:], xp.dtype)
     return out.at[layout.il[keep], layout.jl[keep]].set(xp[keep])
+
+
+@functools.lru_cache(maxsize=None)
+def _column_owner_tables(n_tiles: int, n_shards: int):
+    layout = pair_layout(n_tiles, n_shards)
+    T, S, pps = layout.n_tiles, layout.n_shards, layout.pairs_per_shard
+    per_col = max(-(-(T - 1) // S), 1)
+    rows = np.full((S, T, per_col), T, np.int32)
+    slots = np.full((S, T, per_col), pps, np.int32)
+    counts = np.zeros((S, T), np.int32)
+    for s in np.nonzero(layout.valid)[0]:
+        i, j = int(layout.il[s]), int(layout.jl[s])
+        d, local = s // pps, s % pps
+        rows[d, j, counts[d, j]] = i
+        slots[d, j, counts[d, j]] = local
+        counts[d, j] += 1
+    return rows, slots
+
+
+def column_owner_tables(layout: PairLayout):
+    """Per-shard, per-column slot ownership of the block-cyclic deal.
+
+    Returns ``(rows, slots)``, int32 arrays of shape (S, T, L) with
+    L = ceil((T-1)/S): ``rows[d, j]`` lists the strict-lower row tiles i of
+    tile column j whose pair slot shard d owns, and ``slots[d, j]`` the
+    matching *shard-local* slot index.  Because column j's pairs are
+    consecutive in the column-major enumeration and the deal is cyclic,
+    every shard owns floor/ceil((T-1-j)/S) of them — the per-column GEN +
+    SVD work stays balanced at every column, which is what lets the
+    compression generate only owned tiles per device
+    (core.dist_tlr._compress_tiles_pair_sharded).
+
+    Unused entries carry sentinels — row ``T`` (out of bounds for a
+    mode="fill" location gather) and local slot ``pairs_per_shard`` (out of
+    bounds for a mode="drop" scatter into the (pairs_per_shard, ...) local
+    shard) — mirroring the ``pos`` sentinel convention above.  All static
+    numpy, derived from (n_tiles, n_shards) alone.
+    """
+    return _column_owner_tables(layout.n_tiles, layout.n_shards)
 
 
 def slice_positions(outer: PairLayout, inner: PairLayout, offset: int

@@ -1,0 +1,79 @@
+"""Pair-axis-partitioned compression-phase truncation SVD (the ROADMAP
+"shard the per-column-group truncation SVDs" item — the compress-phase
+counterpart of distribution/pair_qr.py).
+
+The generator-direct compression (core.dist_tlr.dist_compress_tiles) SVDs
+every strict-lower tile of a column group in one (cb*T, nb, nb) batch.  The
+per-tile truncations are independent — HiCMA/ExaGeoStat schedule them as
+independent tasks (Abdulah et al. 2018, arXiv:1804.09137) — but under plain
+GSPMD the batched ``jnp.linalg.svd`` carries no partitioning rule, so after
+PR 4 sharded the factorize-phase QR/SVD this batch became the dominant
+per-device temp (~3.2 GB/device at mle_65k on the 256-device pod).
+
+``sharded_truncate_svd`` runs the identical SVD + fixed-kmax truncation
+under ``shard_map`` over the leading tile axis, so each device holds only
+its ~batch/S tiles of SVD workspace.  Indivisible batch lengths are
+zero-padded to a multiple of the shard count and stripped after
+(``pair_qr.pad_leading`` — zero tiles SVD to zeros); with ``mesh=None`` or
+an empty axis tuple the call is exactly the replicated batch (the PR-4
+fallback contract: one code path, two placements).
+
+The deeper form — each device *generating* only the tiles whose block-cyclic
+slots it owns, so the GEN panel itself never replicates — lives in
+``core.dist_tlr._compress_tiles_pair_sharded`` on top of
+``distribution.block_cyclic.column_owner_tables``; this module is the
+placement-agnostic batch primitive both forms share.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .pair_qr import pad_leading, pair_shard_count
+
+__all__ = ["svd_truncate_batch", "sharded_truncate_svd"]
+
+
+def svd_truncate_batch(tiles, tol, kmax: int, scale):
+    """(B, nb, nb) tiles -> (U, V, ranks): batched SVD + fixed-kmax
+    truncation (core.tlr._truncate_svd), the exact math every compression
+    entry point runs.  ``scale`` may be a traced scalar."""
+    from ..core.tlr import _truncate_svd
+
+    uu, ss, vvt = jnp.linalg.svd(tiles, full_matrices=False)
+    return jax.vmap(lambda a, b, c: _truncate_svd(a, b, c, tol, kmax,
+                                                  scale))(uu, ss, vvt)
+
+
+def sharded_truncate_svd(tiles, tol, kmax: int, scale, *, mesh=None,
+                         axes=None):
+    """Truncation SVD of a (B, nb, nb) tile batch, sharded over the tile
+    axis.
+
+    Identical math to ``svd_truncate_batch`` but executed under
+    ``shard_map`` over ``axes`` (the mesh axis names the batch axis is laid
+    out over), so each device SVDs only its own ~B/S tiles — no collective
+    is needed, the map is embarrassingly parallel.  ``mesh=None`` / empty
+    ``axes`` is exactly the replicated batch; an indivisible B is
+    zero-padded to a multiple of the shard count and stripped after.
+    Returns (U, V, ranks) with U/V zero-padded to kmax columns and ranks
+    int32 of shape (B,).
+    """
+    axes = tuple(axes) if axes else ()
+    shards = pair_shard_count(mesh, axes)
+    if mesh is None or not axes:
+        return svd_truncate_batch(tiles, tol, kmax, scale)
+    (tiles,), length = pad_leading((tiles,), shards)
+    spec = P(axes, None, None)
+    scale = jnp.asarray(scale)
+
+    def local(tl, sc):
+        return svd_truncate_batch(tl, tol, kmax, sc)
+
+    fn = shard_map(local, mesh, in_specs=(spec, P()),
+                   out_specs=(spec, spec, P(axes)),
+                   check_rep=False)
+    U, V, R = fn(tiles, scale)
+    return U[:length], V[:length], R[:length]

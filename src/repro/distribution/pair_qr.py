@@ -18,19 +18,30 @@ step), so the recompress workspace scales O(pairs/S) per device instead of
 O(pairs).  No collective is needed — the map is embarrassingly parallel, the
 out specs simply re-assert the input placement.
 
-Fallback contract: with ``mesh=None`` (the single-device tests/benches), an
-empty axis tuple, or a batch length the mesh axes don't divide, the call is
-exactly ``core.tlr._batched_recompress`` — one code path, two placements.
+Fallback contract: with ``mesh=None`` (the single-device tests/benches) or an
+empty axis tuple, the call is exactly ``core.tlr._batched_recompress`` — one
+code path, two placements.  A batch length the mesh axes don't divide is
+zero-padded to the next multiple of the shard count and stripped after
+(``pad_leading`` — zero slots QR/SVD to zeros, so padding is free), so the
+sharding survives indivisible lengths instead of silently replicating; a
+caller that disables padding (``pad=False``) gets the replicated batch plus
+a one-time ``RuntimeWarning`` (``warn_fallback_once``) so the perf cliff is
+never silent.  ``distribution/compress_svd.py`` reuses the same helpers for
+the compression-phase truncation SVDs.
 """
 from __future__ import annotations
 
 import math
+import warnings
 
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["pair_shard_count", "sharded_recompress"]
+__all__ = ["pair_shard_count", "pad_leading", "warn_fallback_once",
+           "sharded_recompress"]
+
+_warned_fallbacks: set[str] = set()
 
 
 def pair_shard_count(mesh, axes) -> int:
@@ -40,7 +51,36 @@ def pair_shard_count(mesh, axes) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 
 
-def sharded_recompress(up, vp, du, dv, tol, scale, *, mesh=None, axes=None):
+def pad_leading(arrays, multiple: int):
+    """Zero-pad every array's leading axis to the next multiple.
+
+    Returns ``(padded, length)`` with ``length`` the original leading size —
+    slice ``[:length]`` after the sharded call to strip the pads.  Zero pad
+    slots are free through the QR/SVD math (they factorize to zeros), which
+    is what lets the sharded forms accept any batch length.
+    """
+    n = arrays[0].shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return tuple(arrays), n
+    return tuple(jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+                 for a in arrays), n
+
+
+def warn_fallback_once(key: str, message: str):
+    """Emit one RuntimeWarning per distinct fallback site per process.
+
+    The mesh=None / empty-axes replicated paths are *contracts* (the
+    single-device tests run them on purpose); this is for the cases where a
+    caller asked for sharding and silently would not get it — those were the
+    PR-4 silent perf cliffs."""
+    if key not in _warned_fallbacks:
+        _warned_fallbacks.add(key)
+        warnings.warn(message, RuntimeWarning, stacklevel=3)
+
+
+def sharded_recompress(up, vp, du, dv, tol, scale, *, mesh=None, axes=None,
+                       pad: bool = True):
     """(length, nb, k) pair batches -> recompressed sum, QR/SVD sharded over
     the pair axis.
 
@@ -49,15 +89,29 @@ def sharded_recompress(up, vp, du, dv, tol, scale, *, mesh=None, axes=None):
     under ``shard_map`` so each device factorizes only its own block-cyclic
     pair slots.  ``axes`` is the tuple of mesh axis names the pair axis is
     laid out over (``distribution.block_cyclic.pair_axis``); ``scale`` may be
-    a traced scalar (it travels as a replicated shard_map operand).  Returns
-    (U, V, ranks) with ranks int32 of shape (length,).
+    a traced scalar (it travels as a replicated shard_map operand).  An
+    indivisible batch length is zero-padded to a multiple of the shard count
+    and stripped after (``pad=False`` instead falls back to the replicated
+    batch with a one-time warning).  Returns (U, V, ranks) with ranks int32
+    of shape (length,).
     """
     from ..core.tlr import _batched_recompress
 
     axes = tuple(axes) if axes else ()
     shards = pair_shard_count(mesh, axes)
-    if mesh is None or not axes or up.shape[0] % shards:
+    if mesh is None or not axes:
         return _batched_recompress(up, vp, du, dv, tol, scale)
+    length = up.shape[0]
+    if length % shards:
+        if not pad:
+            warn_fallback_once(
+                "recompress-indivisible",
+                f"sharded_recompress: pair batch length {length} is not "
+                f"divisible by {shards} shards and pad=False — falling back "
+                "to the fully replicated QR/SVD batch (a per-device memory "
+                "cliff); pad the batch or fix the layout")
+            return _batched_recompress(up, vp, du, dv, tol, scale)
+        (up, vp, du, dv), _ = pad_leading((up, vp, du, dv), shards)
 
     spec = P(axes, None, None)
     scale = jnp.asarray(scale)
@@ -69,4 +123,5 @@ def sharded_recompress(up, vp, du, dv, tol, scale, *, mesh=None, axes=None):
                    in_specs=(spec, spec, spec, spec, P()),
                    out_specs=(spec, spec, P(axes)),
                    check_rep=False)
-    return fn(up, vp, du, dv, scale)
+    un, vn, rn = fn(up, vp, du, dv, scale)
+    return un[:length], vn[:length], rn[:length]

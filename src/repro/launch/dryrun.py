@@ -283,7 +283,14 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
     recompress batch, so the report shows the per-device temp drop the
     sharding buys; ``recompress_temp_model`` is the closed-form prediction
     (roofline.tlr_recompress_temp_model) the measured temps should track —
-    the recompress workspace shrinks ~S-fold."""
+    the recompress workspace shrinks ~S-fold.
+
+    ``gen_compress_sharded`` is the compress-phase counterpart (the
+    production form the e2e pipeline runs, aliased as ``compress``): each
+    device generates + truncation-SVDs only its owned block-cyclic slots
+    (dist_compress_tiles shard_svd), versus ``gen_compress``'s replicated
+    batch; ``compress_temp_model`` (roofline.tlr_compress_temp_model) is
+    its closed-form per-device working-set prediction."""
     from ..core.dist_tlr import (dist_tlr_compress_lowerable,
                                  dist_tlr_gen_lowerable,
                                  dist_tlr_in_shardings, dist_tlr_lowerable)
@@ -302,12 +309,18 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
     comp_fn, comp_specs = dist_tlr_compress_lowerable(
         shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
         tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
-        block_cyclic=cfg.block_cyclic)
+        block_cyclic=cfg.block_cyclic, shard_svd=False)
+    comp_sh_fn, comp_sh_specs = dist_tlr_compress_lowerable(
+        shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
+        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
+        block_cyclic=cfg.block_cyclic, shard_svd=True)
 
     locs_sh = (NamedSharding(mesh, P(row, None)),)
     cells = dict(
         gen=(gen_fn, gen_specs, locs_sh, t_tiles, ()),
         gen_compress=(comp_fn, comp_specs, locs_sh, t_tiles, ()),
+        gen_compress_sharded=(comp_sh_fn, comp_sh_specs, locs_sh, t_tiles,
+                              ()),
     )
     for name, bc, shard_qr in (("factorize_masked", False, True),
                                ("factorize_bc", True, True),
@@ -335,12 +348,16 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
     out["compress_only"] = {
         k: max(out["gen_compress"][k] - out["gen"][k], 0.0)
         for k in ("flops", "bytes", "coll")}
+    # production aliases: the forms the e2e pipeline cell actually runs
     out["factorize"] = out["factorize_bc" if cfg.block_cyclic else
                            "factorize_masked"]
+    out["compress"] = out["gen_compress_sharded"]
     out["pair_stats"] = rl.tlr_pair_update_stats(
         t_tiles, cfg.super_panels, pair_shards(mesh, row))
     out["recompress_temp_model"] = rl.tlr_recompress_temp_model(
         t_tiles, nb, kmax, pair_shards(mesh, row))
+    out["compress_temp_model"] = rl.tlr_compress_temp_model(
+        t_tiles, nb, kmax, n_shards=pair_shards(mesh, row))
     return out
 
 
@@ -422,7 +439,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
             # its own trip count, and report the pipeline as their sum.
             t_tiles = shape.matrix_dim // cfg.tile_size
             phases = tlr_phase_reports(cfg, shape, mesh)
-            override = {k: phases["gen_compress"][k] + phases["factorize"][k]
+            override = {k: phases["compress"][k] + phases["factorize"][k]
                         for k in ("flops", "bytes", "coll")}
             correction = f"phase-sum(fori_x{t_tiles})"
         # exact/predict paths are python-unrolled: measured is exact.
@@ -437,13 +454,13 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
                variant=variant, status="ok", cost_correction=correction)
     if phases is not None:
         rec["tlr_phases"] = phases
-        for name in ("gen", "gen_compress", "compress_only",
-                     "factorize_masked", "factorize_bc",
+        for name in ("gen", "gen_compress", "gen_compress_sharded",
+                     "compress_only", "factorize_masked", "factorize_bc",
                      "factorize_bc_repl"):
             ph = phases[name]
             tb = (f" temp={ph['temp_bytes']:.4g}" if "temp_bytes" in ph
                   else "")
-            print(f"tlr_phase {name:17s} flops={ph['flops']:.4g} "
+            print(f"tlr_phase {name:20s} flops={ph['flops']:.4g} "
                   f"bytes={ph['bytes']:.4g} coll={ph['coll']:.4g}{tb}")
         ps = phases["pair_stats"]
         print(f"tlr_pair_updates live={ps['live_updates']} "
@@ -458,6 +475,13 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
               f"{rt['replicated_bytes']:.4g} sharded={rt['sharded_bytes']:.4g}"
               f" (/{rt['shrink']:.0f}); measured factorize_bc temp drop "
               f"{drop:.2f}x vs replicated recompress")
+        ct = phases["compress_temp_model"]
+        cdrop = (phases["gen_compress"]["temp_bytes"] /
+                 max(phases["gen_compress_sharded"]["temp_bytes"], 1))
+        print(f"tlr_compress_temps model: replicated="
+              f"{ct['replicated_bytes']:.4g} sharded={ct['sharded_bytes']:.4g}"
+              f" (/{ct['shrink']:.0f}); measured gen_compress temp drop "
+              f"{cdrop:.2f}x vs replicated truncation batch")
 
     print(f"== {arch_name} x {shape_name} x {mesh_name} [{variant}] ==")
     print("memory_analysis:", compiled.memory_analysis())

@@ -301,6 +301,37 @@ def tlr_recompress_temp_model(n_tiles: int, tile_size: int, kmax: int,
                 shrink=float(n_shards))
 
 
+def tlr_compress_temp_model(n_tiles: int, tile_size: int, kmax: int,
+                            col_block: int = 1, n_shards: int = 1,
+                            itemsize: int = 4) -> dict:
+    """Closed-form per-device working set of the compress-phase truncation
+    SVD (one fori step of dist_compress_tiles) by placement.
+
+    Each tile needs its (nb, nb) input, the SVD outputs U/V^T/s, and the
+    truncated (nb, kmax) factors.  Under plain GSPMD the batched
+    jnp.linalg.svd has no partitioning rule, so the whole column group —
+    the (m, cb*nb) GEN panel plus cb*T tiles of SVD workspace — replicates
+    on every device (``replicated_bytes``).  The sharded form
+    (core.dist_tlr._compress_tiles_pair_sharded) generates and SVDs only
+    the ceil((T-1)/S) tiles each device owns per column
+    (``sharded_bytes``) — the O(tiles/S) scaling the ROADMAP item asks
+    for.
+    """
+    assert n_shards >= 1
+    T, nb, cb = n_tiles, tile_size, col_block
+    m = T * nb
+    per_tile = (3 * nb * nb + nb          # tile + SVD U, V^T, s
+                + 2 * nb * kmax           # truncated padded factors
+                ) * itemsize
+    own = -(-max(T - 1, 1) // n_shards)   # tiles per column per device
+    return dict(tiles_per_step=cb * T, tiles_per_step_sharded=cb * own,
+                per_tile_bytes=per_tile,
+                replicated_bytes=m * cb * nb * itemsize + cb * T * per_tile,
+                sharded_bytes=cb * own * per_tile,
+                shrink=(m * cb * nb * itemsize + cb * T * per_tile) /
+                       max(cb * own * per_tile, 1))
+
+
 def geostat_model_flops(shape, backend: str, tile_size: int, max_rank: int) -> float:
     """Useful flops of one MLE iteration (or a cokriging prediction batch).
 

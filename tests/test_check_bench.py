@@ -34,10 +34,16 @@ def _artifact(**overrides):
         dist_loglik_bc_sharded_time_us=7.2e4,
         loglik_delta_bc_sharded_vs_exact=2e-5,
         loglik_delta_sharded_vs_bc=1e-12,
+        compress_sharded_time_us=4.1e4,
+        dist_loglik_compress_sharded_time_us=7.5e4,
+        loglik_delta_compress_sharded=2e-5,
+        loglik_delta_compress_sharded_vs_bc=1e-12,
         peak_temp_bytes=dict(gen_compress=1051040, factorize_masked=5543992,
                              factorize_bc=2513208, pipeline_masked=5557528,
                              pipeline_bc=2526808, factorize_bc_sharded=2513208,
-                             pipeline_bc_sharded=2526808),
+                             pipeline_bc_sharded=2526808,
+                             compress_sharded=812000,
+                             pipeline_compress_sharded=2430000),
     )
     art.update(overrides)
     return art
@@ -106,6 +112,34 @@ def test_sharded_recompress_gate(check_bench):
     art["peak_temp_bytes"]["pipeline_bc_sharded"] = -1
     errs = check_bench.check_artifact(art)
     assert any("pipeline_bc_sharded" in e for e in errs)
+
+
+def test_compress_sharded_gate(check_bench):
+    """The PR-5 compress-sharded keys are required: the timing must be
+    positive, the delta bounded, and the sharded compress phases must
+    appear in peak_temp_bytes."""
+    art = _artifact()
+    del art["compress_sharded_time_us"]
+    errs = check_bench.check_artifact(art)
+    assert any("missing key: compress_sharded_time_us" in e for e in errs)
+    art = _artifact()
+    del art["loglik_delta_compress_sharded"]
+    errs = check_bench.check_artifact(art)
+    assert any("missing key: loglik_delta_compress_sharded" in e
+               for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(loglik_delta_compress_sharded=5e-3))
+    assert any("loglik_delta_compress_sharded" in e for e in errs)
+    errs = check_bench.check_artifact(_artifact(compress_sharded_time_us=0.0))
+    assert any("compress_sharded_time_us" in e for e in errs)
+    art = _artifact()
+    del art["peak_temp_bytes"]["compress_sharded"]
+    errs = check_bench.check_artifact(art)
+    assert any("peak_temp_bytes['compress_sharded']" in e for e in errs)
+    art = _artifact()
+    art["peak_temp_bytes"]["pipeline_compress_sharded"] = 0
+    errs = check_bench.check_artifact(art)
+    assert any("pipeline_compress_sharded" in e for e in errs)
 
 
 def test_peak_temp_bytes_gate(check_bench):

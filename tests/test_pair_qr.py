@@ -61,21 +61,56 @@ def test_shard_map_single_device_mesh_matches():
 
 class _FakeMesh:
     """Stands in for a 2-shard mesh on a 1-device host: only ``shape`` is
-    read before the divisibility guard decides; if the guard ever stopped
+    read before the pad/fallback decision; if the guard ever stopped
     firing, shard_map would receive this stub and fail loudly."""
 
     shape = {"data": 2}
 
 
-def test_indivisible_length_falls_back():
-    """A batch the mesh axes don't divide (13 % 2) must fall back to the
-    replicated form instead of failing to partition."""
+def test_indivisible_length_pads_not_replicates():
+    """An indivisible batch (13 % 2) must be padded to a shard multiple —
+    the pre-pad behavior silently fell back to the fully replicated QR/SVD
+    batch (the per-device memory cliff this PR closes).  With pad=False the
+    replicated fallback is still available but warns once."""
+    import warnings
+
+    from repro.distribution import pair_qr
+
     up, vp, du, dv = _pair_batch(13)
     assert pair_shard_count(_FakeMesh(), ("data",)) == 2
     want = _batched_recompress(up, vp, du, dv, 1e-7, 1.0)
-    got = sharded_recompress(up, vp, du, dv, 1e-7, 1.0, mesh=_FakeMesh(),
-                             axes=("data",))
+    # pad=True (default) routes through shard_map: the _FakeMesh stub is not
+    # a real mesh, so reaching shard_map at all proves no silent fallback.
+    with pytest.raises(Exception):
+        sharded_recompress(up, vp, du, dv, 1e-7, 1.0, mesh=_FakeMesh(),
+                           axes=("data",))
+    # pad=False: replicated batch, bit-exact, with exactly one warning.
+    pair_qr._warned_fallbacks.discard("recompress-indivisible")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = sharded_recompress(up, vp, du, dv, 1e-7, 1.0, mesh=_FakeMesh(),
+                                 axes=("data",), pad=False)
+        again = sharded_recompress(up, vp, du, dv, 1e-7, 1.0,
+                                   mesh=_FakeMesh(), axes=("data",),
+                                   pad=False)
     _assert_matches(got, want, atol=0.0)
+    _assert_matches(again, want, atol=0.0)
+    hits = [x for x in w if issubclass(x.category, RuntimeWarning)
+            and "replicated" in str(x.message)]
+    assert len(hits) == 1, [str(x.message) for x in w]
+
+
+def test_pad_leading_helper():
+    """pad_leading zero-pads every leading axis to the multiple and reports
+    the original length; already-divisible batches pass through unchanged."""
+    from repro.distribution.pair_qr import pad_leading
+
+    a = jnp.ones((5, 3)); b = jnp.ones((5,))
+    (pa, pb), n = pad_leading((a, b), 4)
+    assert n == 5 and pa.shape == (8, 3) and pb.shape == (8,)
+    assert float(pa[5:].sum()) == 0.0 and float(pb[5:].sum()) == 0.0
+    (qa,), n2 = pad_leading((a,), 5)
+    assert n2 == 5 and qa is a
 
 
 def _tiles_m512():
@@ -186,15 +221,18 @@ def test_sharded_recompress_shard_counts_subprocess():
         for g, w in zip(got, want):
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                        atol=2e-5)
-        # indivisible length falls back to the replicated batch
+        # indivisible length is padded to a shard multiple (sharding
+        # survives — the pre-pad silent replicated fallback is gone) and
+        # the stripped result matches the replicated batch
         ext = [jnp.concatenate([a, a[:1]]) for a in (up, vp, du, dv)]
         if ext[0].shape[0] % S:
             want = _batched_recompress(*ext, 1e-6, 1.0)
             got = sharded_recompress(*ext, 1e-6, 1.0, mesh=mesh,
                                      axes=("data",))
+            assert got[0].shape[0] == ext[0].shape[0]
             for g, w in zip(got, want):
                 np.testing.assert_allclose(np.asarray(g), np.asarray(w),
-                                           atol=0.0)
+                                           atol=2e-5)
     print("SHARDS_OK")
     """)
     assert "SHARDS_OK" in out

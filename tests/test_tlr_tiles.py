@@ -184,3 +184,67 @@ def test_choose_tile_size_multiple_of():
     assert T.choose_tile_size(512, 64, multiple_of=2) == 64
     with pytest.raises(ValueError):
         T.choose_tile_size(1001, multiple_of=2)
+
+
+def test_choose_tile_size_no_divisor_raises_clearly():
+    """When no divisor survives the multiple_of filter the failure names m,
+    target, and multiple_of — it used to return None and crash far
+    downstream with an opaque TypeError."""
+    with pytest.raises(ValueError, match=r"m=0.*multiple_of=1.*target=16"):
+        T.choose_tile_size(0, 16)
+
+
+def test_traced_nugget_loglik_and_grad_under_jit():
+    """A traced nugget — the MLE estimating it under jit — must evaluate and
+    differentiate through both generator-direct likelihoods (the `if
+    nugget:` truthiness checks used to raise TracerBoolConversionError, and
+    the QR/SVD derivatives used to NaN on the zero-padded rank columns).
+    The gradient is checked against central finite differences."""
+    from repro.core.dist_tlr import dist_tlr_loglik
+
+    locs = _locs(6)
+    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=1.5, beta=0.5)
+    z = simulate_mgrf(jax.random.PRNGKey(0), locs, params, nugget=1e-4)[0]
+    lj = jnp.asarray(locs)
+    kw = dict(tol=1e-7, max_rank=8, tile_size=24)   # 2*kmax <= nb: tall QR
+
+    f = jax.jit(lambda ng: T.tlr_loglik(None, z, params, nugget=ng, locs=lj,
+                                        from_tiles=True, **kw).loglik)
+    g = jax.jit(jax.grad(lambda ng: T.tlr_loglik(
+        None, z, params, nugget=ng, locs=lj, from_tiles=True, **kw).loglik))
+    ng0, eps = 1e-3, 1e-6
+    fd = (float(f(jnp.asarray(ng0 + eps))) -
+          float(f(jnp.asarray(ng0 - eps)))) / (2 * eps)
+    gv = float(g(jnp.asarray(ng0)))
+    assert np.isfinite(gv)
+    assert gv == pytest.approx(fd, rel=1e-4, abs=1e-6)
+
+    for bc in (False, True):
+        gd = jax.jit(jax.grad(lambda ng: dist_tlr_loglik(
+            None, z, locs=lj, params=params, from_tiles=True, nugget=ng,
+            block_cyclic=bc, **kw).loglik))
+        gdv = float(gd(jnp.asarray(ng0)))
+        assert np.isfinite(gdv)
+        assert gdv == pytest.approx(fd, rel=1e-4, abs=1e-6), bc
+
+
+def test_recompress_grad_matches_finite_differences():
+    """The guarded QR/SVD derivatives (_safe_qr / _core_svd) agree with
+    finite differences both at full rank and — the production case — with
+    zero-padded rank columns, where the textbook rules NaN."""
+    rng = np.random.default_rng(0)
+    arrs = [jnp.asarray(rng.normal(size=(3, 16, 4))) for _ in range(4)]
+
+    def loss(s, pads):
+        u1, v1, u2, v2 = (a.at[:, :, 2:].set(0.0) if pads else a
+                          for a in arrs)
+        un, vn, _ = T._batched_recompress(u1 * s, v1, u2, v2, 1e-7, 1.0)
+        return jnp.sum(un ** 2) + jnp.sum(vn ** 2)
+
+    for pads in (False, True):
+        g = float(jax.grad(loss)(jnp.asarray(1.0), pads))
+        e = 1e-6
+        fd = (float(loss(jnp.asarray(1.0 + e), pads)) -
+              float(loss(jnp.asarray(1.0 - e), pads))) / (2 * e)
+        assert np.isfinite(g), pads
+        assert g == pytest.approx(fd, rel=1e-5), pads
