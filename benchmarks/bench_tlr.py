@@ -203,12 +203,24 @@ def _phase_temp_bytes(n, p, params, *, tile_size, max_rank, tol, nugget):
             gen="xla", mesh=mesh, dtype=jnp.float64, block_cyclic=bc,
             shard_svd=ssvd)
         out[name] = (fn, specs, ())
+    from repro.analysis import LintConfig, lint_lowerable, tlr_dense_frac
     temps = {}
+    gate = dict(replicated_temp_bytes=0, undonated_dead_bytes=0)
+    # Quick-bench geometry has fat tiles (kmax/nb ~ 2/3), so R3's bar must
+    # scale past the legitimate (kmax/nb) m^2 tile storage.
+    lcfg = LintConfig(dense_frac=tlr_dense_frac(tile_size, max_rank))
     for name, (fn, specs, donate) in out.items():
         comp = jax.jit(fn, donate_argnums=donate).lower(*specs).compile()
         ms = comp.memory_analysis()
         temps[name] = int(getattr(ms, "temp_size_in_bytes", 0))
-    return temps
+        # SPMD-lint gate metrics: replicated decomposition bytes (R1) and
+        # donatable-but-undonated dead input bytes (R2) must stay at zero
+        # on every benchmarked phase (check_bench gates both keys).
+        rep = lint_lowerable(fn, specs, mesh=None, donate_argnums=donate,
+                             matrix_dim=m, compiled=comp, config=lcfg)
+        gate["replicated_temp_bytes"] += rep.summary["replicated_temp_bytes"]
+        gate["undonated_dead_bytes"] += rep.summary["undonated_dead_bytes"]
+    return temps, gate
 
 
 def collect_artifact(quick=False):
@@ -286,11 +298,13 @@ def collect_artifact(quick=False):
     dist_ll_csh_us, ll_dist_csh = time_fn(dist_ll_csh, locs_j, z, iters=2)
     ll_dist_csh = float(ll_dist_csh)
 
+    phase_temps, lint_gate = _phase_temp_bytes(n_side * n_side, 2, params,
+                                               tile_size=nb, max_rank=kmax,
+                                               tol=tol, nugget=1e-8)
     return dict(
         **bench_factorize_forms(quick),
-        peak_temp_bytes=_phase_temp_bytes(n_side * n_side, 2, params,
-                                          tile_size=nb, max_rank=kmax,
-                                          tol=tol, nugget=1e-8),
+        peak_temp_bytes=phase_temps,
+        **lint_gate,
         m=m, tile_size=nb, tol=tol, max_rank=kmax, quick=bool(quick),
         gen_time_us=gen_us,
         compress_time_us=compress_us,       # includes GEN (end-to-end)

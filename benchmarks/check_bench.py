@@ -24,7 +24,11 @@ deltas versus the exact likelihood.  This script fails (exit 1) when
     shard_map, PR 5) is missing, mistimed, or drifts past the bound
     (``compress_sharded_time_us`` / ``loglik_delta_compress_sharded``,
     plus the ``compress_sharded`` / ``pipeline_compress_sharded``
-    peak_temp_bytes phases).
+    peak_temp_bytes phases), or
+  * an SPMD-lint gate metric is nonzero (``replicated_temp_bytes`` /
+    ``undonated_dead_bytes``, summed over the benchmarked phases by
+    bench_tlr via repro.analysis — any unsuppressed replicated
+    decomposition batch or donatable dead input fails the gate, PR 6).
 
 Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
                                          [--max-bc-ratio 1.0]
@@ -54,7 +58,12 @@ REQUIRED_KEYS = (
     # pair-axis-sharded compression (PR 5)
     "compress_sharded_time_us", "dist_loglik_compress_sharded_time_us",
     "loglik_delta_compress_sharded",
+    # SPMD-lint gate metrics (PR 6): summed over the benchmarked phases,
+    # both must stay exactly zero — any unsuppressed replicated
+    # decomposition batch or donatable dead input is a regression.
+    "replicated_temp_bytes", "undonated_dead_bytes",
 )
+LINT_GATE_KEYS = ("replicated_temp_bytes", "undonated_dead_bytes")
 TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
                "dist_compress_time_us", "dist_loglik_time_us",
                "cholesky_masked_time_us", "cholesky_bc_time_us",
@@ -104,6 +113,14 @@ def check_artifact(artifact: dict, max_delta: float = 1e-3,
                 if not isinstance(val, (int, float)) or val <= 0:
                     errors.append(
                         f"peak_temp_bytes[{key!r}] is not positive: {val!r}")
+    for key in LINT_GATE_KEYS:
+        val = artifact.get(key)
+        if val is None:
+            continue  # missing already reported above
+        if not isinstance(val, (int, float)) or not math.isfinite(val) \
+                or val > 0:
+            errors.append(f"{key}={val!r} — SPMD-lint gate requires 0 "
+                          f"(run python -m repro.analysis for the findings)")
     return errors
 
 

@@ -1,0 +1,32 @@
+"""SPMD-lint: static analysis for the distributed geostatistics stack.
+
+Two layers over one Finding/suppression model:
+
+* ``spmdlint``  — jaxpr/HLO rules (R1-R5) over a lowerable: replicated
+  decomposition batches, missing/failed donation, densification, f32<->f64
+  churn, dynamic-trip-count while loops.
+* ``astlint``   — AST rules (A1-A5) over src/repro/: tracer truthiness and
+  host casts, traced fori_loop bounds, host linalg, dense generators in
+  never-densify modules, raw warnings.warn fallbacks.
+
+CLI: ``python -m repro.analysis --target dist_tlr_pipeline_lowerable
+--mesh pod256`` (jaxpr/HLO layer) or ``python -m repro.analysis --ast``
+(AST layer).  Waive a finding in source with
+``# spmdlint: ignore[R1] reason``.
+"""
+from .astlint import lint_source, lint_tree
+from .findings import (Finding, SuppressionIndex, count_by_severity,
+                       format_findings, max_severity, scan_suppressions,
+                       severity_at_least)
+from .spmdlint import (DEFAULT_CONFIG, LintConfig, LintReport,
+                       dtype_conversion_table, lint_compiled, lint_hlo_text,
+                       lint_jaxpr, lint_lowerable, summarize, tlr_dense_frac)
+
+__all__ = [
+    "Finding", "SuppressionIndex", "count_by_severity", "format_findings",
+    "max_severity", "scan_suppressions", "severity_at_least",
+    "LintConfig", "LintReport", "DEFAULT_CONFIG", "dtype_conversion_table",
+    "lint_compiled", "lint_hlo_text", "lint_jaxpr", "lint_lowerable",
+    "tlr_dense_frac",
+    "summarize", "lint_source", "lint_tree",
+]

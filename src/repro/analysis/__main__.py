@@ -1,0 +1,237 @@
+"""SPMD-lint CLI.
+
+  python -m repro.analysis --ast                     # AST layer over src/repro/
+  python -m repro.analysis --target dist_tlr_pipeline_lowerable --mesh pod256
+  python -m repro.analysis --target all --mesh cpu8 --shape mle_16k --json
+
+Exit status is nonzero when any unsuppressed finding reaches --fail-on
+(default: error), so the command doubles as the CI gate.
+
+The mesh is pre-parsed from argv and XLA_FLAGS set BEFORE jax is imported:
+fake CPU device counts only take effect at backend init (same pattern as
+launch/dryrun.py).
+"""
+import os
+import sys
+
+
+def _preparse_mesh(argv) -> str:
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return "cpu8"
+
+
+_MESH_NAME = _preparse_mesh(sys.argv[1:])
+_POD_DEVICES = {"pod256": 256, "pod512": 512}
+
+
+def _mesh_device_count(name: str) -> int | None:
+    if name in _POD_DEVICES:
+        return _POD_DEVICES[name]
+    if name.startswith("cpu"):
+        return int(name[3:] or "8")
+    return None                      # "host": whatever exists
+
+
+_n = _mesh_device_count(_MESH_NAME)
+if _n is not None and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from .findings import format_findings, severity_at_least  # noqa: E402
+from .spmdlint import LintConfig, lint_lowerable, tlr_dense_frac  # noqa: E402
+
+TARGETS = ("dist_tlr_pipeline_lowerable", "dist_tlr_gen_lowerable",
+           "dist_tlr_compress_lowerable", "dist_tlr_lowerable",
+           "dist_loglik_lowerable", "dist_cokrige_lowerable")
+
+
+def _make_mesh(name: str):
+    from ..launch.mesh import make_mesh_for_devices, make_production_mesh
+    if name == "pod256":
+        return make_production_mesh()
+    if name == "pod512":
+        return make_production_mesh(multi_pod=True)
+    if name.startswith("cpu"):
+        return make_mesh_for_devices(int(name[3:] or "8"))
+    return make_mesh_for_devices()
+
+
+def _shapes() -> dict:
+    from ..configs.base import GEOSTAT_SHAPES, GeoStatShape
+    shapes = dict(GEOSTAT_SHAPES)
+    # dev shapes: small enough to lint in seconds on a laptop/CI box
+    shapes.setdefault("mle_4k", GeoStatShape("mle_4k", 4096, 2, "mle"))
+    shapes.setdefault("mle_16k", GeoStatShape("mle_16k", 16384, 2, "mle"))
+    return shapes
+
+
+def _tlr_geometry(m: int):
+    """(tile_size, max_rank) scaled down for small dev shapes."""
+    from ..configs.geostat import GEOSTAT_TLR as cfg
+    nb = max(64, min(cfg.tile_size, m // 32))
+    return nb, min(cfg.max_rank, nb // 2)
+
+
+def build_target(name: str, shape, mesh):
+    """One lowerable ready for lint_lowerable: (fn, specs, kwargs)."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs.geostat import GEOSTAT_TLR as cfg
+    from ..core.covariance import MaternParams
+    from ..core.dist_cholesky import (dist_cokrige_lowerable,
+                                      dist_loglik_lowerable)
+    from ..core.dist_tlr import (dist_tlr_compress_lowerable,
+                                 dist_tlr_gen_lowerable,
+                                 dist_tlr_in_shardings, dist_tlr_lowerable,
+                                 dist_tlr_pipeline_lowerable)
+
+    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=2.5, beta=0.5,
+                                    dtype=jnp.float32)
+    row = (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    m = shape.matrix_dim
+    nb, kmax = _tlr_geometry(m)
+    # Dev geometries have fat tiles (kmax = nb/2): scale R3's bar past the
+    # legitimate (kmax/nb) m^2 tile storage of a correct TLR lowering.
+    lcfg = LintConfig(dense_frac=tlr_dense_frac(nb, kmax))
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))  # noqa: E731
+
+    if name == "dist_tlr_pipeline_lowerable":
+        fn, specs = dist_tlr_pipeline_lowerable(
+            shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
+            tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
+            super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic)
+        return fn, specs, dict(in_shardings=(ns(row, None), ns(row)),
+                               matrix_dim=m, config=lcfg)
+    if name == "dist_tlr_gen_lowerable":
+        fn, specs = dist_tlr_gen_lowerable(
+            shape.n_locations, shape.p, params, tile_size=nb, gen="xla",
+            mesh=mesh, row_axes=row)
+        return fn, specs, dict(in_shardings=(ns(row, None),), matrix_dim=m,
+                               config=lcfg)
+    if name == "dist_tlr_compress_lowerable":
+        fn, specs = dist_tlr_compress_lowerable(
+            shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
+            tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
+            block_cyclic=cfg.block_cyclic, shard_svd=True)
+        return fn, specs, dict(in_shardings=(ns(row, None),), matrix_dim=m,
+                               config=lcfg)
+    if name == "dist_tlr_lowerable":
+        fn, specs = dist_tlr_lowerable(
+            m // nb, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
+            super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic,
+            return_factor=True)
+        sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
+                                   block_cyclic=cfg.block_cyclic)
+        return fn, specs, dict(in_shardings=sh, donate_argnums=(0, 1, 2, 3),
+                               matrix_dim=m, config=lcfg)
+    if name == "dist_loglik_lowerable":
+        panel = max(512, m // 64)
+        fn, specs = dist_loglik_lowerable(shape.n_locations, shape.p, params,
+                                          panel=panel, mesh=mesh,
+                                          row_axes=row)
+        # exact backend: dense by contract, so R3 stays disarmed
+        return fn, specs, dict(in_shardings=(ns(row, None), ns(row)),
+                               matrix_dim=None)
+    if name == "dist_cokrige_lowerable":
+        n_pred = getattr(shape, "n_pred", 0) or max(shape.n_locations // 16,
+                                                    256)
+        panel = max(512, m // 64)
+        fn, specs = dist_cokrige_lowerable(
+            shape.n_locations, n_pred, shape.p, params, panel=panel,
+            mesh=mesh, row_axes=row)
+        return fn, specs, dict(
+            in_shardings=(ns(row, None), ns(None, None), ns(row)),
+            matrix_dim=None)
+    raise SystemExit(f"unknown --target {name!r} (choose from "
+                     f"{', '.join(TARGETS)}, or 'all')")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="SPMD-lint: jaxpr/HLO + AST static analysis")
+    ap.add_argument("--target", default=None,
+                    help=f"lowerable to lint: one of {', '.join(TARGETS)} "
+                         f"or 'all'")
+    ap.add_argument("--mesh", default="cpu8",
+                    help="pod256 | pod512 | host | cpuN (default cpu8)")
+    ap.add_argument("--shape", default="mle_65k",
+                    help="geostat shape name (default mle_65k; dev shapes "
+                         "mle_4k/mle_16k lint in seconds)")
+    ap.add_argument("--ast", action="store_true",
+                    help="run the AST layer over src/repro/")
+    ap.add_argument("--ast-root", default=None,
+                    help="lint this tree instead of src/repro/ (paths are "
+                         "interpreted relative to it for the traced/never-"
+                         "densify module rules)")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="jaxpr rules only (skip SPMD compile: no R1/R2b)")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--show-suppressed", action="store_true")
+    ap.add_argument("--fail-on", default="error",
+                    choices=("info", "warning", "error"))
+    args = ap.parse_args(argv)
+
+    if not args.ast and args.target is None:
+        ap.error("pass --target <lowerable> and/or --ast")
+
+    findings = []
+    reports = {}
+
+    if args.ast:
+        from .astlint import lint_tree
+        ast_findings = lint_tree(args.ast_root)
+        findings += ast_findings
+        reports["ast"] = ast_findings
+
+    if args.target is not None:
+        mesh = _make_mesh(args.mesh)
+        shapes = _shapes()
+        if args.shape not in shapes:
+            ap.error(f"unknown --shape {args.shape!r} "
+                     f"(choose from {', '.join(sorted(shapes))})")
+        shape = shapes[args.shape]
+        names = TARGETS if args.target == "all" else (args.target,)
+        for name in names:
+            fn, specs, kw = build_target(name, shape, mesh)
+            kw.setdefault("config", LintConfig())
+            report = lint_lowerable(fn, specs, mesh=mesh,
+                                    compile=not args.no_compile, **kw)
+            findings += report.findings
+            reports[name] = report
+
+    if args.as_json:
+        out = {}
+        for name, rep in reports.items():
+            if hasattr(rep, "to_dict"):
+                out[name] = rep.to_dict()
+            else:
+                out[name] = dict(findings=[f.to_dict() for f in rep])
+        print(json.dumps(out, indent=2))
+    else:
+        for name, rep in reports.items():
+            fs = rep.findings if hasattr(rep, "findings") else rep
+            print(f"== {name} ==")
+            print(format_findings(fs, show_suppressed=args.show_suppressed))
+            if hasattr(rep, "summary"):
+                print(f"-- summary: {rep.summary}")
+
+    gate = [f for f in findings
+            if not f.suppressed and severity_at_least(f, args.fail_on)]
+    if gate:
+        print(f"FAIL: {len(gate)} finding(s) at severity >= {args.fail_on}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,270 @@
+"""SPMD-lint layer 2: AST rules encoding the repo's traced-code idioms.
+
+The jaxpr layer sees what a program lowered to; this layer catches the bug
+before it traces at all.  Rules (same Finding/suppression machinery as the
+jaxpr layer; ``# spmdlint: ignore[A..] reason`` waives a line):
+
+  A1  tracer bool/host casts.  ``if x:`` / ``while x:`` / ``float(x)`` /
+      ``int(x)`` / ``bool(x)`` on a *numeric-defaulted parameter* of a
+      function in a traced module raises TracerBoolConversionError the
+      moment the MLE traces that argument (the PR-5 nugget cliff; the fix
+      is ``is not None`` + jnp.where, see core.tlr.apply_nugget).
+      Conversions inside a ``try`` whose handler catches the jax
+      concretization errors are the sanctioned probe idiom
+      (covariance._concrete_halfint) and pass.
+  A2  ``lax.fori_loop`` bounds that cannot be static python ints: any
+      bound built from jnp/jax.numpy expressions traces the trip count,
+      which lowers to a non-reverse-differentiable while with an s64
+      carry under x64 (the R5 cliff, caught pre-trace).
+  A3  host linalg: ``np.linalg.*`` / ``scipy.linalg.*`` inside traced
+      modules silently pulls tracers to the host (ConcretizationTypeError
+      at best, a device round-trip at worst) — use jnp/jax.scipy.
+  A4  densification: calls to the dense generators (``build_sigma``,
+      ``pairwise_distances``, ``tlr_to_dense``) inside the never-densify
+      modules (core/tlr.py, core/dist_tlr.py, core/assessment.py,
+      distribution/) — the module contract the R3 jaxpr rule enforces
+      post-trace, minus the shape blindness: validation/assessment paths
+      carry tracked waivers.
+  A5  silent fallbacks: ``warnings.warn`` outside
+      distribution/pair_qr.py — every degraded path must go through
+      ``warn_fallback_once`` so it is one-shot, keyed, and testable.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from .findings import Finding, SuppressionIndex
+
+#: modules whose function bodies are (potentially) traced under jit.
+TRACED_DIRS = ("core", "distribution", "kernels")
+
+#: never-densify modules: the dense Sigma must not be generated here.
+NEVER_DENSIFY = ("core/tlr.py", "core/dist_tlr.py", "core/assessment.py",
+                 "distribution/")
+
+DENSE_GENERATORS = ("build_sigma", "pairwise_distances", "tlr_to_dense")
+
+_CONCRETIZATION_HANDLERS = ("TracerArrayConversionError",
+                            "TracerBoolConversionError",
+                            "ConcretizationTypeError", "TypeError")
+
+
+def _dotted(node) -> str:
+    """'jnp.linalg.svd' for an Attribute/Name chain ('' when not static)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _numeric_default_params(fn: ast.FunctionDef, *,
+                            floats_only: bool = False) -> set[str]:
+    """Parameters whose default is a float (or None, unless ``floats_only``)
+    — the 'maybe traced scalar knob' signature (nugget=0.0, tol=1e-7,
+    scale=None...).  Int- and bool-defaulted knobs (tile_size, panel,
+    block_cyclic...) are static configuration by repo convention
+    (static_argnames everywhere) and are deliberately NOT treated as
+    traceable."""
+    args = fn.args
+    out = set()
+    pos_defaults = args.defaults
+    for a, d in zip(args.args[len(args.args) - len(pos_defaults):],
+                    pos_defaults):
+        if _is_float_or_none(d, floats_only):
+            out.add(a.arg)
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None and _is_float_or_none(d, floats_only):
+            out.add(a.arg)
+    return out
+
+
+def _is_float_or_none(node, floats_only: bool = False) -> bool:
+    if isinstance(node, ast.Constant):
+        if node.value is None:
+            return not floats_only
+        return isinstance(node.value, float)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.operand,
+                                                    ast.Constant):
+        return isinstance(node.operand.value, float)
+    return False
+
+
+def _contains_jnp(node) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in ("jnp", "jax"):
+            return True
+    return False
+
+
+class _ModuleLinter(ast.NodeVisitor):
+    def __init__(self, rel_path: str, abs_path: str):
+        self.rel = rel_path
+        self.path = abs_path
+        self.findings: list[Finding] = []
+        self._param_stack: list[set[str]] = []
+        self._try_depth = 0
+        self.in_traced = any(self.rel.startswith(d + os.sep) or
+                             self.rel.startswith(d + "/")
+                             for d in TRACED_DIRS)
+        self.never_densify = any(
+            self.rel == p or (p.endswith("/") and self.rel.startswith(p))
+            for p in NEVER_DENSIFY)
+
+    def _add(self, rule, severity, node, message, op=None):
+        self.findings.append(Finding(
+            rule=rule, severity=severity, message=message, op=op,
+            source_file=self.path, source_line=node.lineno))
+
+    # -- scope tracking ----------------------------------------------------
+    def visit_FunctionDef(self, node):
+        self._param_stack.append((_numeric_default_params(node),
+                                  _numeric_default_params(node,
+                                                          floats_only=True)))
+        self.generic_visit(node)
+        self._param_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Try(self, node):
+        catches_concretization = any(
+            isinstance(h.type, (ast.Name, ast.Attribute, ast.Tuple)) and any(
+                _dotted(t).rsplit(".", 1)[-1] in _CONCRETIZATION_HANDLERS
+                for t in (h.type.elts if isinstance(h.type, ast.Tuple)
+                          else [h.type]))
+            for h in node.handlers)
+        if catches_concretization:
+            self._try_depth += 1
+            self.generic_visit(node)
+            self._try_depth -= 1
+        else:
+            self.generic_visit(node)
+
+    def _maybe_traced(self, node, *, floats_only: bool = False) -> str | None:
+        """Name of a float/None-defaulted enclosing-function param, if node
+        is a bare reference to one.  ``floats_only`` restricts to float
+        defaults (truthiness on a None-defaulted param is usually an
+        emptiness test on a static container, e.g. mesh axis tuples)."""
+        if isinstance(node, ast.Name):
+            for params, float_params in reversed(self._param_stack):
+                if node.id in (float_params if floats_only else params):
+                    return node.id
+        return None
+
+    # -- A1: tracer truthiness / host casts --------------------------------
+    def _check_truthiness(self, test, node, kind):
+        target = test
+        if isinstance(target, ast.UnaryOp) and isinstance(target.op, ast.Not):
+            target = target.operand
+        name = self._maybe_traced(target, floats_only=True)
+        if name is not None:
+            self._add("A1", "error", node,
+                      f"`{kind} {name}:` on a numeric-defaulted parameter — "
+                      f"TracerBoolConversionError once `{name}` is traced "
+                      f"(the MLE estimates it); test `is not None` and use "
+                      f"jnp.where (see core.tlr.apply_nugget)")
+
+    def visit_If(self, node):
+        if self.in_traced:
+            self._check_truthiness(node.test, node, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        if self.in_traced:
+            self._check_truthiness(node.test, node, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node):
+        if self.in_traced:
+            self._check_truthiness(node.test, node, "if")
+        self.generic_visit(node)
+
+    # -- calls: A1 casts, A2 fori bounds, A3 host linalg, A4 densify, A5 ---
+    def visit_Call(self, node):
+        dotted = _dotted(node.func)
+        tail = dotted.rsplit(".", 1)[-1]
+
+        if self.in_traced and dotted in ("float", "int", "bool") \
+                and len(node.args) == 1 and self._try_depth == 0:
+            name = self._maybe_traced(node.args[0])
+            if name is not None:
+                self._add("A1", "error", node,
+                          f"{dotted}({name}) concretizes a numeric-defaulted "
+                          f"parameter in traced code — "
+                          f"TracerArrayConversionError once traced; guard "
+                          f"with try/except (covariance._concrete_halfint) "
+                          f"or keep it an array")
+
+        if self.in_traced and tail == "fori_loop" and \
+                dotted.split(".")[0] in ("lax", "jax"):
+            for bound in node.args[:2]:
+                if isinstance(bound, (ast.Constant, ast.Name)):
+                    continue          # literal or local static int
+                if _contains_jnp(bound) or isinstance(bound, ast.Call):
+                    self._add("A2", "error", node,
+                              "fori_loop bound is a traced/array expression "
+                              "— lowers to a non-reverse-differentiable "
+                              "while (s64 carry under x64); hoist to a "
+                              "static python int or use "
+                              "core.tlr.indexed_scan", op=dotted)
+                    break
+
+        if self.in_traced and dotted.startswith(("np.linalg.",
+                                                 "numpy.linalg.",
+                                                 "scipy.linalg.",
+                                                 "scipy.sparse.")):
+            self._add("A3", "error", node,
+                      f"host linalg call {dotted} in a traced module pulls "
+                      f"tracers to the host — use jnp.linalg/jax.scipy",
+                      op=dotted)
+
+        if self.never_densify and tail in DENSE_GENERATORS:
+            self._add("A4", "error", node,
+                      f"{tail}() materializes the dense (m, m) object inside "
+                      f"a never-densify module ({self.rel}) — stream panels "
+                      f"from the generator (build_sigma_panel/"
+                      f"build_sigma_column)", op=tail)
+
+        if dotted == "warnings.warn" and \
+                not self.rel.endswith("pair_qr.py"):
+            self._add("A5", "error", node,
+                      "raw warnings.warn — fallbacks must route through "
+                      "distribution.pair_qr.warn_fallback_once (one-shot, "
+                      "keyed, testable)", op=dotted)
+
+        self.generic_visit(node)
+
+
+def lint_source(source: str, rel_path: str, abs_path: str | None = None,
+                suppressions: SuppressionIndex | None = None
+                ) -> list[Finding]:
+    """Lint one module's source; rel_path is relative to src/repro/."""
+    abs_path = abs_path or rel_path
+    tree = ast.parse(source, filename=abs_path)
+    linter = _ModuleLinter(rel_path, abs_path)
+    linter.visit(tree)
+    idx = suppressions or SuppressionIndex()
+    idx.add_source(abs_path, source)
+    return idx.apply(linter.findings)
+
+
+def lint_tree(root: str | None = None) -> list[Finding]:
+    """Lint every .py module under src/repro/ (the CI AST gate)."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings: list[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            abs_path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(abs_path, root).replace(os.sep, "/")
+            with open(abs_path, encoding="utf-8") as f:
+                src = f.read()
+            findings += lint_source(src, rel, abs_path)
+    return findings

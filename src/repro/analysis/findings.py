@@ -1,0 +1,152 @@
+"""Finding/severity model + source-comment suppressions for SPMD-lint.
+
+A finding is one analyzer hit: a rule id (R1..R5 for the jaxpr/HLO layer,
+A1..A5 for the AST layer), a severity, a human message, and — when the rule
+is about memory — a byte size, so reports and CI gates can rank by cost.
+
+Suppressions are source comments of the form
+
+    # spmdlint: ignore[R1] replicated on purpose: panel-head POTRF is O(nb^2)
+    # spmdlint: ignore[R1,R3] <reason>
+
+on the flagged line or up to two lines above it (multi-line calls put the
+comment on the opening statement line).  The jaxpr/HLO layer maps compiled
+instructions back to source via the HLO metadata ``source_file``/
+``source_line`` XLA threads through lowering; the AST layer uses node line
+numbers directly.  A suppression must name the rule id — there is no bare
+``ignore`` (a blanket waiver would silently swallow new rule classes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+SEVERITIES = ("info", "warning", "error")
+_SEV_ORDER = {s: i for i, s in enumerate(SEVERITIES)}
+
+# spmdlint: the tag below is a doc example, not a live suppression.
+_SUPPRESS_RE = re.compile(r"#\s*spmdlint:\s*ignore\[([A-Za-z0-9_,\s]+)\]\s*(.*)")
+
+#: how many lines above the flagged line a suppression comment may sit
+#: (covers multi-line calls whose HLO metadata points at an argument line).
+SUPPRESS_REACH = 2
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str                      # "R1".."R5", "A1".."A5"
+    severity: str                  # "info" | "warning" | "error"
+    message: str
+    source_file: str | None = None
+    source_line: int | None = None
+    bytes: int = 0                 # memory cost of the hit (0 if not sized)
+    op: str | None = None          # HLO op / jaxpr primitive / AST construct
+    suppressed: bool = False
+    suppress_reason: str | None = None
+
+    def __post_init__(self):
+        assert self.severity in SEVERITIES, self.severity
+
+    @property
+    def location(self) -> str:
+        if self.source_file is None:
+            return "<unknown>"
+        return f"{self.source_file}:{self.source_line}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def severity_at_least(finding: Finding, level: str) -> bool:
+    return _SEV_ORDER[finding.severity] >= _SEV_ORDER[level]
+
+
+def max_severity(findings) -> str | None:
+    live = [f for f in findings if not f.suppressed]
+    if not live:
+        return None
+    return max((f.severity for f in live), key=_SEV_ORDER.__getitem__)
+
+
+def count_by_severity(findings) -> dict:
+    out = {s: 0 for s in SEVERITIES}
+    for f in findings:
+        if not f.suppressed:
+            out[f.severity] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def scan_suppressions(source: str) -> dict[int, tuple[set[str], str]]:
+    """line number (1-based) -> (rule ids, reason) for every ignore comment."""
+    out: dict[int, tuple[set[str], str]] = {}
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out[lineno] = (rules, m.group(2).strip())
+    return out
+
+
+class SuppressionIndex:
+    """Lazily-loaded per-file suppression maps (the jaxpr/HLO layer sees
+    absolute paths from HLO metadata; the AST layer passes sources in)."""
+
+    def __init__(self):
+        self._files: dict[str, dict[int, tuple[set[str], str]]] = {}
+
+    def add_source(self, path: str, source: str):
+        self._files[path] = scan_suppressions(source)
+
+    def _load(self, path: str) -> dict[int, tuple[set[str], str]]:
+        if path not in self._files:
+            try:
+                with open(path, encoding="utf-8") as f:
+                    self._files[path] = scan_suppressions(f.read())
+            except OSError:
+                self._files[path] = {}
+        return self._files[path]
+
+    def lookup(self, rule: str, path: str | None, line: int | None
+               ) -> str | None:
+        """Reason string when (rule, path, line) is suppressed, else None."""
+        if path is None or line is None:
+            return None
+        table = self._load(path)
+        for cand in range(line, line - SUPPRESS_REACH - 1, -1):
+            hit = table.get(cand)
+            if hit and rule in hit[0]:
+                return hit[1] or "(no reason given)"
+        return None
+
+    def apply(self, findings: list[Finding]) -> list[Finding]:
+        for f in findings:
+            reason = self.lookup(f.rule, f.source_file, f.source_line)
+            if reason is not None:
+                f.suppressed = True
+                f.suppress_reason = reason
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# Rendering
+# ---------------------------------------------------------------------------
+
+
+def format_findings(findings, *, show_suppressed: bool = False) -> str:
+    lines = []
+    for f in findings:
+        if f.suppressed and not show_suppressed:
+            continue
+        size = f" [{f.bytes / 1e6:.6g} MB]" if f.bytes else ""
+        sup = (f" (suppressed: {f.suppress_reason})" if f.suppressed else "")
+        lines.append(f"{f.severity.upper():7s} {f.rule} {f.location}: "
+                     f"{f.message}{size}{sup}")
+    if not lines:
+        return "no findings"
+    return "\n".join(lines)

@@ -43,8 +43,10 @@ class MloeMmomResult(NamedTuple):
 
 def gen_matrices(obs_locs, theta_true: MaternParams, theta_approx: MaternParams,
                  representation: str = "I", nugget: float = 0.0):
+    # spmdlint: ignore[A4] dense (m, m) assessment path by design for now — ROADMAP item 4 tracks TLR-izing MLOE/MMOM
     sigma_t = build_sigma(obs_locs, theta_true, representation=representation,
                           nugget=nugget)
+    # spmdlint: ignore[A4] dense (m, m) assessment path by design for now — ROADMAP item 4 tracks TLR-izing MLOE/MMOM
     sigma_a = build_sigma(obs_locs, theta_approx, representation=representation,
                           nugget=nugget)
     return sigma_t, sigma_a

@@ -116,7 +116,7 @@ def _pair_correlations(dists, params: MaternParams, d_spatial: int = 2):
 
 
 def build_sigma(locs, params: MaternParams, representation: str = "I",
-                d_spatial: int = 2, nugget: float = 0.0, dists=None):
+                d_spatial: int = 2, nugget: float | None = None, dists=None):
     """Assemble Sigma(theta) of shape (p*n, p*n).
 
     representation "I": entry ((l, i), (r, j)) at [l*p + i, r*p + j]
@@ -137,7 +137,8 @@ def build_sigma(locs, params: MaternParams, representation: str = "I",
         sigma = jnp.transpose(blocks, (0, 2, 1, 3)).reshape(n * p, n * p)
     else:
         raise ValueError(f"unknown representation {representation!r}")
-    if nugget:
+    # `is not None`, never truthiness: the MLE traces the nugget (spmdlint A1).
+    if nugget is not None:
         sigma = sigma + nugget * jnp.eye(n * p, dtype=sigma.dtype)
     return sigma
 
@@ -210,12 +211,13 @@ def build_sigma_column(locs, j, nbl: int, params: MaternParams,
                              block=block)
 
 
-def build_correlation_matrix(locs, a, nu, nugget: float = 0.0, dists=None):
+def build_correlation_matrix(locs, a, nu, nugget: float | None = None,
+                             dists=None):
     """Univariate correlation matrix R_ii(theta_i) (profile-likelihood path)."""
     if dists is None:
         dists = pairwise_distances(locs)
     r = matern_correlation(dists / a, nu)
-    if nugget:
+    if nugget is not None:
         r = r + nugget * jnp.eye(dists.shape[0], dtype=r.dtype)
     return r
 

@@ -322,6 +322,7 @@ def _compress_tiles_pair_sharded(locs, params, *, layout: PairLayout, nb, nbl,
     jit-safely (core.tlr.apply_nugget)."""
     dspec, pspec, rspec = _pair_specs(mesh, row_axes)
     axes = pair_axis(mesh, row_axes)
+    # spmdlint: ignore[R1] O(S*T*L) int32 owner tables replicated on purpose: every shard gathers from the full table, and they are static per layout
     own_rows, own_slots = column_owner_tables(layout)
     L = own_rows.shape[-1]
     own_rows = jnp.asarray(own_rows)        # (S, T, L)

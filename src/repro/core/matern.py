@@ -111,6 +111,7 @@ def _kv_temme_series(mu, x, max_iter=200):
 
     init = (jnp.asarray(1, jnp.int32), ff0, p0, q0, c0, ff0, p0,
             jnp.zeros_like(x, dtype=bool))
+    # spmdlint: ignore[R5] early-exit series convergence is the point (i32 carry, elementwise); differentiable paths use kv_half_integer closed forms
     out = lax.while_loop(cond, body, init)
     ksum, ksum1 = out[5], out[6]
     rkmu = ksum
@@ -166,6 +167,7 @@ def _kv_steed_cf2(mu, x, max_iter=400):
         -a1 * jnp.ones_like(x), b0, c0, d0, h0, delh0, q0, q1_0, q2_0, s0,
         jnp.zeros_like(x, dtype=bool),
     )
+    # spmdlint: ignore[R5] early-exit CF2 convergence is the point (i32 carry, elementwise); differentiable paths use kv_half_integer closed forms
     out = lax.while_loop(cond, body, init)
     h, s = out[5], out[10]
     h = a1 * h
@@ -202,6 +204,7 @@ def kv(nu, x):
         rktemp = (mu + fi) * (2.0 / xs) * rk1 + rkmu
         return rk1, rktemp
 
+    # spmdlint: ignore[R5] nl = floor(nu + 0.5) recurrences — nu may be traced, so the trip count is data-dependent by design
     rkmu, rk1 = lax.fori_loop(1, nl + 1, recur, (rkmu, rk1))
     return rkmu
 

@@ -25,7 +25,7 @@ def grid_locations(nx: int, ny: int | None = None, jitter: float = 0.0,
     ys = (np.arange(ny) + 0.5) / ny
     gx, gy = np.meshgrid(xs, ys, indexing="ij")
     locs = np.stack([gx.ravel(), gy.ravel()], axis=-1)
-    if jitter:
+    if jitter != 0.0:               # host-side numpy; explicit, not truthiness
         rng = np.random.default_rng(seed)
         locs = locs + rng.uniform(-jitter / nx, jitter / nx, size=locs.shape)
     return locs

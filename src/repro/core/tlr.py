@@ -442,6 +442,7 @@ def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
     rows = jnp.arange(T)
     # ---- POTRF on tile (k, k): replicated small factorization.
     dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
+    # spmdlint: ignore[R1] one (nb, nb) panel-head POTRF replicated on purpose: every shard needs L_kk immediately and nb^2 is tiny next to the pair batch
     lkk = jnp.linalg.cholesky(dkk)
     row_is_k = (rows == k)[:, None, None]
     # ---- TRSM on panel column k (V only; U untouched — §5.3).
@@ -553,6 +554,7 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
     pos = jnp.asarray(layout.pos)
     # ---- POTRF on tile (k, k): replicated small factorization.
     dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
+    # spmdlint: ignore[R1] one (nb, nb) panel-head POTRF replicated on purpose: every shard needs L_kk immediately and nb^2 is tiny next to the pair batch
     lkk = jnp.linalg.cholesky(dkk)
     row_is_k = (rows == k)[:, None, None]
     below = (rows > k)[:, None, None]
@@ -731,6 +733,7 @@ def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
                                max_rank=max_rank, nugget=nugget, gen=gen,
                                scale=scale)
     else:
+        # spmdlint: ignore[A4] from_tiles=False is the dense validation path (small n, tests only)
         sigma = build_sigma(None, params, representation="I", nugget=nugget,
                             dists=dists)
         scale = jnp.max(jnp.abs(jnp.diagonal(sigma)))

@@ -332,6 +332,10 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         fac_sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
                                        block_cyclic=bc)
         cells[name] = (fac_fn, fac_specs, fac_sh, fac_trips, (0, 1, 2, 3))
+    from ..analysis import LintConfig, lint_lowerable, tlr_dense_frac
+    # R3's densification bar scales with the tile geometry: the masked-grid
+    # baseline legitimately stores (kmax/nb) m^2 tile elements.
+    lcfg = LintConfig(dense_frac=tlr_dense_frac(nb, kmax))
     out = {}
     for name, (fn, specs, sh, trips, donate) in cells.items():
         comp = jax.jit(fn, in_shardings=sh,
@@ -339,12 +343,17 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         ca = rl.cost_analysis_dict(comp)
         coll = rl.collective_bytes(comp.as_text())
         ms = comp.memory_analysis()
+        lint = lint_lowerable(fn, specs, mesh=mesh, donate_argnums=donate,
+                              matrix_dim=m, compiled=comp, config=lcfg)
         out[name] = dict(flops=float(ca.get("flops", 0.0)) * trips,
                          bytes=float(ca.get("bytes accessed", 0.0)) * trips,
                          coll=float(coll["total"]) * trips, trips=trips,
                          temp_bytes=int(getattr(ms, "temp_size_in_bytes", 0)),
                          alias_bytes=int(getattr(ms, "alias_size_in_bytes",
-                                                 0)))
+                                                 0)),
+                         lint=lint.summary,
+                         lint_findings=[f.to_dict() for f in lint.findings
+                                        if not f.suppressed])
     out["compress_only"] = {
         k: max(out["gen_compress"][k] - out["gen"][k], 0.0)
         for k in ("flops", "bytes", "coll")}
@@ -460,8 +469,12 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
             ph = phases[name]
             tb = (f" temp={ph['temp_bytes']:.4g}" if "temp_bytes" in ph
                   else "")
+            li = ph.get("lint")
+            lint_col = (f" findings={li['errors']}e/{li['warnings']}w"
+                        f"/{li['suppressed']}s" if li else "")
             print(f"tlr_phase {name:20s} flops={ph['flops']:.4g} "
-                  f"bytes={ph['bytes']:.4g} coll={ph['coll']:.4g}{tb}")
+                  f"bytes={ph['bytes']:.4g} coll={ph['coll']:.4g}{tb}"
+                  f"{lint_col}")
         ps = phases["pair_stats"]
         print(f"tlr_pair_updates live={ps['live_updates']} "
               f"masked={ps['masked_updates']} "

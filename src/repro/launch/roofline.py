@@ -30,12 +30,22 @@ PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
-_DTYPE_BYTES = {
-    "pred": 0.125, "s4": 0.5, "u4": 0.5,
-    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+# Bits per element for every HLO primitive type.  PRED counts as one BIT —
+# the historical convention of this model (and the lower bound a packed
+# mask costs); s4/u4/s2/u2 are bit-packed, so byte sizes round up per
+# array, not per element; c64 is two f32s.
+_DTYPE_BITS = {
+    "pred": 1,
+    "s2": 2, "u2": 2, "s4": 4, "u4": 4,
+    "s8": 8, "u8": 8,
+    "f8e3m4": 8, "f8e4m3": 8, "f8e4m3fn": 8, "f8e4m3b11fnuz": 8,
+    "f8e4m3fnuz": 8, "f8e5m2": 8, "f8e5m2fnuz": 8, "f8e8m0fnu": 8,
+    "f4e2m1fn": 4,
+    "s16": 16, "u16": 16, "f16": 16, "bf16": 16,
+    "s32": 32, "u32": 32, "f32": 32, "tf32": 32,
+    "s64": 64, "u64": 64, "f64": 64,
+    "c64": 64, "c128": 128,
+    "token": 0, "opaque": 0,
 }
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -48,16 +58,23 @@ _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 
 
 def bytes_of_type(type_str: str) -> int:
-    """Total bytes of all dtype[dims] shapes in a (possibly tuple) type."""
+    """Total bytes of all dtype[dims] shapes in a (possibly tuple) type.
+
+    Exact over the full HLO element-type table (raises on an element type
+    it does not know rather than silently undercounting — a new XLA dtype
+    must be added to ``_DTYPE_BITS`` with its real width).
+    """
     total = 0
     for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
+        if dtype not in _DTYPE_BITS:
+            raise ValueError(
+                f"unknown HLO element type {dtype!r} in {type_str!r} — "
+                f"add its width to repro.launch.roofline._DTYPE_BITS")
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += int(n * _DTYPE_BYTES[dtype])
+        total += (n * _DTYPE_BITS[dtype] + 7) // 8
     return total
 
 

@@ -1,0 +1,9 @@
+"""A1 bad: truthiness and host casts on a float-defaulted parameter in a
+traced module — TracerBoolConversionError the moment the MLE traces it."""
+import jax.numpy as jnp
+
+
+def apply_nugget(diag, nugget=0.0):
+    if nugget:                                   # A1: tracer truthiness
+        diag = diag + nugget * jnp.eye(diag.shape[0])
+    return diag * float(nugget)                  # A1: host cast

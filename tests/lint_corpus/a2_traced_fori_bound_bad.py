@@ -1,0 +1,12 @@
+"""A2 bad: a fori_loop bound computed from array values traces the trip
+count — the loop lowers to a non-reverse-differentiable while (s64 carry
+under x64), the R5 cliff caught before tracing."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def accumulate(x, ranks):
+    def body(i, acc):
+        return acc + x[i]
+
+    return lax.fori_loop(0, jnp.int32(ranks.sum()), body, 0.0)

@@ -1,0 +1,7 @@
+"""A3 bad: host linalg in a traced module pulls tracers to the host —
+ConcretizationTypeError at best, a device round-trip at worst."""
+import numpy as np
+
+
+def factor(sigma):
+    return np.linalg.cholesky(sigma)

@@ -1,0 +1,6 @@
+"""A3 good: jnp.linalg stays on device and traces."""
+import jax.numpy as jnp
+
+
+def factor(sigma):
+    return jnp.linalg.cholesky(sigma)

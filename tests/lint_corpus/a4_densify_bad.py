@@ -1,0 +1,7 @@
+"""A4 bad: calling a dense generator inside a never-densify module — the
+whole (m, m) Sigma materializes where only panels may exist."""
+from repro.core.covariance import build_sigma
+
+
+def assemble(locs, params):
+    return build_sigma(locs, params)

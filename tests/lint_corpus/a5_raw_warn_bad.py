@@ -1,0 +1,7 @@
+"""A5 bad: a raw warnings.warn fallback — fires once per callsite per
+process, is not keyed, and tests cannot assert on it."""
+import warnings
+
+
+def fallback(reason):
+    warnings.warn(f"falling back: {reason}")

@@ -1,0 +1,7 @@
+"""A5 good: degraded paths route through warn_fallback_once — one-shot,
+keyed, and testable."""
+from repro.distribution.pair_qr import warn_fallback_once
+
+
+def fallback(reason):
+    warn_fallback_once("corpus-fallback", f"falling back: {reason}")

@@ -1,0 +1,21 @@
+"""R2a pair: large inputs that are dead once the computation finishes and
+have identically-shaped outputs to alias must be donated — undonated they
+double the working set (the dense-Cholesky Sigma buffer class)."""
+import jax
+import jax.numpy as jnp
+
+M = 1024                 # 4 MB per f32 input, above donation_min_bytes
+
+
+def _fn(a, b):
+    return a * 2.0, b * 2.0
+
+
+def make_bad():
+    specs = (jax.ShapeDtypeStruct((M, M), jnp.float32),) * 2
+    return _fn, specs, dict()
+
+
+def make_good():
+    specs = (jax.ShapeDtypeStruct((M, M), jnp.float32),) * 2
+    return _fn, specs, dict(donate_argnums=(0, 1))

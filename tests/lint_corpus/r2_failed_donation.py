@@ -1,0 +1,23 @@
+"""R2b pair: a donation only pays through input-output aliasing — donating
+an input whose only output is a scalar reduction frees nothing (XLA warns
+and ignores it); the donation must be dropped or the buffer returned."""
+import jax
+import jax.numpy as jnp
+
+M = 1024
+
+
+def make_bad():
+    def fn(a):
+        return a.sum()           # no (M, M) output: nothing to alias
+
+    specs = (jax.ShapeDtypeStruct((M, M), jnp.float32),)
+    return fn, specs, dict(donate_argnums=(0,))
+
+
+def make_good():
+    def fn(a):
+        return a * 2.0           # same-shaped output reuses a's buffer
+
+    specs = (jax.ShapeDtypeStruct((M, M), jnp.float32),)
+    return fn, specs, dict(donate_argnums=(0,))

@@ -1,0 +1,34 @@
+"""R3 pair: a TLR lowering (matrix_dim=m) must never materialize the dense
+(m, m) Sigma — distances/covariances stream in panels from the generator."""
+import jax
+import jax.numpy as jnp
+
+M = 512
+
+
+def make_bad():
+    def fn(locs):
+        diff = locs[:, None, :] - locs[None, :, :]       # (m, m, 2)
+        sigma = jnp.exp(-jnp.sqrt((diff ** 2).sum(-1) + 1e-12))
+        return jnp.linalg.slogdet(sigma)[1]
+
+    specs = (jax.ShapeDtypeStruct((M, 2), jnp.float32),)
+    return fn, specs, dict(matrix_dim=M)
+
+
+def make_good():
+    rows = 32                    # (rows, m) panels stay well under 0.25 m^2
+
+    def fn(locs):
+        def panel(acc, i0):
+            p = jax.lax.dynamic_slice_in_dim(locs, i0, rows)
+            diff = p[:, None, :] - locs[None, :, :]
+            return acc + jnp.exp(
+                -jnp.sqrt((diff ** 2).sum(-1) + 1e-12)).sum(), None
+
+        acc, _ = jax.lax.scan(panel, 0.0,
+                              jnp.arange(0, M, rows, dtype=jnp.int32))
+        return acc
+
+    specs = (jax.ShapeDtypeStruct((M, 2), jnp.float32),)
+    return fn, specs, dict(matrix_dim=M)

@@ -1,0 +1,32 @@
+"""R4 pair: f32<->f64 convert_element_type churn inside a loop body moves
+the whole operand through memory every trip — the mixed-precision worklist
+(pick one dtype for the loop, convert once outside)."""
+import jax
+import jax.numpy as jnp
+
+SHAPE = (1024, 512)              # 2 MB f32, above convert_warn_bytes
+
+
+def make_bad():
+    def fn(x):
+        def body(c, _):
+            y = c.astype(jnp.float64)            # up-cast every trip
+            return jnp.tanh(y).astype(jnp.float32), None
+
+        out, _ = jax.lax.scan(body, x, None, length=4)
+        return out
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float32),)
+    return fn, specs, dict()
+
+
+def make_good():
+    def fn(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2.0, None       # stays f32 throughout
+
+        out, _ = jax.lax.scan(body, x, None, length=4)
+        return out
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float32),)
+    return fn, specs, dict()

@@ -1,0 +1,34 @@
+"""R5 pair: a dynamic-trip-count while carrying an s64 scalar is the SPMD
+partitioner/reverse-diff cliff; counted loops belong in scan/fori with a
+static python trip count (which lowers to scan, no while primitive)."""
+import jax
+import jax.numpy as jnp
+
+N = 64
+
+
+def make_bad():
+    def fn(n):
+        def cond(c):
+            return c[0] < n
+
+        def body(c):
+            return c[0] + 1, c[1] + 1.0
+
+        _, acc = jax.lax.while_loop(
+            cond, body, (jnp.int64(0), jnp.float64(0.0)))
+        return acc
+
+    specs = (jax.ShapeDtypeStruct((), jnp.int64),)
+    return fn, specs, dict()
+
+
+def make_good():
+    def fn(x):
+        def body(i, acc):
+            return acc + x[i]
+
+        return jax.lax.fori_loop(0, N, body, jnp.float64(0.0))
+
+    specs = (jax.ShapeDtypeStruct((N,), jnp.float64),)
+    return fn, specs, dict()

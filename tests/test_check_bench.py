@@ -44,6 +44,7 @@ def _artifact(**overrides):
                              pipeline_bc_sharded=2526808,
                              compress_sharded=812000,
                              pipeline_compress_sharded=2430000),
+        replicated_temp_bytes=0, undonated_dead_bytes=0,
     )
     art.update(overrides)
     return art
@@ -164,3 +165,21 @@ def test_cli_on_real_and_broken_artifacts(check_bench, tmp_path):
     bad.write_text(json.dumps(_artifact(loglik_delta_vs_exact=1.0)))
     assert check_bench.main([str(bad)]) == 1
     assert check_bench.main([str(tmp_path / "missing.json")]) == 1
+
+
+def test_spmd_lint_gate_keys(check_bench):
+    """replicated_temp_bytes / undonated_dead_bytes must be present and 0."""
+    assert check_bench.check_artifact(_artifact()) == []
+    for key in ("replicated_temp_bytes", "undonated_dead_bytes"):
+        art = _artifact()
+        del art[key]
+        errs = check_bench.check_artifact(art)
+        assert any(f"missing key: {key}" in e for e in errs)
+        errs = check_bench.check_artifact(_artifact(**{key: 13500000000}))
+        assert any(key in e and "SPMD-lint" in e for e in errs)
+        errs = check_bench.check_artifact(_artifact(**{key: float("nan")}))
+        assert any(key in e for e in errs)
+        # zero passes; a non-numeric value fails
+        assert check_bench.check_artifact(_artifact(**{key: 0})) == []
+        errs = check_bench.check_artifact(_artifact(**{key: "oops"}))
+        assert any(key in e for e in errs)

@@ -599,3 +599,42 @@ def test_super_panel_tlr_matches_single_level():
             got = np.asarray(u2[i, j] @ v2[i, j].T)
             want = np.asarray(u1[i, j] @ v1[i, j].T)
             np.testing.assert_allclose(got, want, atol=1e-8)
+
+
+def test_dist_cholesky_lowerable_donates_in_place():
+    """The donated dense-Cholesky lowerable must (a) match LAPACK, (b) alias
+    its donated Sigma buffer on every device — the in-place .at[] POTRF/
+    TRSM/SYRK chain exists precisely because the panel-assembly form's
+    fresh output buffer defeats donation under SPMD — and (c) pass the
+    R2 donation lint with zero errors."""
+    out = _run_subprocess("""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.dist_cholesky import dist_cholesky_lowerable
+    from repro.analysis import lint_lowerable
+
+    m, panel = 256, 64
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    fn, specs = dist_cholesky_lowerable(m, panel=panel, mesh=mesh,
+                                        dtype=jnp.float32)
+    sh = (NamedSharding(mesh, P("data", "model")),)
+    comp = jax.jit(fn, in_shardings=sh,
+                   donate_argnums=(0,)).lower(*specs).compile()
+    ms = comp.memory_analysis()
+    per_device = m * m * 4 // len(jax.devices())
+    assert ms.alias_size_in_bytes >= per_device, (
+        ms.alias_size_in_bytes, per_device)
+
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(m, m))
+    sigma = (a @ a.T + m * np.eye(m)).astype(np.float32)
+    want = np.linalg.cholesky(sigma)
+    got = np.asarray(comp(jnp.asarray(sigma)))
+    np.testing.assert_allclose(got, want, atol=5e-4)
+
+    rep = lint_lowerable(fn, specs, mesh=mesh, in_shardings=sh,
+                         donate_argnums=(0,))
+    assert rep.summary["errors"] == 0, rep.summary
+    assert rep.summary["undonated_dead_bytes"] == 0, rep.summary
+    print("ALIAS", int(ms.alias_size_in_bytes))
+    """)
+    assert "ALIAS" in out
