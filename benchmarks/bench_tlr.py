@@ -228,8 +228,10 @@ def collect_artifact(quick=False):
     memory, the generator-direct loglik deltas vs the exact likelihood for
     both the single-device path and the distributed streaming pipeline
     (dist_compress_tiles -> fori_loop Cholesky, run unsharded here), the
-    masked vs block-cyclic factorization comparison, and per-phase compiled
-    temp bytes (peak_temp_bytes)."""
+    masked vs block-cyclic factorization comparison, per-phase compiled
+    temp bytes (peak_temp_bytes), and the serving prefill/decode split
+    (fit_factor / predict_batch timings + predictions/sec + the relative
+    accuracy of the served mean vs dense cokriging)."""
     from repro.core.dist_tlr import dist_compress_tiles, dist_tlr_loglik
 
     n_side = 12 if quick else 16
@@ -298,6 +300,32 @@ def collect_artifact(quick=False):
     dist_ll_csh_us, ll_dist_csh = time_fn(dist_ll_csh, locs_j, z, iters=2)
     ll_dist_csh = float(ll_dist_csh)
 
+    # Serving (factor-once / predict-millions): time the prefill (compress +
+    # pair Cholesky + alpha) and the decode (one B-point batch against the
+    # cached factor).  The warmup + timed iters all reuse ONE factor handle —
+    # Sigma is never rebuilt between batches (the serving contract; the
+    # no-rebuild assertion itself lives in tests/test_serving_cokrige.py).
+    # loglik_delta_predict is the RELATIVE max error of the served mean vs
+    # the dense cokrige baseline, so check_bench's loglik_delta* gate (1e-3,
+    # the ISSUE acceptance bound at m=512) applies to it unchanged.
+    from repro.core.prediction import cokrige
+    from repro.serving.cokrige_service import (CokrigeServeConfig,
+                                               make_cokrige_serve_fns)
+    B = 64 if quick else 128
+    pred_locs = jnp.asarray(grid_locations(n_side, jitter=0.4, seed=7)[:B])
+    scfg = CokrigeServeConfig(tile_size=nb, max_rank=kmax, tol=tol,
+                              nugget=1e-8)
+    fit_fn, pred_fn = make_cokrige_serve_fns(scfg)
+    fit_us, factor = time_fn(fit_fn, locs_j, z, params, iters=2)
+    pred_us, served = time_fn(pred_fn, factor, pred_locs, iters=3)
+    dense_mean = np.asarray(cokrige(locs, z, pred_locs, params, nugget=1e-8))
+    delta_pred = float(np.max(np.abs(np.asarray(served.mean) - dense_mean))
+                       / np.max(np.abs(dense_mean)))
+    emit("serving_fit_factor", fit_us, f"m={m};tile_size={nb}")
+    emit("serving_predict_batch", pred_us,
+         f"B={B};predictions_per_sec={B * 1e6 / pred_us:.0f};"
+         f"rel_err_vs_dense={delta_pred:.2e}")
+
     phase_temps, lint_gate = _phase_temp_bytes(n_side * n_side, 2, params,
                                                tile_size=nb, max_rank=kmax,
                                                tol=tol, nugget=1e-8)
@@ -332,6 +360,11 @@ def collect_artifact(quick=False):
         loglik_dist_compress_sharded=ll_dist_csh,
         loglik_delta_compress_sharded=abs(ll_dist_csh - ll_exact),
         loglik_delta_compress_sharded_vs_bc=abs(ll_dist_csh - ll_dist_bc),
+        # cokriging-as-a-service (PR 7): prefill/decode split
+        fit_factor_time_us=fit_us,
+        predict_batch_p50_us=pred_us,
+        predictions_per_sec=B * 1e6 / pred_us,
+        loglik_delta_predict=delta_pred,
     )
 
 

@@ -28,7 +28,12 @@ deltas versus the exact likelihood.  This script fails (exit 1) when
   * an SPMD-lint gate metric is nonzero (``replicated_temp_bytes`` /
     ``undonated_dead_bytes``, summed over the benchmarked phases by
     bench_tlr via repro.analysis — any unsuppressed replicated
-    decomposition batch or donatable dead input fails the gate, PR 6).
+    decomposition batch or donatable dead input fails the gate, PR 6), or
+  * the serving prefill/decode trajectory is missing or mistimed
+    (``fit_factor_time_us`` / ``predict_batch_p50_us`` /
+    ``predictions_per_sec``), or the served mean drifts from the dense
+    cokrige baseline past the same bound (``loglik_delta_predict`` — the
+    serving acceptance at m = 512, PR 7).
 
 Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
                                          [--max-bc-ratio 1.0]
@@ -62,6 +67,11 @@ REQUIRED_KEYS = (
     # both must stay exactly zero — any unsuppressed replicated
     # decomposition batch or donatable dead input is a regression.
     "replicated_temp_bytes", "undonated_dead_bytes",
+    # cokriging-as-a-service (PR 7): prefill/decode timings plus the
+    # relative error of the served mean vs dense cokriging, gated by the
+    # same loglik_delta* bound (the 1e-3 serving acceptance at m=512).
+    "fit_factor_time_us", "predict_batch_p50_us", "predictions_per_sec",
+    "loglik_delta_predict",
 )
 LINT_GATE_KEYS = ("replicated_temp_bytes", "undonated_dead_bytes")
 TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
@@ -69,7 +79,9 @@ TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
                "cholesky_masked_time_us", "cholesky_bc_time_us",
                "dist_loglik_bc_time_us", "recompress_sharded_time_us",
                "dist_loglik_bc_sharded_time_us", "compress_sharded_time_us",
-               "dist_loglik_compress_sharded_time_us")
+               "dist_loglik_compress_sharded_time_us",
+               "fit_factor_time_us", "predict_batch_p50_us",
+               "predictions_per_sec")
 TEMP_PHASE_KEYS = ("gen_compress", "factorize_masked", "factorize_bc",
                    "pipeline_masked", "pipeline_bc",
                    "factorize_bc_sharded", "pipeline_bc_sharded",
@@ -152,6 +164,8 @@ def main(argv=None) -> int:
           f"sharded_vs_bc={artifact['loglik_delta_sharded_vs_bc']:.3e}, "
           f"compress_sharded={artifact['loglik_delta_compress_sharded']:.3e}, "
           f"bc_speedup={artifact['cholesky_bc_speedup']:.2f}x, "
+          f"predict={artifact['loglik_delta_predict']:.3e}, "
+          f"predictions_per_sec={artifact['predictions_per_sec']:.0f}, "
           f"max-delta={args.max_delta:g})")
     return 0
 

@@ -45,11 +45,8 @@ import argparse  # noqa: E402
 import json  # noqa: E402
 
 from .findings import format_findings, severity_at_least  # noqa: E402
-from .spmdlint import LintConfig, lint_lowerable, tlr_dense_frac  # noqa: E402
-
-TARGETS = ("dist_tlr_pipeline_lowerable", "dist_tlr_gen_lowerable",
-           "dist_tlr_compress_lowerable", "dist_tlr_lowerable",
-           "dist_loglik_lowerable", "dist_cokrige_lowerable")
+from .spmdlint import LintConfig, lint_lowerable  # noqa: E402
+from ..lowerables import build as build_lowerables, names as target_names  # noqa: E402
 
 
 def _make_mesh(name: str):
@@ -72,95 +69,13 @@ def _shapes() -> dict:
     return shapes
 
 
-def _tlr_geometry(m: int):
-    """(tile_size, max_rank) scaled down for small dev shapes."""
-    from ..configs.geostat import GEOSTAT_TLR as cfg
-    nb = max(64, min(cfg.tile_size, m // 32))
-    return nb, min(cfg.max_rank, nb // 2)
-
-
-def build_target(name: str, shape, mesh):
-    """One lowerable ready for lint_lowerable: (fn, specs, kwargs)."""
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    from ..configs.geostat import GEOSTAT_TLR as cfg
-    from ..core.covariance import MaternParams
-    from ..core.dist_cholesky import (dist_cokrige_lowerable,
-                                      dist_loglik_lowerable)
-    from ..core.dist_tlr import (dist_tlr_compress_lowerable,
-                                 dist_tlr_gen_lowerable,
-                                 dist_tlr_in_shardings, dist_tlr_lowerable,
-                                 dist_tlr_pipeline_lowerable)
-
-    params = MaternParams.bivariate(a=0.09, nu11=0.5, nu22=2.5, beta=0.5,
-                                    dtype=jnp.float32)
-    row = (("pod", "data") if "pod" in mesh.axis_names else ("data",))
-    m = shape.matrix_dim
-    nb, kmax = _tlr_geometry(m)
-    # Dev geometries have fat tiles (kmax = nb/2): scale R3's bar past the
-    # legitimate (kmax/nb) m^2 tile storage of a correct TLR lowering.
-    lcfg = LintConfig(dense_frac=tlr_dense_frac(nb, kmax))
-    ns = lambda *spec: NamedSharding(mesh, P(*spec))  # noqa: E731
-
-    if name == "dist_tlr_pipeline_lowerable":
-        fn, specs = dist_tlr_pipeline_lowerable(
-            shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
-            tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
-            super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic)
-        return fn, specs, dict(in_shardings=(ns(row, None), ns(row)),
-                               matrix_dim=m, config=lcfg)
-    if name == "dist_tlr_gen_lowerable":
-        fn, specs = dist_tlr_gen_lowerable(
-            shape.n_locations, shape.p, params, tile_size=nb, gen="xla",
-            mesh=mesh, row_axes=row)
-        return fn, specs, dict(in_shardings=(ns(row, None),), matrix_dim=m,
-                               config=lcfg)
-    if name == "dist_tlr_compress_lowerable":
-        fn, specs = dist_tlr_compress_lowerable(
-            shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
-            tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
-            block_cyclic=cfg.block_cyclic, shard_svd=True)
-        return fn, specs, dict(in_shardings=(ns(row, None),), matrix_dim=m,
-                               config=lcfg)
-    if name == "dist_tlr_lowerable":
-        fn, specs = dist_tlr_lowerable(
-            m // nb, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
-            super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic,
-            return_factor=True)
-        sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
-                                   block_cyclic=cfg.block_cyclic)
-        return fn, specs, dict(in_shardings=sh, donate_argnums=(0, 1, 2, 3),
-                               matrix_dim=m, config=lcfg)
-    if name == "dist_loglik_lowerable":
-        panel = max(512, m // 64)
-        fn, specs = dist_loglik_lowerable(shape.n_locations, shape.p, params,
-                                          panel=panel, mesh=mesh,
-                                          row_axes=row)
-        # exact backend: dense by contract, so R3 stays disarmed
-        return fn, specs, dict(in_shardings=(ns(row, None), ns(row)),
-                               matrix_dim=None)
-    if name == "dist_cokrige_lowerable":
-        n_pred = getattr(shape, "n_pred", 0) or max(shape.n_locations // 16,
-                                                    256)
-        panel = max(512, m // 64)
-        fn, specs = dist_cokrige_lowerable(
-            shape.n_locations, n_pred, shape.p, params, panel=panel,
-            mesh=mesh, row_axes=row)
-        return fn, specs, dict(
-            in_shardings=(ns(row, None), ns(None, None), ns(row)),
-            matrix_dim=None)
-    raise SystemExit(f"unknown --target {name!r} (choose from "
-                     f"{', '.join(TARGETS)}, or 'all')")
-
-
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="SPMD-lint: jaxpr/HLO + AST static analysis")
     ap.add_argument("--target", default=None,
-                    help=f"lowerable to lint: one of {', '.join(TARGETS)} "
-                         f"or 'all'")
+                    help="registered lowerable to lint (repro.lowerables: "
+                         f"{', '.join(target_names())}) or 'all'")
     ap.add_argument("--mesh", default="cpu8",
                     help="pod256 | pod512 | host | cpuN (default cpu8)")
     ap.add_argument("--shape", default="mle_65k",
@@ -199,14 +114,23 @@ def main(argv=None) -> int:
             ap.error(f"unknown --shape {args.shape!r} "
                      f"(choose from {', '.join(sorted(shapes))})")
         shape = shapes[args.shape]
-        names = TARGETS if args.target == "all" else (args.target,)
+        names = target_names() if args.target == "all" else (args.target,)
         for name in names:
-            fn, specs, kw = build_target(name, shape, mesh)
-            kw.setdefault("config", LintConfig())
-            report = lint_lowerable(fn, specs, mesh=mesh,
-                                    compile=not args.no_compile, **kw)
-            findings += report.findings
-            reports[name] = report
+            try:
+                cells = build_lowerables(name, shape, mesh)
+            except KeyError as e:
+                ap.error(str(e))
+            for cell, low in cells.items():
+                report = lint_lowerable(
+                    low.fn, low.specs, mesh=mesh,
+                    compile=not args.no_compile,
+                    in_shardings=low.in_shardings,
+                    donate_argnums=low.donate_argnums,
+                    matrix_dim=low.matrix_dim,
+                    config=low.config if low.config is not None
+                    else LintConfig())
+                findings += report.findings
+                reports[cell] = report
 
     if args.as_json:
         out = {}

@@ -39,9 +39,12 @@ from .findings import Finding, SuppressionIndex
 #: modules whose function bodies are (potentially) traced under jit.
 TRACED_DIRS = ("core", "distribution", "kernels")
 
-#: never-densify modules: the dense Sigma must not be generated here.
+#: never-densify modules: the dense Sigma must not be generated here.  The
+#: serving decode path streams c0 panels against the cached factor — one
+#: build_sigma there would silently reintroduce the O(m^2) per-batch
+#: rebuild the factor-once API exists to remove.
 NEVER_DENSIFY = ("core/tlr.py", "core/dist_tlr.py", "core/assessment.py",
-                 "distribution/")
+                 "distribution/", "serving/cokrige_service.py")
 
 DENSE_GENERATORS = ("build_sigma", "pairwise_distances", "tlr_to_dense")
 

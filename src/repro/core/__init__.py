@@ -14,7 +14,8 @@ from .matern import (cross_covariance, effective_range, kv,  # noqa: F401
                      parsimonious_rho)
 from .mle import FitResult, MLEConfig, fit, make_objective  # noqa: F401
 from .optimize import nelder_mead  # noqa: F401
-from .prediction import cokrige, cokrige_and_score, mspe  # noqa: F401
+from .prediction import (CokrigeFactor, cokrige, cokrige_and_score,  # noqa: F401
+                         dense_factor, mspe)
 from .assessment import mloe_mmom, mloe_mmom_univariate  # noqa: F401
 from .simulate import (grid_locations, simulate_mgrf,  # noqa: F401
                        split_train_pred, uniform_locations)

@@ -245,6 +245,38 @@ def build_c0(pred_locs, obs_locs, params: MaternParams, representation: str = "I
     return c0
 
 
+def build_c0_panels(obs_locs, pred_locs, params: MaternParams, *, nbl: int,
+                    d_spatial: int = 2, gen: str = "xla"):
+    """Prediction cross-covariance in *tile-panel* form, generator-direct.
+
+    Returns (T, nb, B*p) with T = n // nbl tile rows and nb = nbl * p:
+    tile t is the Representation-I panel between observation tile t and the
+    whole prediction batch, i.e. ``out.reshape(m, B*p)`` equals the dense
+    ``build_sigma_panel(obs_locs, pred_locs, ...)`` — the (m, B, p)
+    transpose of ``build_c0``'s (B, m, p).  The serving decode path
+    (serving/cokrige_service.py) streams these tiles against the cached
+    TLR factor one observation tile at a time, so neither Sigma nor a
+    dense (B, m, p) c0 is ever materialized for large B.
+
+    ``nbl`` (locations per tile) must be static and divide n.  Tile rows
+    are generated as one vmapped batch (the compress-GEN idiom — a scan
+    with stacked outputs trips the SPMD partitioner's index-width checks
+    when the result carries a sharding constraint under x64), so the
+    leading axis shards cleanly over the row mesh axes.
+    """
+    obs_locs = jnp.asarray(obs_locs)
+    pred_locs = jnp.asarray(pred_locs)
+    n = obs_locs.shape[0]
+    if n % nbl:
+        raise ValueError(f"nbl={nbl} must divide n={n}")
+    T = n // nbl
+
+    gen_row = jax.vmap(lambda rows: build_sigma_panel(
+        rows, pred_locs, params, d_spatial=d_spatial, gen=gen,
+        block=nbl * params.p))
+    return gen_row(obs_locs.reshape(T, nbl, -1))  # (T, nb, B*p)
+
+
 def cross_cov_at_zero(params: MaternParams, d_spatial: int = 2):
     """C(0; theta) — the p x p colocated covariance."""
     rho = parsimonious_rho(params.nu, params.beta, d=d_spatial)

@@ -36,10 +36,10 @@ and scatters the finished columns into either placement — the dense
 (pn x pn) Sigma is never materialized on any device.  ``shard_svd`` (the
 default) partitions the compression itself the way PR 4 partitioned the
 GEMM-phase QR/SVD: in pair mode each device *generates and compresses only
-the strict-lower tiles whose block-cyclic slots it owns*
+the strict-lower tiles whose block-cyclic slots it owns*, slot-major
 (_compress_tiles_pair_sharded over distribution.block_cyclic
-.column_owner_tables), so the per-device GEN panel is O(ceil((T-1)/S) * nb
-* col_block*nb) and the truncation-SVD workspace scales O(tiles/S) — under
+.owned_pair_tables — exactly pairs_per_shard tiles per device, no masked
+sentinel candidates), and the truncation-SVD workspace scales O(tiles/S) — under
 plain GSPMD the batched jnp.linalg.svd has no partitioning rule and the
 whole (cb*T, nb, nb) batch replicated on every device (~3.2 GB/device at
 mle_65k, the post-PR-4 dominant temp).  In grid mode the truncation SVDs
@@ -68,8 +68,8 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from ..distribution.block_cyclic import (PairLayout, column_owner_tables,
-                                         grid_to_pairs, pair_axis,
+from ..distribution.block_cyclic import (PairLayout, grid_to_pairs,
+                                         owned_pair_tables, pair_axis,
                                          pair_layout, pair_shards,
                                          pairs_to_grid, slice_positions)
 from ..distribution.compress_svd import (sharded_truncate_svd,
@@ -84,7 +84,8 @@ from .tlr import (TLRMatrix, _constrain, apply_nugget, choose_tile_size,
 __all__ = [
     "PairTLR", "dist_compress_tiles", "dist_tlr_cholesky",
     "dist_tlr_cholesky_pairs", "dist_tlr_solve_lower",
-    "dist_tlr_solve_lower_pairs", "dist_tlr_loglik", "dist_tlr_lowerable",
+    "dist_tlr_solve_lower_pairs", "dist_tlr_solve_upper_pairs",
+    "dist_tlr_loglik", "dist_tlr_lowerable",
     "dist_tlr_in_shardings", "dist_tlr_gen_lowerable",
     "dist_tlr_compress_lowerable", "dist_tlr_pipeline_lowerable",
 ]
@@ -299,71 +300,96 @@ def _compress_tiles_pair_sharded(locs, params, *, layout: PairLayout, nb, nbl,
                                  scale, mesh, row_axes, dtype):
     """Owned-slot generator-direct compression: every device generates and
     SVD-truncates only the strict-lower tiles whose block-cyclic pair slots
-    it owns, straight into its local shard.
+    it owns, straight into its local shard — *slot-major*.
 
-    The fori step g runs one shard_map over the pair axes.  Per column j of
-    the group, each device reads its owned row-tile list from
-    ``column_owner_tables`` (a sharded (S, T, L) operand, L =
-    ceil((T-1)/S)), gathers those L location blocks, generates the local
-    (L*nb, nb) sub-panel with ``build_sigma_panel`` (identical per-tile
-    values to the full build_sigma_column panel — entries are elementwise in
-    the pairwise distances), SVD-truncates its L tiles, and scatters them at
-    the shard-*local* slots.  Sentinel entries (column-j pads) gather zero
-    locations and scatter to the out-of-bounds local slot, so they drop;
-    upper-triangle tiles are never generated at all.  Per-device transient:
-    O(L * nb * nb) panel + O(L) tiles of SVD workspace per column, versus
-    the replicated form's O(m * cb*nb) panel + the whole cb*T batch — the
-    O(tiles/S) compress scaling of the ROADMAP item.  The only per-step
-    communication is the replicated locs broadcast the generator needs
-    anyway.
+    One shard_map over the pair axes runs the whole strict-lower sweep.
+    Each device walks its own local slots in groups of ``sb = col_block *
+    ceil((T-1)/S)`` (the per-step tile count of the former per-column
+    sweep, so the transient panel is the same size): it reads the (row,
+    col) tile coordinates of each owned slot from ``owned_pair_tables`` (a
+    sharded (S, pairs_per_shard) operand), gathers both location blocks,
+    generates the sb (nb, nb) tiles with a vmapped ``build_sigma_panel``
+    (identical per-tile values to the full build_sigma_column panel —
+    entries are elementwise in the pairwise distances), SVD-truncates
+    them, and writes them at their own local slots.  Sentinel entries
+    (layout pads) gather zero locations and scatter to the out-of-bounds
+    local slot, so they drop.
+
+    Per device and full sweep this generates exactly ``pairs_per_shard ~
+    T(T-1)/(2S)`` tiles — the owned set.  The former per-column sweep
+    (``column_owner_tables``) generated ``T * ceil((T-1)/S)`` candidate
+    tiles: ~2x the owned set even on one shard, and almost all masked
+    sentinels once S >> T-1 (at S = 256, T = 64 every device generated 64
+    tiles per sweep to keep ~8 — the ROADMAP carried item this layout
+    retires).  The only communication is the replicated locs broadcast
+    the generator needs anyway.
 
     Diagonal tiles (not in the pair set) are generated outside the
     shard_map, one (nb, nb) block per column, with the nugget applied
     jit-safely (core.tlr.apply_nugget)."""
     dspec, pspec, rspec = _pair_specs(mesh, row_axes)
     axes = pair_axis(mesh, row_axes)
-    # spmdlint: ignore[R1] O(S*T*L) int32 owner tables replicated on purpose: every shard gathers from the full table, and they are static per layout
-    own_rows, own_slots = column_owner_tables(layout)
-    L = own_rows.shape[-1]
-    own_rows = jnp.asarray(own_rows)        # (S, T, L)
-    own_slots = jnp.asarray(own_slots)
-    ospec = P(axes, None, None)
+    S, pps = layout.n_shards, layout.pairs_per_shard
+    sb = cb * max(-(-(T - 1) // S), 1)      # tiles per step (= old cb * L)
+    sb = min(sb, pps)
+    G = -(-pps // sb)                        # steps to cover the owned slots
+    own_rows, own_cols = owned_pair_tables(layout)
+    if G * sb > pps:                         # pad tables to G*sb sentinels
+        pad = np.full((S, G * sb - pps), T, np.int32)
+        own_rows = np.concatenate([own_rows, pad], axis=1)
+        own_cols = np.concatenate([own_cols, pad], axis=1)
+    # spmdlint: ignore[R1] O(S*pps) int32 pair tables: static per layout, and sharded over the pair axes like the tiles they address
+    own_rows = jnp.asarray(own_rows)        # (S, G*sb)
+    own_cols = jnp.asarray(own_cols)
+    ospec = P(axes, None)
     scale = jnp.asarray(scale)
-    col_off = jnp.arange(nbl)
+    blk_off = jnp.arange(nbl)
 
-    def local(g, u_l, v_l, r_l, rows_l, slots_l, locs_f, sc):
-        rows_l = rows_l.reshape(T, L)       # this shard's (1, T, L) slice
-        slots_l = slots_l.reshape(T, L)
-        for c in range(cb):                 # static unroll over the group
-            j = g * cb + c
-            rj = lax.dynamic_index_in_dim(rows_l, j, 0, keepdims=False)
-            sj = lax.dynamic_index_in_dim(slots_l, j, 0, keepdims=False)
-            idx = (rj[:, None] * nbl + col_off[None, :]).reshape(-1)
-            row_locs = locs_f.at[idx].get(mode="fill", fill_value=0.0)
-            cols = lax.dynamic_slice_in_dim(locs_f, j * nbl, nbl, axis=0)
-            panel = build_sigma_panel(row_locs, cols, params,
-                                      d_spatial=d_spatial, gen=gen, block=nb)
-            tiles = panel.reshape(L, nb, nb).astype(u_l.dtype)
-            Uj, Vj, Rj = svd_truncate_batch(tiles, tol, kmax, sc)
-            u_l = u_l.at[sj].set(Uj, mode="drop")   # sentinel slots drop
-            v_l = v_l.at[sj].set(Vj, mode="drop")
-            r_l = r_l.at[sj].set(Rj, mode="drop")
-        return u_l, v_l, r_l
+    gen_tile = jax.vmap(lambda r, c: build_sigma_panel(
+        r, c, params, d_spatial=d_spatial, gen=gen, block=nb))
 
-    step = shard_map(local, mesh,
-                     in_specs=(P(), pspec, pspec, rspec, ospec, ospec,
-                               P(None, None), P()),
-                     out_specs=(pspec, pspec, rspec),
-                     check_rep=False)
+    def local(u_l, v_l, r_l, rows_l, cols_l, locs_f, sc):
+        rows_l = rows_l.reshape(-1)          # this shard's (1, G*sb) slice
+        cols_l = cols_l.reshape(-1)
+
+        def step(g, carry):
+            u_l, v_l, r_l = carry
+            ri = lax.dynamic_slice_in_dim(rows_l, g * sb, sb)
+            ci = lax.dynamic_slice_in_dim(cols_l, g * sb, sb)
+            ridx = (ri[:, None] * nbl + blk_off[None, :]).reshape(-1)
+            cidx = (ci[:, None] * nbl + blk_off[None, :]).reshape(-1)
+            row_locs = locs_f.at[ridx].get(mode="fill", fill_value=0.0)
+            col_locs = locs_f.at[cidx].get(mode="fill", fill_value=0.0)
+            tiles = gen_tile(row_locs.reshape(sb, nbl, -1),
+                             col_locs.reshape(sb, nbl, -1))
+            tiles = tiles.astype(u_l.dtype)  # (sb, nb, nb), owned pairs only
+            Ug, Vg, Rg = svd_truncate_batch(tiles, tol, kmax, sc)
+            tgt = g * sb + jnp.arange(sb, dtype=ri.dtype)
+            tgt = jnp.where(ri < T, tgt, pps)        # pads drop (OOB slot)
+            u_l = u_l.at[tgt].set(Ug, mode="drop")
+            v_l = v_l.at[tgt].set(Vg, mode="drop")
+            r_l = r_l.at[tgt].set(Rg, mode="drop")
+            return u_l, v_l, r_l
+
+        return indexed_scan(step, G, (u_l, v_l, r_l))
+
+    sweep = shard_map(local, mesh,
+                      in_specs=(pspec, pspec, rspec, ospec, ospec,
+                                P(None, None), P()),
+                      out_specs=(pspec, pspec, rspec),
+                      check_rep=False)
 
     u = jnp.zeros((layout.length, nb, kmax), dtype)
     v = jnp.zeros((layout.length, nb, kmax), dtype)
     ranks = jnp.zeros((layout.length,), jnp.int32)
     diag = jnp.zeros((T, nb, nb), dtype)
 
-    def body(g, carry):
-        diag, u, v, ranks = carry
-        u, v, ranks = step(g, u, v, ranks, own_rows, own_slots, locs, scale)
+    u, v, ranks = sweep(u, v, ranks, own_rows, own_cols, locs, scale)
+    u = _constrain(u, mesh, pspec)
+    v = _constrain(v, mesh, pspec)
+    ranks = _constrain(ranks, mesh, rspec)
+
+    def body(g, diag):
         for c in range(cb):
             j = g * cb + c
             pj = lax.dynamic_slice_in_dim(locs, j * nbl, nbl, axis=0)
@@ -371,13 +397,9 @@ def _compress_tiles_pair_sharded(locs, params, *, layout: PairLayout, nb, nbl,
                                    gen=gen, block=nb).astype(dtype)
             dj = apply_nugget(dj, nugget, dtype)
             diag = lax.dynamic_update_index_in_dim(diag, dj, j, 0)
-        diag = _constrain(diag, mesh, dspec)
-        u = _constrain(u, mesh, pspec)
-        v = _constrain(v, mesh, pspec)
-        ranks = _constrain(ranks, mesh, rspec)
-        return diag, u, v, ranks
+        return _constrain(diag, mesh, dspec)
 
-    diag, u, v, ranks = indexed_scan(body, T // cb, (diag, u, v, ranks))
+    diag = indexed_scan(body, T // cb, diag)
     return PairTLR(diag=diag, u=u, v=v, ranks=ranks,
                    n_shards=layout.n_shards)
 
@@ -588,9 +610,15 @@ def dist_tlr_solve_lower_pairs(diag_l, up, vp, z, *, layout: PairLayout):
     """Forward substitution on pair-major storage: step k gathers only the
     live column-k tiles through ``layout.pos[:, k]`` (zero-filled above the
     diagonal) instead of slicing a (T, T) grid — the factor never leaves
-    the block-cyclic placement."""
+    the block-cyclic placement.
+
+    ``z`` may be (m,) or (m, r): the r right-hand sides (a serving c0
+    panel batch) share the one sweep over the factor, so the per-RHS cost
+    is a GEMM column, not a re-walk of the tiles."""
     T, nb = diag_l.shape[0], diag_l.shape[1]
-    z = z.reshape(T, nb)
+    single = z.ndim == 1
+    r = 1 if single else z.shape[1]
+    z = z.reshape(T, nb, r)
     rows = jnp.arange(T)
     pos = jnp.asarray(layout.pos)
 
@@ -598,20 +626,52 @@ def dist_tlr_solve_lower_pairs(diag_l, up, vp, z, *, layout: PairLayout):
         z, out = carry
         lkk = lax.dynamic_index_in_dim(diag_l, k, 0, keepdims=False)
         zk = lax.dynamic_index_in_dim(z, k, 0, keepdims=False)
-        ak = lax.linalg.triangular_solve(lkk, zk[:, None], left_side=True,
-                                         lower=True)[:, 0]
+        ak = lax.linalg.triangular_solve(lkk, zk, left_side=True, lower=True)
         out = lax.dynamic_update_index_in_dim(out, ak, k, 0)
         pcol = lax.dynamic_index_in_dim(pos, k, 1, keepdims=False)
         uk = up.at[pcol].get(mode="fill", fill_value=0.0)
         vk = vp.at[pcol].get(mode="fill", fill_value=0.0)
-        wk = jnp.einsum("tnk,n->tk", vk, ak)
-        delta = jnp.einsum("tnk,tk->tn", uk, wk)
-        below = (rows > k)[:, None]
+        wk = jnp.einsum("tnk,nr->tkr", vk, ak)
+        delta = jnp.einsum("tnk,tkr->tnr", uk, wk)
+        below = (rows > k)[:, None, None]
         z = z - jnp.where(below, delta, 0.0)
         return z, out
 
     _, out = indexed_scan(body, T, (z, jnp.zeros_like(z)))
-    return out.reshape(-1)
+    return out.reshape(-1) if single else out.reshape(T * nb, r)
+
+
+def dist_tlr_solve_upper_pairs(diag_l, up, vp, y, *, layout: PairLayout):
+    """Backward substitution L^T x = y on pair-major storage (the second
+    triangular solve of cokriging / alpha = Sigma^{-1} z).
+
+    Row k of L^T x reads ``L_kk^T x_k + sum_{i>k} V_ik U_ik^T x_i`` — the
+    transposed column-k tiles, gathered through the same ``layout.pos[:,
+    k]`` slot map as the forward sweep.  Sweeping k = T-1 .. 0, the
+    not-yet-solved rows of ``out`` are still zero and the sentinel gathers
+    fill zero tiles, so no explicit row mask is needed.  Same (m,) or
+    (m, r) right-hand-side convention as the forward solve."""
+    T, nb = diag_l.shape[0], diag_l.shape[1]
+    single = y.ndim == 1
+    r = 1 if single else y.shape[1]
+    y = y.reshape(T, nb, r)
+    pos = jnp.asarray(layout.pos)
+
+    def body(i, out):
+        k = T - 1 - i
+        pcol = lax.dynamic_index_in_dim(pos, k, 1, keepdims=False)
+        uk = up.at[pcol].get(mode="fill", fill_value=0.0)
+        vk = vp.at[pcol].get(mode="fill", fill_value=0.0)
+        wu = jnp.einsum("tnk,tnr->tkr", uk, out)
+        s = jnp.einsum("tnk,tkr->nr", vk, wu)
+        lkk = lax.dynamic_index_in_dim(diag_l, k, 0, keepdims=False)
+        yk = lax.dynamic_index_in_dim(y, k, 0, keepdims=False)
+        xk = lax.linalg.triangular_solve(lkk, yk - s, left_side=True,
+                                         lower=True, transpose_a=True)
+        return lax.dynamic_update_index_in_dim(out, xk, k, 0)
+
+    out = indexed_scan(body, T, jnp.zeros_like(y))
+    return out.reshape(-1) if single else out.reshape(T * nb, r)
 
 
 def _loglik_of(diag_l, alpha, m: int) -> LoglikResult:

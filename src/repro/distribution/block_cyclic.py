@@ -46,7 +46,7 @@ import jax.numpy as jnp
 
 __all__ = ["PairLayout", "pair_layout", "pair_shards", "pair_axis",
            "grid_to_pairs", "pairs_to_grid", "slice_positions",
-           "column_owner_tables"]
+           "column_owner_tables", "owned_pair_tables"]
 
 
 class PairLayout(NamedTuple):
@@ -174,6 +174,40 @@ def column_owner_tables(layout: PairLayout):
     numpy, derived from (n_tiles, n_shards) alone.
     """
     return _column_owner_tables(layout.n_tiles, layout.n_shards)
+
+
+@functools.lru_cache(maxsize=None)
+def _owned_pair_tables(n_tiles: int, n_shards: int):
+    layout = pair_layout(n_tiles, n_shards)
+    T, S, pps = layout.n_tiles, layout.n_shards, layout.pairs_per_shard
+    valid = layout.valid
+    rows = np.where(valid, layout.il, T).astype(np.int32).reshape(S, pps)
+    cols = np.where(valid, layout.jl, T).astype(np.int32).reshape(S, pps)
+    return rows, cols
+
+
+def owned_pair_tables(layout: PairLayout):
+    """Per-shard (row, col) tile indices of the owned pairs, slot-major.
+
+    Returns ``(rows, cols)``, int32 arrays of shape (S, pairs_per_shard):
+    ``rows[d, q]`` / ``cols[d, q]`` are the (i, j) tile coordinates of the
+    pair living at shard d's *local* slot q — exactly the order the pair
+    arrays store them (global slot = d * pairs_per_shard + q), so a
+    generator sweeping local slots writes each result at its own index
+    with no scatter indirection.  Pad slots carry the row = col = ``T``
+    sentinel (out of bounds for a mode="fill" location gather), mirroring
+    ``pos``'s convention.
+
+    This is the slot-major complement of ``column_owner_tables``: that
+    table answers "which of column j's pairs does shard d own" (the
+    per-column sweep, which generates ceil((T-1)/S) candidate tiles per
+    column — T * ceil((T-1)/S) per full sweep, mostly sentinels once
+    S >> T-1); this one answers "which pair lives at local slot q" (the
+    slot-major sweep, which generates exactly pairs_per_shard ~
+    T(T-1)/(2S) tiles per device, the owned set and nothing else).  All
+    static numpy, derived from (n_tiles, n_shards) alone.
+    """
+    return _owned_pair_tables(layout.n_tiles, layout.n_shards)
 
 
 def slice_positions(outer: PairLayout, inner: PairLayout, offset: int

@@ -287,14 +287,24 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
 
     ``gen_compress_sharded`` is the compress-phase counterpart (the
     production form the e2e pipeline runs, aliased as ``compress``): each
-    device generates + truncation-SVDs only its owned block-cyclic slots
-    (dist_compress_tiles shard_svd), versus ``gen_compress``'s replicated
-    batch; ``compress_temp_model`` (roofline.tlr_compress_temp_model) is
-    its closed-form per-device working-set prediction."""
+    device generates + truncation-SVDs only its owned block-cyclic slots,
+    slot-major (dist_compress_tiles shard_svd), versus ``gen_compress``'s
+    replicated batch; ``compress_temp_model``
+    (roofline.tlr_compress_temp_model) is its closed-form per-device
+    working-set prediction, including the GEN-tile drop of the slot-major
+    sweep (``gen_shrink``).
+
+    ``serve_fit`` / ``serve_predict`` are the cokriging serving phases
+    (serving/cokrige_service.py via the repro.lowerables registry): the
+    one-time factor build and the B = 512 decode batch against the cached
+    factor.  The decode cell's factor inputs are NOT donated — reuse
+    across request batches is the serving contract — and its report
+    carries ``predictions_per_sec`` from the roofline model."""
     from ..core.dist_tlr import (dist_tlr_compress_lowerable,
                                  dist_tlr_gen_lowerable,
                                  dist_tlr_in_shardings, dist_tlr_lowerable)
     from ..distribution.block_cyclic import pair_shards
+    from ..lowerables import build as build_lowerables
 
     params = _geostat_params()
     row = _row_axes(mesh)
@@ -332,6 +342,10 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         fac_sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
                                        block_cyclic=bc)
         cells[name] = (fac_fn, fac_specs, fac_sh, fac_trips, (0, 1, 2, 3))
+    # Serving phases from the registry: one registration, every consumer.
+    for name, low in build_lowerables("cokrige_serving", shape, mesh).items():
+        cells[name] = (low.fn, low.specs, low.in_shardings, t_tiles,
+                       low.donate_argnums)
     from ..analysis import LintConfig, lint_lowerable, tlr_dense_frac
     # R3's densification bar scales with the tile geometry: the masked-grid
     # baseline legitimately stores (kmax/nb) m^2 tile elements.
@@ -367,6 +381,9 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         t_tiles, nb, kmax, pair_shards(mesh, row))
     out["compress_temp_model"] = rl.tlr_compress_temp_model(
         t_tiles, nb, kmax, n_shards=pair_shards(mesh, row))
+    sp = out["serve_predict"]
+    sp["predictions_per_sec"] = rl.serve_predictions_per_sec(
+        sp["flops"], sp["bytes"], sp["coll"], batch=512)
     return out
 
 
@@ -465,7 +482,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
         rec["tlr_phases"] = phases
         for name in ("gen", "gen_compress", "gen_compress_sharded",
                      "compress_only", "factorize_masked", "factorize_bc",
-                     "factorize_bc_repl"):
+                     "factorize_bc_repl", "serve_fit", "serve_predict"):
             ph = phases[name]
             tb = (f" temp={ph['temp_bytes']:.4g}" if "temp_bytes" in ph
                   else "")
@@ -495,6 +512,15 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
               f"{ct['replicated_bytes']:.4g} sharded={ct['sharded_bytes']:.4g}"
               f" (/{ct['shrink']:.0f}); measured gen_compress temp drop "
               f"{cdrop:.2f}x vs replicated truncation batch")
+        print(f"tlr_compress_gen_tiles per device: owned="
+              f"{ct['gen_tiles_owned']} vs per-column candidate="
+              f"{ct['gen_tiles_candidate']} "
+              f"(x{ct['gen_shrink']:.2f} fewer, slot-major sweep)")
+        sf, sp = phases["serve_fit"], phases["serve_predict"]
+        print(f"tlr_serving fit temp={sf['temp_bytes']:.4g}/device "
+              f"decode temp={sp['temp_bytes']:.4g}/device "
+              f"predictions_per_sec={sp['predictions_per_sec']:.4g} "
+              f"(B=512 roofline decode)")
 
     print(f"== {arch_name} x {shape_name} x {mesh_name} [{variant}] ==")
     print("memory_analysis:", compiled.memory_analysis())

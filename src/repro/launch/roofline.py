@@ -329,10 +329,15 @@ def tlr_compress_temp_model(n_tiles: int, tile_size: int, kmax: int,
     jnp.linalg.svd has no partitioning rule, so the whole column group —
     the (m, cb*nb) GEN panel plus cb*T tiles of SVD workspace — replicates
     on every device (``replicated_bytes``).  The sharded form
-    (core.dist_tlr._compress_tiles_pair_sharded) generates and SVDs only
-    the ceil((T-1)/S) tiles each device owns per column
-    (``sharded_bytes``) — the O(tiles/S) scaling the ROADMAP item asks
-    for.
+    (core.dist_tlr._compress_tiles_pair_sharded) walks each device's own
+    block-cyclic slots *slot-major* in steps of cb*ceil((T-1)/S) tiles
+    (``sharded_bytes`` per step) — the O(tiles/S) scaling the ROADMAP
+    item asks for — and over the full sweep generates exactly its
+    ``pairs_per_shard ~ T(T-1)/(2S)`` owned tiles (``gen_tiles_owned``).
+    The former per-column sweep generated ``T*ceil((T-1)/S)`` candidate
+    tiles per device (``gen_tiles_candidate``) — almost all masked
+    sentinels once S >> T-1; ``gen_shrink`` is the GEN-work drop the
+    slot-major sweep buys.
     """
     assert n_shards >= 1
     T, nb, cb = n_tiles, tile_size, col_block
@@ -340,13 +345,27 @@ def tlr_compress_temp_model(n_tiles: int, tile_size: int, kmax: int,
     per_tile = (3 * nb * nb + nb          # tile + SVD U, V^T, s
                 + 2 * nb * kmax           # truncated padded factors
                 ) * itemsize
-    own = -(-max(T - 1, 1) // n_shards)   # tiles per column per device
+    own = -(-max(T - 1, 1) // n_shards)   # step group: cb x old per-column L
+    n_pairs = T * (T - 1) // 2
+    pps = max(-(-n_pairs // n_shards), 1)  # owned tiles per device, full sweep
+    candidate = T * own                    # per-column sweep's GEN tiles
     return dict(tiles_per_step=cb * T, tiles_per_step_sharded=cb * own,
                 per_tile_bytes=per_tile,
+                gen_tiles_owned=pps, gen_tiles_candidate=candidate,
+                gen_shrink=candidate / max(pps, 1),
                 replicated_bytes=m * cb * nb * itemsize + cb * T * per_tile,
                 sharded_bytes=cb * own * per_tile,
                 shrink=(m * cb * nb * itemsize + cb * T * per_tile) /
                        max(cb * own * per_tile, 1))
+
+
+def serve_predictions_per_sec(flops: float, byts: float, coll: float,
+                              batch: int) -> float:
+    """Roofline-model decode throughput of one serving predict batch:
+    batch / max(compute, memory, collective time) from the trip-corrected
+    per-device phase costs (the dry-run's serve_predict cell)."""
+    t = max(flops / PEAK_FLOPS, byts / HBM_BW, coll / ICI_BW)
+    return batch / max(t, 1e-12)
 
 
 def geostat_model_flops(shape, backend: str, tile_size: int, max_rank: int) -> float:

@@ -1,0 +1,230 @@
+"""Registry of lowerable entry points: ``name -> Lowerable(fn, specs,
+in_shardings, donate_argnums, ...)``.
+
+The dry-run (launch/dryrun.py), the SPMD-lint CLI (``python -m
+repro.analysis --target``), and the serving cells all need the same thing:
+a traceable fn, its input ShapeDtypeStructs, the production NamedShardings,
+and the donation contract, built for a (shape, mesh) pair.  Previously each
+consumer hand-enumerated the ``*_lowerable`` constructors — adding one
+meant three edits.  Now a constructor registers once here (``@register``)
+and every consumer sees it: ``build(name, shape, mesh)`` returns the ready
+``{cell_name: Lowerable}`` dict (one registration may emit several cells —
+e.g. ``cokrige_serving`` yields the fit and predict phases), ``names()``
+drives ``--target all``.
+
+jax is imported inside the builders only: the CLI sets XLA_FLAGS before
+the first jax import (fake device counts bind at backend init).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+__all__ = ["Lowerable", "register", "build", "names"]
+
+
+class Lowerable(NamedTuple):
+    """Everything a consumer needs to jit/lower one entry point."""
+
+    fn: Callable
+    specs: tuple                    # input jax.ShapeDtypeStructs
+    in_shardings: tuple             # matching NamedShardings
+    donate_argnums: tuple = ()      # the donation/alias contract
+    matrix_dim: int | None = None   # lint R3 densification bar (None: dense
+                                    # by contract, R3 disarmed)
+    config: Any = None              # LintConfig override (None: default)
+
+
+_BUILDERS: dict[str, Callable] = {}
+
+
+def register(name: str):
+    """Register ``builder(shape, mesh) -> Lowerable | {name: Lowerable}``."""
+    def deco(builder):
+        _BUILDERS[name] = builder
+        return builder
+    return deco
+
+
+def names() -> tuple:
+    return tuple(_BUILDERS)
+
+
+def build(name: str, shape, mesh) -> dict:
+    """Build one registered target: ``{cell_name: Lowerable}`` (single-cell
+    targets key on their own name)."""
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown lowerable target {name!r} "
+                       f"(registered: {', '.join(sorted(_BUILDERS))})")
+    out = _BUILDERS[name](shape, mesh)
+    if isinstance(out, Lowerable):
+        return {name: out}
+    return dict(out)
+
+
+# ---------------------------------------------------------------------------
+# Shared geometry / parameter helpers
+# ---------------------------------------------------------------------------
+
+
+def _row_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _params():
+    import jax.numpy as jnp
+
+    from .core.covariance import MaternParams
+    return MaternParams.bivariate(a=0.09, nu11=0.5, nu22=2.5, beta=0.5,
+                                  dtype=jnp.float32)
+
+
+def _tlr_geometry(m: int):
+    """(tile_size, max_rank) scaled down for small dev shapes."""
+    from .configs.geostat import GEOSTAT_TLR as cfg
+    nb = max(64, min(cfg.tile_size, m // 32))
+    return nb, min(cfg.max_rank, nb // 2)
+
+
+def _tlr_lint_config(nb: int, kmax: int):
+    # Dev geometries have fat tiles (kmax = nb/2): scale R3's bar past the
+    # legitimate (kmax/nb) m^2 tile storage of a correct TLR lowering.
+    from .analysis.spmdlint import LintConfig, tlr_dense_frac
+    return LintConfig(dense_frac=tlr_dense_frac(nb, kmax))
+
+
+def _ns(mesh, *spec):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Registrations
+# ---------------------------------------------------------------------------
+
+
+@register("dist_tlr_pipeline_lowerable")
+def _tlr_pipeline(shape, mesh):
+    from .configs.geostat import GEOSTAT_TLR as cfg
+    from .core.dist_tlr import dist_tlr_pipeline_lowerable
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    nb, kmax = _tlr_geometry(m)
+    fn, specs = dist_tlr_pipeline_lowerable(
+        shape.n_locations, shape.p, _params(), tile_size=nb, max_rank=kmax,
+        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
+        super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic)
+    return Lowerable(fn, specs, (_ns(mesh, row, None), _ns(mesh, row)),
+                     matrix_dim=m, config=_tlr_lint_config(nb, kmax))
+
+
+@register("dist_tlr_gen_lowerable")
+def _tlr_gen(shape, mesh):
+    from .core.dist_tlr import dist_tlr_gen_lowerable
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    nb, kmax = _tlr_geometry(m)
+    fn, specs = dist_tlr_gen_lowerable(
+        shape.n_locations, shape.p, _params(), tile_size=nb, gen="xla",
+        mesh=mesh, row_axes=row)
+    return Lowerable(fn, specs, (_ns(mesh, row, None),), matrix_dim=m,
+                     config=_tlr_lint_config(nb, kmax))
+
+
+@register("dist_tlr_compress_lowerable")
+def _tlr_compress(shape, mesh):
+    from .configs.geostat import GEOSTAT_TLR as cfg
+    from .core.dist_tlr import dist_tlr_compress_lowerable
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    nb, kmax = _tlr_geometry(m)
+    fn, specs = dist_tlr_compress_lowerable(
+        shape.n_locations, shape.p, _params(), tile_size=nb, max_rank=kmax,
+        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
+        block_cyclic=cfg.block_cyclic, shard_svd=True)
+    return Lowerable(fn, specs, (_ns(mesh, row, None),), matrix_dim=m,
+                     config=_tlr_lint_config(nb, kmax))
+
+
+@register("dist_tlr_lowerable")
+def _tlr_factorize(shape, mesh):
+    from .configs.geostat import GEOSTAT_TLR as cfg
+    from .core.dist_tlr import dist_tlr_in_shardings, dist_tlr_lowerable
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    nb, kmax = _tlr_geometry(m)
+    fn, specs = dist_tlr_lowerable(
+        m // nb, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
+        super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic,
+        return_factor=True)
+    sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
+                               block_cyclic=cfg.block_cyclic)
+    return Lowerable(fn, specs, sh, donate_argnums=(0, 1, 2, 3),
+                     matrix_dim=m, config=_tlr_lint_config(nb, kmax))
+
+
+@register("dist_loglik_lowerable")
+def _exact_loglik(shape, mesh):
+    from .core.dist_cholesky import dist_loglik_lowerable
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    panel = max(512, m // 64)
+    fn, specs = dist_loglik_lowerable(shape.n_locations, shape.p, _params(),
+                                      panel=panel, mesh=mesh, row_axes=row)
+    # exact backend: dense by contract, so R3 stays disarmed
+    return Lowerable(fn, specs, (_ns(mesh, row, None), _ns(mesh, row)),
+                     matrix_dim=None)
+
+
+@register("dist_cokrige_lowerable")
+def _exact_cokrige(shape, mesh):
+    from .core.dist_cholesky import dist_cokrige_lowerable
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    n_pred = getattr(shape, "n_pred", 0) or max(shape.n_locations // 16, 256)
+    panel = max(512, m // 64)
+    fn, specs = dist_cokrige_lowerable(
+        shape.n_locations, n_pred, shape.p, _params(), panel=panel,
+        mesh=mesh, row_axes=row)
+    return Lowerable(fn, specs,
+                     (_ns(mesh, row, None), _ns(mesh, None, None),
+                      _ns(mesh, row)),
+                     matrix_dim=None)
+
+
+@register("cokrige_serving")
+def _cokrige_serving(shape, mesh):
+    """The two serving phases (serving/cokrige_service.py): prefill
+    (``serve_fit``) and decode (``serve_predict``, B = 512).  The factor
+    arrays of the decode cell are NOT donated — reuse across request
+    batches is the serving contract."""
+    from .configs.geostat import GEOSTAT_TLR as cfg
+    from .serving.cokrige_service import (cokrige_fit_lowerable,
+                                          cokrige_predict_lowerable)
+    row = _row_axes(mesh)
+    m = shape.matrix_dim
+    nb, kmax = _tlr_geometry(m)
+    lcfg = _tlr_lint_config(nb, kmax)
+    params = _params()
+    rowsh = row if len(row) > 1 else row[0]
+
+    fit_fn, fit_specs = cokrige_fit_lowerable(
+        shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
+        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row)
+    fit = Lowerable(fit_fn, fit_specs,
+                    (_ns(mesh, row, None), _ns(mesh, row)),
+                    matrix_dim=m, config=lcfg)
+
+    pred_fn, pred_specs = cokrige_predict_lowerable(
+        shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
+        batch=512, gen="xla", mesh=mesh, row_axes=row)
+    pax = tuple(a for a in row + ("model",) if a in mesh.axis_names)
+    pred = Lowerable(pred_fn, pred_specs,
+                     (_ns(mesh, rowsh, None, None),      # diag_l
+                      _ns(mesh, pax, None, None),        # u
+                      _ns(mesh, pax, None, None),        # v
+                      _ns(mesh, pax),                    # ranks
+                      _ns(mesh, rowsh),                  # alpha
+                      _ns(mesh, None, None),             # obs locs
+                      _ns(mesh, None, None)),            # pred locs
+                     matrix_dim=m, config=lcfg)
+    return {"serve_fit": fit, "serve_predict": pred}

@@ -1,0 +1,289 @@
+"""Cokriging-as-a-service: factor once, predict millions (Eq. 3 at scale).
+
+The estimation pipeline (core/dist_tlr.py) runs pair-sharded TLR at 65k+
+locations, but prediction — the workload production users actually hit
+millions of times (ExaGeoStat's production-facing phase; Abdulah et al.
+2018) — previously rebuilt and refactorized dense Sigma per call.  This
+module is the prefill/decode split of serving/engine.py applied to
+cokriging:
+
+  * ``fit_factor`` (prefill, once): generator-direct compress + distributed
+    TLR Cholesky + both triangular solves for ``alpha = Sigma^{-1} z``,
+    returning an on-device ``CokrigeFactor`` handle.  O(m^3 / tile) work,
+    paid once per (locations, theta).
+  * ``predict_batch`` (decode, millions): one streamed c0 panel batch
+    against the cached factor — a tile-panel generator sweep, one
+    multi-RHS forward solve, and a small GEMM.  Sigma is never rebuilt,
+    the factor never leaves device memory, and neither Sigma nor the
+    all-points c0 is materialized: each batch holds one (m, B*p) panel.
+
+Batch products are first-class: predictions (the cokriging mean),
+kriging variances and central prediction intervals, and conditional-
+simulation draws (per-location conditional law — the p x p colocated
+conditional covariance, not the O(B^2) joint over the batch).
+
+``make_cokrige_serve_fns`` returns the two functions jit-compiled with the
+factor pytree flowing through unchanged — repeated ``predict_batch`` calls
+at fixed B hit one executable.  The dry-run (launch/dryrun.py) lowers both
+phases at pod scale and reports per-device temps and predictions/sec; the
+bench (benchmarks/bench_tlr.py) measures them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.covariance import (MaternParams, build_c0_panels,
+                               build_sigma_panel, cross_cov_at_zero)
+from ..core.dist_tlr import (dist_compress_tiles, dist_tlr_cholesky_pairs,
+                             dist_tlr_solve_lower_pairs,
+                             dist_tlr_solve_upper_pairs)
+from ..core.prediction import CokrigeFactor
+from ..core.tlr import _constrain, choose_tile_size
+from ..distribution.block_cyclic import pair_layout, pair_shards
+
+__all__ = ["CokrigeServeConfig", "CokrigePrediction", "fit_factor",
+           "predict_batch", "predict_with_factor", "make_cokrige_serve_fns",
+           "cokrige_fit_lowerable", "cokrige_predict_lowerable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CokrigeServeConfig:
+    """Static knobs of one serving deployment (hashable: jit-cache key).
+
+    tile_size/max_rank/tol mirror GeoStatConfig; ``interval`` is the
+    central prediction-interval mass (0.95 -> the 2.5%/97.5% band).
+    """
+
+    tile_size: int = 0            # 0 -> choose_tile_size heuristic
+    max_rank: int = 0             # 0 -> nb // 4 heuristic
+    tol: float = 1e-7
+    nugget: float = 0.0
+    gen: str = "xla"
+    d_spatial: int = 2
+    row_axes: tuple = ("data",)
+    col_block: int = 1
+    shard_svd: bool = True
+    shard_recompress: bool = True
+    super_panels: int = 1
+    interval: float = 0.95
+
+
+class CokrigePrediction(NamedTuple):
+    """One decoded batch: mean, kriging variance, interval, draws."""
+
+    mean: jax.Array            # (B, p) cokriging predictions (Eq. 3)
+    variance: jax.Array        # (B, p) kriging variances, clipped >= 0
+    lower: jax.Array           # (B, p) central-interval bounds
+    upper: jax.Array           # (B, p)
+    draws: jax.Array | None = None   # (n_draws, B, p) conditional draws
+
+
+def _z_crit(interval: float):
+    """Two-sided normal critical value for the central interval mass."""
+    from jax.scipy.special import ndtri
+    return ndtri(0.5 + 0.5 * interval)
+
+
+def fit_factor(locs, z, params: MaternParams, cfg: CokrigeServeConfig,
+               mesh=None) -> CokrigeFactor:
+    """Prefill: compress + factorize Sigma once, precompute alpha.
+
+    Generator-direct: the dense (m, m) Sigma never exists.  The tile
+    buffers flow compress -> Cholesky -> solves inside one trace, so under
+    jit XLA aliases them in place (the donation half of the serving
+    contract; ``make_cokrige_serve_fns`` compiles exactly this).  Returns
+    the on-device ``CokrigeFactor`` — everything ``predict_batch`` needs,
+    nothing it would rebuild.
+    """
+    locs = jnp.asarray(locs)
+    z = jnp.asarray(z)
+    m = z.shape[0]
+    p = params.p
+    nb = choose_tile_size(m, cfg.tile_size, multiple_of=p)
+    T = m // nb
+    layout = pair_layout(T, pair_shards(mesh, cfg.row_axes))
+    scale = jnp.max(params.sigma2) + cfg.nugget
+    t = dist_compress_tiles(locs, params, tile_size=cfg.tile_size,
+                            tol=cfg.tol, max_rank=cfg.max_rank,
+                            nugget=cfg.nugget, gen=cfg.gen,
+                            d_spatial=cfg.d_spatial, scale=scale, mesh=mesh,
+                            row_axes=cfg.row_axes, layout=layout,
+                            col_block=cfg.col_block, shard_svd=cfg.shard_svd)
+    diag_l, u, v, ranks = dist_tlr_cholesky_pairs(
+        t.diag, t.u, t.v, t.ranks, layout=layout, tol=cfg.tol, scale=scale,
+        mesh=mesh, row_axes=cfg.row_axes, super_panels=cfg.super_panels,
+        shard_recompress=cfg.shard_recompress)
+    y = dist_tlr_solve_lower_pairs(diag_l, u, v, z, layout=layout)
+    alpha = dist_tlr_solve_upper_pairs(diag_l, u, v, y, layout=layout)
+    return CokrigeFactor(diag_l=diag_l, u=u, v=v, ranks=ranks, alpha=alpha,
+                         locs=locs, params=params, kind="tlr",
+                         n_shards=layout.n_shards,
+                         d_spatial=cfg.d_spatial)
+
+
+def _predict_core(factor: CokrigeFactor, pred_locs, *, interval: float,
+                  gen: str, mesh=None, row_axes=("data",)):
+    """Mean + conditional covariance of one batch against a cached factor.
+
+    Returns (mean (B, p), cond_cov (B, p, p)).  The c0 panel batch is
+    generated tile-row-wise (build_c0_panels) and consumed twice: the mean
+    is its contraction with the precomputed alpha; the conditional
+    covariance is C(0) - w^T w with w = L^{-1} c0 from ONE multi-RHS
+    forward solve — per-location (p, p) blocks, never the O(B^2) joint.
+    """
+    params = factor.params
+    p = params.p
+    pred_locs = jnp.asarray(pred_locs)
+    B = pred_locs.shape[0]
+    m = factor.m
+    row = row_axes if len(row_axes) > 1 else row_axes[0]
+
+    if factor.kind == "dense":
+        c0 = build_sigma_panel(factor.locs, pred_locs, params,
+                               d_spatial=factor.d_spatial,
+                               gen=gen)                       # (m, B*p)
+        w = jax.lax.linalg.triangular_solve(
+            factor.diag_l, c0, left_side=True, lower=True)
+    else:
+        T, nb = factor.diag_l.shape[0], factor.diag_l.shape[1]
+        layout = pair_layout(T, factor.n_shards)
+        c0 = build_c0_panels(factor.locs, pred_locs, params, nbl=nb // p,
+                             d_spatial=factor.d_spatial, gen=gen)
+        c0 = _constrain(c0, mesh, P(row, None, None))
+        c0 = c0.reshape(m, B * p)
+        w = dist_tlr_solve_lower_pairs(factor.diag_l, factor.u, factor.v,
+                                       c0, layout=layout)     # (m, B*p)
+
+    mean = (c0.T @ factor.alpha).reshape(B, p)
+    w3 = w.reshape(m, B, p)
+    cond = cross_cov_at_zero(params, d_spatial=factor.d_spatial)[None] \
+        - jnp.einsum("mbp,mbq->bpq", w3, w3)
+    return mean, cond
+
+
+def predict_with_factor(factor: CokrigeFactor, pred_locs, *,
+                        interval: float = 0.95, gen: str = "xla",
+                        mesh=None, row_axes=("data",),
+                        key=None, n_draws: int = 1) -> CokrigePrediction:
+    """Decode one batch: mean, variance, interval, optional draws.
+
+    Pure function of the factor pytree — jit it (or use the pre-jitted
+    pair from ``make_cokrige_serve_fns``).  ``key`` switches on
+    conditional-simulation draws: (n_draws, B, p) samples from each
+    location's conditional law N(mean, cond_cov), via the Cholesky of the
+    jittered (p, p) conditional covariance.
+    """
+    mean, cond = _predict_core(factor, pred_locs, interval=interval,
+                               gen=gen, mesh=mesh, row_axes=row_axes)
+    var = jnp.clip(jnp.diagonal(cond, axis1=-2, axis2=-1), min=0.0)
+    half = _z_crit(interval) * jnp.sqrt(var)
+    draws = None
+    if key is not None:
+        p = mean.shape[-1]
+        jitter = 1e-10 * jnp.trace(cond, axis1=-2, axis2=-1)[:, None, None]
+        lc = jnp.linalg.cholesky(cond + jitter * jnp.eye(p, dtype=cond.dtype))
+        eps = jax.random.normal(key, (n_draws,) + mean.shape, mean.dtype)
+        draws = mean[None] + jnp.einsum("bpq,nbq->nbp", lc, eps)
+    return CokrigePrediction(mean=mean, variance=var, lower=mean - half,
+                             upper=mean + half, draws=draws)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_fns(cfg: CokrigeServeConfig, mesh):
+    fit = jax.jit(functools.partial(fit_factor, cfg=cfg, mesh=mesh))
+
+    @functools.partial(jax.jit, static_argnames=("n_draws",))
+    def predict(factor, pred_locs, key=None, n_draws: int = 1):
+        return predict_with_factor(factor, pred_locs, interval=cfg.interval,
+                                   gen=cfg.gen, mesh=mesh,
+                                   row_axes=cfg.row_axes, key=key,
+                                   n_draws=n_draws)
+
+    return fit, predict
+
+
+def make_cokrige_serve_fns(cfg: CokrigeServeConfig, mesh=None):
+    """Returns jitted ``(fit_factor(locs, z, params), predict_batch(factor,
+    pred_locs, key=None, n_draws=1))`` for one deployment config.
+
+    The pair is cached per (cfg, mesh): every request batch of the same B
+    reuses one compiled executable, and the factor handle round-trips
+    through ``predict_batch`` as a pytree without leaving the device.
+    """
+    return _serve_fns(cfg, mesh)
+
+
+def predict_batch(factor: CokrigeFactor, pred_locs,
+                  cfg: CokrigeServeConfig = CokrigeServeConfig(),
+                  mesh=None, key=None, n_draws: int = 1) -> CokrigePrediction:
+    """Convenience decode entry point (module-level, jit-cached via
+    ``make_cokrige_serve_fns``)."""
+    _, predict = make_cokrige_serve_fns(cfg, mesh)
+    return predict(factor, pred_locs, key=key, n_draws=n_draws)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run / spmd-lint lowerables: the two serving phases as (fn, specs)
+# ---------------------------------------------------------------------------
+
+
+def cokrige_fit_lowerable(n: int, p: int, params, *, tile_size: int,
+                          max_rank: int, tol: float, nugget: float = 0.0,
+                          gen: str = "xla", mesh, dtype=jnp.float32,
+                          row_axes=("data",)):
+    """(fn, specs) for the prefill phase: (locs, z) -> factor arrays.
+
+    Returns the raw (diag_l, u, v, ranks, alpha) arrays rather than the
+    handle so the dry-run can chain them into the decode lowerable's
+    input specs and shardings."""
+    cfg = CokrigeServeConfig(tile_size=tile_size, max_rank=max_rank, tol=tol,
+                             nugget=nugget, gen=gen,
+                             row_axes=tuple(row_axes))
+
+    def fn(locs, z):
+        f = fit_factor(locs, z, params, cfg, mesh=mesh)
+        return f.diag_l, f.u, f.v, f.ranks, f.alpha
+
+    specs = (jax.ShapeDtypeStruct((n, 2), dtype),
+             jax.ShapeDtypeStruct((n * p,), dtype))
+    return fn, specs
+
+
+def cokrige_predict_lowerable(n: int, p: int, params, *, tile_size: int,
+                              max_rank: int, batch: int = 512,
+                              gen: str = "xla", mesh, dtype=jnp.float32,
+                              row_axes=("data",), interval: float = 0.95):
+    """(fn, specs) for the decode phase: (factor arrays, pred_locs) ->
+    (mean, variance, lower, upper) for a batch of ``batch`` points.
+
+    The factor arrays arrive as inputs (the cached handle, NOT donated —
+    reuse across batches is the whole point) with the same pair-major
+    specs/shardings as dist_tlr_lowerable's block-cyclic form."""
+    m = n * p
+    nb = choose_tile_size(m, tile_size, multiple_of=p)
+    T = m // nb
+    kmax = min(max_rank, nb) if max_rank > 0 else max(8, nb // 4)
+    layout = pair_layout(T, pair_shards(mesh, row_axes))
+
+    def fn(diag_l, u, v, ranks, alpha, locs, pred_locs):
+        factor = CokrigeFactor(diag_l=diag_l, u=u, v=v, ranks=ranks,
+                               alpha=alpha, locs=locs, params=params,
+                               kind="tlr", n_shards=layout.n_shards)
+        out = predict_with_factor(factor, pred_locs, interval=interval,
+                                  gen=gen, mesh=mesh, row_axes=row_axes)
+        return out.mean, out.variance, out.lower, out.upper
+
+    specs = (jax.ShapeDtypeStruct((T, nb, nb), dtype),
+             jax.ShapeDtypeStruct((layout.length, nb, kmax), dtype),
+             jax.ShapeDtypeStruct((layout.length, nb, kmax), dtype),
+             jax.ShapeDtypeStruct((layout.length,), jnp.int32),
+             jax.ShapeDtypeStruct((m,), dtype),
+             jax.ShapeDtypeStruct((n, 2), dtype),
+             jax.ShapeDtypeStruct((batch, 2), dtype))
+    return fn, specs

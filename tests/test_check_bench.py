@@ -45,6 +45,8 @@ def _artifact(**overrides):
                              compress_sharded=812000,
                              pipeline_compress_sharded=2430000),
         replicated_temp_bytes=0, undonated_dead_bytes=0,
+        fit_factor_time_us=6e5, predict_batch_p50_us=3e4,
+        predictions_per_sec=2133.0, loglik_delta_predict=3e-4,
     )
     art.update(overrides)
     return art
@@ -141,6 +143,28 @@ def test_compress_sharded_gate(check_bench):
     art["peak_temp_bytes"]["pipeline_compress_sharded"] = 0
     errs = check_bench.check_artifact(art)
     assert any("pipeline_compress_sharded" in e for e in errs)
+
+
+def test_serving_gate(check_bench):
+    """The PR-7 serving keys are required: prefill/decode timings and
+    predictions/sec must be positive, and the served-vs-dense mean delta is
+    bounded by the same loglik_delta* gate."""
+    for key in ("fit_factor_time_us", "predict_batch_p50_us",
+                "predictions_per_sec", "loglik_delta_predict"):
+        art = _artifact()
+        del art[key]
+        errs = check_bench.check_artifact(art)
+        assert any(f"missing key: {key}" in e for e in errs)
+    errs = check_bench.check_artifact(_artifact(loglik_delta_predict=5e-3))
+    assert any("loglik_delta_predict" in e for e in errs)
+    errs = check_bench.check_artifact(_artifact(predict_batch_p50_us=0.0))
+    assert any("predict_batch_p50_us" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(predictions_per_sec=float("inf")))
+    assert any("predictions_per_sec" in e for e in errs)
+    # the serving delta obeys an explicit looser bound like every delta
+    assert check_bench.check_artifact(
+        _artifact(loglik_delta_predict=5e-3), max_delta=1e-2) == []
 
 
 def test_peak_temp_bytes_gate(check_bench):
