@@ -33,10 +33,17 @@ deltas versus the exact likelihood.  This script fails (exit 1) when
     (``fit_factor_time_us`` / ``predict_batch_p50_us`` /
     ``predictions_per_sec``), or the served mean drifts from the dense
     cokrige baseline past the same bound (``loglik_delta_predict`` — the
-    serving acceptance at m = 512, PR 7).
+    serving acceptance at m = 512, PR 7), or
+  * a fault-tolerance overhead regresses (PR 8):
+    ``status_check_overhead_frac`` (FactorStatus threading on the hot path)
+    must stay under ``--max-status-frac`` (default 1%), and
+    ``recovery_retry_overhead_frac`` (the jitter-escalation while_loop
+    wrapper on a clean evaluation) under ``--max-retry-frac`` (default 50%).
 
 Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
                                          [--max-bc-ratio 1.0]
+                                         [--max-status-frac 0.01]
+                                         [--max-retry-frac 0.5]
 """
 from __future__ import annotations
 
@@ -72,6 +79,13 @@ REQUIRED_KEYS = (
     # same loglik_delta* bound (the 1e-3 serving acceptance at m=512).
     "fit_factor_time_us", "predict_batch_p50_us", "predictions_per_sec",
     "loglik_delta_predict",
+    # numerical fault tolerance (PR 8): the FactorStatus carry must stay
+    # effectively free on the hot path (frac gated by --max-status-frac,
+    # default 1%); the jitter-escalation wrapper's clean-path cost is gated
+    # loosely by --max-retry-frac.  The *_us field may legitimately be 0
+    # (below timer resolution), so it is NOT in TIMING_KEYS.
+    "status_check_overhead_us", "status_check_overhead_frac",
+    "recovery_retry_overhead_frac",
 )
 LINT_GATE_KEYS = ("replicated_temp_bytes", "undonated_dead_bytes")
 TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
@@ -89,7 +103,9 @@ TEMP_PHASE_KEYS = ("gen_compress", "factorize_masked", "factorize_bc",
 
 
 def check_artifact(artifact: dict, max_delta: float = 1e-3,
-                   max_bc_ratio: float = 1.0) -> list[str]:
+                   max_bc_ratio: float = 1.0,
+                   max_status_frac: float = 0.01,
+                   max_retry_frac: float = 0.5) -> list[str]:
     """Return a list of failure messages (empty == gate passes)."""
     errors = []
     for key in REQUIRED_KEYS:
@@ -125,6 +141,20 @@ def check_artifact(artifact: dict, max_delta: float = 1e-3,
                 if not isinstance(val, (int, float)) or val <= 0:
                     errors.append(
                         f"peak_temp_bytes[{key!r}] is not positive: {val!r}")
+    for key, bound, what in (
+            ("status_check_overhead_frac", max_status_frac,
+             "FactorStatus threading on the factorization hot path"),
+            ("recovery_retry_overhead_frac", max_retry_frac,
+             "jitter-escalation wrapper on a clean evaluation")):
+        val = artifact.get(key)
+        if val is None:
+            continue  # missing already reported above
+        if not isinstance(val, (int, float)) or not math.isfinite(val) \
+                or val < 0.0:
+            errors.append(f"{key} is not a finite non-negative frac: {val!r}")
+        elif val > bound:
+            errors.append(f"{key}={val:.4f} exceeds {bound:g} — "
+                          f"{what} got measurably slower")
     for key in LINT_GATE_KEYS:
         val = artifact.get(key)
         if val is None:
@@ -144,6 +174,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-bc-ratio", type=float, default=1.0,
                     help="fail when cholesky_bc_time_us exceeds this times "
                          "the masked baseline")
+    ap.add_argument("--max-status-frac", type=float, default=0.01,
+                    help="fail when status_check_overhead_frac exceeds this "
+                         "(FactorStatus threading must stay ~free)")
+    ap.add_argument("--max-retry-frac", type=float, default=0.5,
+                    help="fail when recovery_retry_overhead_frac exceeds "
+                         "this (clean-path cost of the jitter ladder)")
     args = ap.parse_args(argv)
 
     try:
@@ -153,7 +189,8 @@ def main(argv=None) -> int:
         print(f"FAIL: cannot read {args.artifact}: {e}", file=sys.stderr)
         return 1
 
-    errors = check_artifact(artifact, args.max_delta, args.max_bc_ratio)
+    errors = check_artifact(artifact, args.max_delta, args.max_bc_ratio,
+                            args.max_status_frac, args.max_retry_frac)
     if errors:
         for err in errors:
             print(f"FAIL: {err}", file=sys.stderr)
@@ -166,6 +203,8 @@ def main(argv=None) -> int:
           f"bc_speedup={artifact['cholesky_bc_speedup']:.2f}x, "
           f"predict={artifact['loglik_delta_predict']:.3e}, "
           f"predictions_per_sec={artifact['predictions_per_sec']:.0f}, "
+          f"status_frac={artifact['status_check_overhead_frac']:.4f}, "
+          f"retry_frac={artifact['recovery_retry_overhead_frac']:.4f}, "
           f"max-delta={args.max_delta:g})")
     return 0
 

@@ -28,9 +28,37 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
+def _fsync_file(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str):
+    # Directory fsync makes the rename itself durable (POSIX: a rename is
+    # only on disk once the containing directory's metadata is).
+    try:
+        fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None,
                     keep: int = 3) -> str:
-    """Synchronous atomic save.  Returns the checkpoint path."""
+    """Synchronous atomic save.  Returns the checkpoint path.
+
+    Payload files and the temp directory are fsynced *before* the rename
+    and the parent directory after it, so a power cut mid-save can lose the
+    in-flight step but never corrupt an already-visible one.
+    """
     os.makedirs(directory, exist_ok=True)
     names, leaves, _ = _flatten_with_names(tree)
     host_leaves = [np.asarray(x) for x in leaves]
@@ -46,9 +74,14 @@ def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None,
                         time=time.time(), extra=extra or {})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_file(os.path.join(tmp, "arrays.npz"))
+        _fsync_dir(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        _fsync_dir(directory)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -56,15 +89,27 @@ def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None,
     ptr_tmp = os.path.join(directory, ".LATEST.tmp")
     with open(ptr_tmp, "w") as f:
         f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    _fsync_dir(directory)
     _gc_old(directory, keep)
     return final
 
 
 def _gc_old(directory: str, keep: int):
-    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    # Tolerates concurrent deletion: a sibling process (or a previous GC)
+    # removing a step between listdir and rmtree is not an error.
+    try:
+        steps = sorted(d for d in os.listdir(directory)
+                       if d.startswith("step_"))
+    except FileNotFoundError:
+        return
     for d in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+        try:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+        except FileNotFoundError:
+            pass
 
 
 class AsyncCheckpointer:
@@ -101,6 +146,38 @@ class AsyncCheckpointer:
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+
+
+class CheckpointManager:
+    """Stateful wrapper over one checkpoint directory.
+
+    Bundles ``save_checkpoint`` / ``restore_checkpoint`` / ``latest_step``
+    with a fixed directory and retention policy — the handle the
+    checkpointed multistart MLE (``core.optimize.multistart_nelder_mead``)
+    threads around instead of repeating path + keep at every call site.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = str(directory)
+        self.keep = keep
+
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        return save_checkpoint(self.directory, step, tree, extra, self.keep)
+
+    def restore(self, target_tree, step: int | None = None, shardings=None):
+        return restore_checkpoint(self.directory, target_tree, step,
+                                  shardings)
+
+    def latest_step(self) -> int | None:
+        return latest_step(self.directory)
+
+    def all_steps(self) -> list[int]:
+        try:
+            return sorted(int(d.split("_")[1])
+                          for d in os.listdir(self.directory)
+                          if d.startswith("step_"))
+        except FileNotFoundError:
+            return []
 
 
 def latest_step(directory: str) -> int | None:

@@ -77,6 +77,7 @@ from ..distribution.compress_svd import (sharded_truncate_svd,
 from ..distribution.pair_qr import warn_fallback_once
 from .covariance import build_sigma_column, build_sigma_panel
 from .likelihood import LoglikResult
+from .recovery import FactorStatus, init_status, sentinel_loglik
 from .tlr import (TLRMatrix, _constrain, apply_nugget, choose_tile_size,
                   indexed_scan, pair_panel_loop, panel_loop,
                   solve_lower_grid)
@@ -413,7 +414,8 @@ def _compress_tiles_pair_sharded(locs, params, *, layout: PairLayout, nb, nbl,
 def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
                       scale: float = 1.0, mesh=None, row_axes=("data",),
                       super_panels: int = 1, block_cyclic: bool = False,
-                      shard_recompress: bool = True):
+                      shard_recompress: bool = True,
+                      track_status: bool = False):
     """Factor the TLR matrix in place.  Returns (diag_L, u, v, ranks) in the
     masked-grid layout (the grid API — the block-cyclic streaming pipeline
     stays pair-native through ``dist_tlr_cholesky_pairs``).
@@ -442,76 +444,108 @@ def dist_tlr_cholesky(diag, u, v, ranks=None, *, tol: float = 1e-7,
     under shard_map over the pair axis — each device factorizes only its
     own ~length/S slots (distribution/pair_qr.py) instead of the whole
     replicated batch; False keeps the PR-3 replicated form for comparison.
-    mesh=None ignores it (the batch is local either way)."""
+    mesh=None ignores it (the batch is local either way).
+
+    ``track_status=True`` additionally threads a ``FactorStatus`` through
+    the panel loop (in-graph breakdown accounting — core.recovery) and
+    returns a 5-tuple ``(diag_L, u, v, ranks, status)``."""
     if ranks is None:
         ranks = jnp.zeros(u.shape[:2], jnp.int32)
     T = diag.shape[0]
     if block_cyclic:
         layout = pair_layout(T, pair_shards(mesh, row_axes))
-        diag, up, vp, rp = dist_tlr_cholesky_pairs(
+        out = dist_tlr_cholesky_pairs(
             diag, grid_to_pairs(u, layout), grid_to_pairs(v, layout),
             grid_to_pairs(ranks, layout), layout=layout, tol=tol, scale=scale,
             mesh=mesh, row_axes=row_axes, super_panels=super_panels,
-            shard_recompress=shard_recompress)
-        return (diag, pairs_to_grid(up, layout), pairs_to_grid(vp, layout),
+            shard_recompress=shard_recompress, track_status=track_status)
+        diag, up, vp, rp = out[:4]
+        grid = (diag, pairs_to_grid(up, layout), pairs_to_grid(vp, layout),
                 pairs_to_grid(rp, layout))
+        return grid + (out[4],) if track_status else grid
     if super_panels > 1:
         return _tlr_cholesky_super(diag, u, v, ranks, tol=tol, scale=scale,
                                    mesh=mesh, row_axes=row_axes,
-                                   super_panels=super_panels)
+                                   super_panels=super_panels,
+                                   track_status=track_status)
     row = _row(row_axes)
     dspec = P(row, None, None)
     uvspec = P(row, "model", None, None)
+    status = init_status(diag.dtype) if track_status else None
     if T > 1:
-        diag, u, v, ranks = panel_loop(diag, u, v, ranks, T - 1, tol=tol,
-                                       scale=scale, mesh=mesh, dspec=dspec,
-                                       uvspec=uvspec)
-    diag = diag.at[T - 1].set(jnp.linalg.cholesky(diag[T - 1]))
+        out = panel_loop(diag, u, v, ranks, T - 1, tol=tol,
+                         scale=scale, mesh=mesh, dspec=dspec,
+                         uvspec=uvspec, status=status)
+        if track_status:
+            diag, u, v, ranks, status = out
+        else:
+            diag, u, v, ranks = out
+    lkk = jnp.linalg.cholesky(diag[T - 1])
+    if track_status:
+        status = status.update_potrf(lkk)
+    diag = diag.at[T - 1].set(lkk)
     diag = _constrain(diag, mesh, dspec)
+    if track_status:
+        return diag, u, v, ranks, status
     return diag, u, v, ranks
 
 
 def dist_tlr_cholesky_pairs(diag, up, vp, ranks, *, layout: PairLayout,
                             tol: float = 1e-7, scale: float = 1.0, mesh=None,
                             row_axes=("data",), super_panels: int = 1,
-                            shard_recompress: bool = True):
+                            shard_recompress: bool = True,
+                            track_status: bool = False):
     """Pair-native block-cyclic TLR Cholesky: (diag, U, V, ranks) in
     pair-major storage in, same storage out.  The (T, T) grid is never
     materialized — this is the factorization the streaming production
     pipeline runs.  ``shard_recompress`` shards the recompress QR/SVD over
-    the pair axis via shard_map (see dist_tlr_cholesky)."""
+    the pair axis via shard_map (see dist_tlr_cholesky).
+    ``track_status=True`` returns a 5-tuple with a ``FactorStatus``."""
     T = diag.shape[0]
     if super_panels > 1:
         return _tlr_cholesky_super_pairs(diag, up, vp, ranks, layout=layout,
                                          tol=tol, scale=scale, mesh=mesh,
                                          row_axes=row_axes,
                                          super_panels=super_panels,
-                                         shard_recompress=shard_recompress)
+                                         shard_recompress=shard_recompress,
+                                         track_status=track_status)
     dspec, pspec, _ = _pair_specs(mesh, row_axes)
     axes = pair_axis(mesh, row_axes) if shard_recompress else None
+    status = init_status(diag.dtype) if track_status else None
     if T > 1:
-        diag, up, vp, ranks = pair_panel_loop(diag, up, vp, ranks, T - 1,
-                                              layout=layout, tol=tol,
-                                              scale=scale, mesh=mesh,
-                                              dspec=dspec, pspec=pspec,
-                                              shard_axes=axes)
-    diag = diag.at[T - 1].set(jnp.linalg.cholesky(diag[T - 1]))
+        out = pair_panel_loop(diag, up, vp, ranks, T - 1,
+                              layout=layout, tol=tol,
+                              scale=scale, mesh=mesh,
+                              dspec=dspec, pspec=pspec,
+                              shard_axes=axes, status=status)
+        if track_status:
+            diag, up, vp, ranks, status = out
+        else:
+            diag, up, vp, ranks = out
+    lkk = jnp.linalg.cholesky(diag[T - 1])
+    if track_status:
+        status = status.update_potrf(lkk)
+    diag = diag.at[T - 1].set(lkk)
     diag = _constrain(diag, mesh, dspec)
+    if track_status:
+        return diag, up, vp, ranks, status
     return diag, up, vp, ranks
 
 
 def _tlr_cholesky_super(diag, u, v, ranks, *, tol, scale, mesh, row_axes,
-                        super_panels: int):
+                        super_panels: int, track_status: bool = False):
     """Two-level masked-grid variant: unrolled outer loop over shrinking
     trailing slices, fori_loop inside each.  Factored panels are written
     into full-size output buffers; the live state shrinks every
-    super-step."""
+    super-step.  With ``track_status`` the per-slice ``FactorStatus``
+    accumulations merge into one (min pivot / summed counts)."""
     T = diag.shape[0]
     assert T % super_panels == 0, (T, super_panels)
     chunk = T // super_panels
     row = _row(row_axes)
     dspec = P(row, None, None)
     uvspec = P(row, "model", None, None)
+    status = init_status(diag.dtype) if track_status else None
 
     out_diag = jnp.zeros_like(diag)
     out_u = jnp.zeros_like(u)
@@ -522,13 +556,23 @@ def _tlr_cholesky_super(diag, u, v, ranks, *, tol, scale, mesh, row_axes,
         o = s * chunk
         # factor the first `chunk` panels of the live (T-o)-tile slice
         if s == super_panels - 1:
-            dh, uh, vh, rh = dist_tlr_cholesky(dh, uh, vh, rh, tol=tol,
-                                               scale=scale, mesh=mesh,
-                                               row_axes=row_axes)
+            out = dist_tlr_cholesky(dh, uh, vh, rh, tol=tol,
+                                    scale=scale, mesh=mesh,
+                                    row_axes=row_axes,
+                                    track_status=track_status)
+            if track_status:
+                dh, uh, vh, rh, slice_status = out
+                status = status.merge(slice_status)
+            else:
+                dh, uh, vh, rh = out
         else:
-            dh, uh, vh, rh = panel_loop(dh, uh, vh, rh, chunk, tol=tol,
-                                        scale=scale, mesh=mesh, dspec=dspec,
-                                        uvspec=uvspec)
+            out = panel_loop(dh, uh, vh, rh, chunk, tol=tol,
+                             scale=scale, mesh=mesh, dspec=dspec,
+                             uvspec=uvspec, status=status)
+            if track_status:
+                dh, uh, vh, rh, status = out
+            else:
+                dh, uh, vh, rh = out
         # write factored rows/columns back into the global buffers
         out_diag = out_diag.at[o:o + chunk].set(dh[:chunk])
         out_u = out_u.at[o:, o:o + chunk].set(uh[:, :chunk])
@@ -539,12 +583,15 @@ def _tlr_cholesky_super(diag, u, v, ranks, *, tol, scale, mesh, row_axes,
             uh = uh[chunk:, chunk:]
             vh = vh[chunk:, chunk:]
             rh = rh[chunk:, chunk:]
+    if track_status:
+        return out_diag, out_u, out_v, out_ranks, status
     return out_diag, out_u, out_v, out_ranks
 
 
 def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
                               tol, scale, mesh, row_axes, super_panels: int,
-                              shard_recompress: bool = True):
+                              shard_recompress: bool = True,
+                              track_status: bool = False):
     """Two-level block-cyclic variant: the live slice's pair set shrinks
     every super-step (a fresh, smaller PairLayout per slice), so the
     recompress batch spans only the live trailing pairs.  Slot remapping
@@ -557,6 +604,7 @@ def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
     shards = layout.n_shards
     dspec, pspec, rspec = _pair_specs(mesh, row_axes)
     axes = pair_axis(mesh, row_axes) if shard_recompress else None
+    status = init_status(diag.dtype) if track_status else None
 
     out_diag = jnp.zeros_like(diag)
     out_u = jnp.zeros_like(up)
@@ -569,12 +617,20 @@ def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
         ts = T - o
         k_hi = chunk - 1 if s == super_panels - 1 else chunk
         if ts > 1 and k_hi > 0:
-            dh, uh, vh, rh = pair_panel_loop(dh, uh, vh, rh, k_hi,
-                                             layout=cur, tol=tol, scale=scale,
-                                             mesh=mesh, dspec=dspec,
-                                             pspec=pspec, shard_axes=axes)
+            out = pair_panel_loop(dh, uh, vh, rh, k_hi,
+                                  layout=cur, tol=tol, scale=scale,
+                                  mesh=mesh, dspec=dspec,
+                                  pspec=pspec, shard_axes=axes,
+                                  status=status)
+            if track_status:
+                dh, uh, vh, rh, status = out
+            else:
+                dh, uh, vh, rh = out
         if s == super_panels - 1:
-            dh = dh.at[ts - 1].set(jnp.linalg.cholesky(dh[ts - 1]))
+            lkk = jnp.linalg.cholesky(dh[ts - 1])
+            if track_status:
+                status = status.update_potrf(lkk)
+            dh = dh.at[ts - 1].set(lkk)
         out_diag = out_diag.at[o:o + chunk].set(dh[:chunk])
         # copy the factored pair columns (slice j < chunk) to global slots
         done = cur.valid & (cur.jl < (chunk if s < super_panels - 1 else ts))
@@ -596,6 +652,8 @@ def _tlr_cholesky_super_pairs(diag, up, vp, ranks, *, layout: PairLayout,
     out_u = _constrain(out_u, mesh, pspec)
     out_v = _constrain(out_v, mesh, pspec)
     out_ranks = _constrain(out_ranks, mesh, rspec)
+    if track_status:
+        return out_diag, out_u, out_v, out_ranks, status
     return out_diag, out_u, out_v, out_ranks
 
 
@@ -674,12 +732,23 @@ def dist_tlr_solve_upper_pairs(diag_l, up, vp, y, *, layout: PairLayout):
     return out.reshape(-1) if single else out.reshape(T * nb, r)
 
 
-def _loglik_of(diag_l, alpha, m: int) -> LoglikResult:
-    """Eq. 1 from the factored diagonal tiles and the forward solve."""
+def _loglik_of(diag_l, alpha, m: int,
+               status: FactorStatus | None = None) -> LoglikResult:
+    """Eq. 1 from the factored diagonal tiles and the forward solve.
+
+    With a threaded ``FactorStatus``, a broken factorization yields a
+    well-defined finite sentinel loglik (core.recovery.sentinel_loglik)
+    instead of propagating NaN into the optimizer."""
     quad = jnp.sum(alpha * alpha)
     logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(diag_l, axis1=-2, axis2=-1)))
     ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
-    return LoglikResult(ll, logdet, quad, None)
+    if status is not None:
+        status = status.add_nonfinite((~jnp.isfinite(ll)).astype(jnp.int32))
+        ok = status.ok
+        ll = jnp.where(ok, ll, sentinel_loglik(ll.dtype))
+        logdet = jnp.where(ok, logdet, jnp.zeros_like(logdet))
+        quad = jnp.where(ok, quad, jnp.zeros_like(quad))
+    return LoglikResult(ll, logdet, quad, None, status)
 
 
 def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
@@ -690,7 +759,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                     row_axes=("data",), super_panels: int = 1,
                     block_cyclic: bool = False, layout: PairLayout = None,
                     col_block: int = 1, shard_recompress: bool = True,
-                    shard_svd: bool = True) -> LoglikResult:
+                    shard_svd: bool = True,
+                    track_status: bool = True) -> LoglikResult:
     """Distributed TLR likelihood (Eq. 1 through the sharded TLR factor).
 
     Two entry modes:
@@ -714,6 +784,11 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
     under shard_map over the pair axis (distribution/pair_qr.py);
     ``shard_svd`` does the same for the compression-phase truncation SVDs
     (and, pair-native, the GEN panel itself — see dist_compress_tiles).
+    ``track_status`` (default on) threads a ``FactorStatus`` through the
+    factorization — in-graph, no host sync — and the returned
+    ``LoglikResult.status.ok`` is a traced scalar; on breakdown the loglik
+    is the finite sentinel, never NaN.  ``track_status=False`` restores
+    the bare 4-field result (the A/B overhead baseline in bench_tlr).
     """
     if isinstance(t, PairTLR):
         block_cyclic = True
@@ -758,18 +833,27 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                         v=grid_to_pairs(t.v, layout),
                         ranks=grid_to_pairs(t.ranks, layout),
                         n_shards=layout.n_shards)
-        diag_l, u, v, _ = dist_tlr_cholesky_pairs(
+    status = None
+    if block_cyclic:
+        out = dist_tlr_cholesky_pairs(
             t.diag, t.u, t.v, t.ranks, layout=layout, tol=tol, scale=scale,
             mesh=mesh, row_axes=row_axes, super_panels=super_panels,
-            shard_recompress=shard_recompress)
+            shard_recompress=shard_recompress, track_status=track_status)
+        diag_l, u, v = out[0], out[1], out[2]
+        if track_status:
+            status = out[4]
         alpha = dist_tlr_solve_lower_pairs(diag_l, u, v, z, layout=layout)
     else:
-        diag_l, u, v, _ = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks,
-                                            tol=tol, scale=scale, mesh=mesh,
-                                            row_axes=row_axes,
-                                            super_panels=super_panels)
+        out = dist_tlr_cholesky(t.diag, t.u, t.v, t.ranks,
+                                tol=tol, scale=scale, mesh=mesh,
+                                row_axes=row_axes,
+                                super_panels=super_panels,
+                                track_status=track_status)
+        diag_l, u, v = out[0], out[1], out[2]
+        if track_status:
+            status = out[4]
         alpha = dist_tlr_solve_lower(diag_l, u, v, z)
-    return _loglik_of(diag_l, alpha, t.shape[0])
+    return _loglik_of(diag_l, alpha, t.shape[0], status=status)
 
 
 # ---------------------------------------------------------------------------

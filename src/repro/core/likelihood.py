@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from .covariance import (MaternParams, build_correlation_matrix, build_sigma,
                          pairwise_distances)
+from .recovery import FactorStatus, init_status
 
 
 class LoglikResult(NamedTuple):
@@ -25,16 +26,24 @@ class LoglikResult(NamedTuple):
     logdet: jax.Array
     quad: jax.Array          # Z^T Sigma^{-1} Z
     chol: jax.Array | None   # lower Cholesky factor (None if not kept)
+    status: FactorStatus | None = None  # factorization health (None if untracked)
 
 
-def loglik_from_chol(chol, z, keep_chol: bool = False) -> LoglikResult:
-    """Log-likelihood given the lower Cholesky factor of Sigma."""
+def loglik_from_chol(chol, z, keep_chol: bool = False,
+                     status: FactorStatus | None = None) -> LoglikResult:
+    """Log-likelihood given the lower Cholesky factor of Sigma.
+
+    When no factorization ``status`` is threaded in, a cheap one is derived
+    from the factor's diagonal (the dense path has a single POTRF).
+    """
     m = z.shape[-1]
+    if status is None:
+        status = init_status(chol.dtype).update_potrf(chol)
     logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
     alpha = jax.scipy.linalg.solve_triangular(chol, z, lower=True)
     quad = jnp.sum(alpha * alpha, axis=-1)
     ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
-    return LoglikResult(ll, logdet, quad, chol if keep_chol else None)
+    return LoglikResult(ll, logdet, quad, chol if keep_chol else None, status)
 
 
 def exact_loglik(locs, z, params: MaternParams, representation: str = "I",

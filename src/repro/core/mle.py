@@ -23,7 +23,8 @@ import numpy as np
 
 from .covariance import MaternParams, pairwise_distances
 from .likelihood import exact_loglik, profile_variances
-from .optimize import nelder_mead
+from .optimize import multistart_nelder_mead, nelder_mead
+from .recovery import find_duplicate_locations, jitter_escalate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +66,22 @@ class MLEConfig:
     # tiles are not low-rank and the truncated factor can go indefinite).
     # The exact likelihood is permutation-invariant, so this is always safe.
     morton: bool = True
+    # Jitter-escalation retry (core/recovery.py): when a factorization
+    # breaks (FactorStatus.ok False or non-finite loglik), re-evaluate with
+    # the nugget bumped along an additive ladder initial -> *factor capped
+    # at max_jitter.  Runs as a do-while lax.while_loop inside the jitted
+    # objective, so retries re-execute without re-tracing and a clean
+    # evaluation costs one ordinary pass.  Off by default: the while_loop
+    # wrapper ~4x-es XLA compile time of the objective; without it a broken
+    # factorization still degrades safely (finite penalty, never NaN).
+    recovery: bool = False
+    recovery_initial_jitter: float = 1e-8
+    recovery_factor: float = 10.0
+    recovery_max_jitter: float = 1e-2
+    recovery_max_attempts: int = 6
+    # Pre-flight duplicate/near-duplicate location check in ``fit`` (the
+    # classic singular-Sigma cause).  Set False to skip.
+    check_duplicates: bool = True
 
 
 def n_free_params(p: int, profile: bool) -> int:
@@ -120,12 +137,28 @@ class FitResult(NamedTuple):
     n_iters: jax.Array
     n_evals: jax.Array
     converged: jax.Array
+    clamped_evals: jax.Array | None = None    # evals clamped to the penalty
+    recovery_retries: jax.Array | None = None  # total jitter-ladder retries
 
 
-def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig, locs=None):
+class ObjectiveAux(NamedTuple):
+    """Per-evaluation fault counters threaded out of the objective."""
+    clamped: jax.Array     # int32: 1 if this eval returned the penalty value
+    retries: jax.Array     # int32: jitter-ladder retries this eval performed
+    breakdowns: jax.Array  # int32: 1 if the clean first attempt broke
+
+
+def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig, locs=None,
+                    extra_nugget=None):
+    """Full LoglikResult from the configured backend.
+
+    ``extra_nugget`` (a traced scalar) is *added* to ``cfg.nugget`` — the
+    jitter-escalation ladder uses it so retries re-execute the same trace.
+    """
+    nugget = cfg.nugget if extra_nugget is None else cfg.nugget + extra_nugget
     if cfg.backend == "exact":
         return exact_loglik(None, z, params, representation=cfg.representation,
-                            nugget=cfg.nugget, dists=dists).loglik
+                            nugget=nugget, dists=dists)
     if cfg.backend == "tlr":
         if cfg.dist_tlr_from_tiles:
             if locs is None:
@@ -135,21 +168,21 @@ def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig, locs=None):
             return dist_tlr_loglik(None, z, locs=locs, params=params,
                                    from_tiles=True, tile_size=cfg.tile_size,
                                    max_rank=cfg.tlr_max_rank,
-                                   nugget=cfg.nugget, gen=cfg.gen,
+                                   nugget=nugget, gen=cfg.gen,
                                    tol=cfg.tlr_tol,
                                    super_panels=cfg.super_panels,
                                    block_cyclic=cfg.block_cyclic,
-                                   shard_svd=cfg.shard_svd).loglik
+                                   shard_svd=cfg.shard_svd)
         from .tlr import tlr_loglik
         return tlr_loglik(dists, z, params, tol=cfg.tlr_tol,
                           max_rank=cfg.tlr_max_rank, tile_size=cfg.tile_size,
-                          nugget=cfg.nugget, locs=locs,
-                          from_tiles=cfg.tlr_from_tiles, gen=cfg.gen).loglik
+                          nugget=nugget, locs=locs,
+                          from_tiles=cfg.tlr_from_tiles, gen=cfg.gen)
     if cfg.backend == "dst":
         from .dst import dst_loglik
         return dst_loglik(dists, z, params, keep_fraction=cfg.dst_keep_fraction,
-                          tile_size=cfg.tile_size, nugget=cfg.nugget,
-                          representation=cfg.representation).loglik
+                          tile_size=cfg.tile_size, nugget=nugget,
+                          representation=cfg.representation)
     raise ValueError(f"unknown backend {cfg.backend!r}")
 
 
@@ -167,7 +200,7 @@ def apply_morton(locs, z, p: int, representation: str = "I"):
     return locs[perm], jnp.asarray(zn)
 
 
-def make_objective(locs, z, cfg: MLEConfig, dists=None):
+def make_objective(locs, z, cfg: MLEConfig, dists=None, with_aux=False):
     """Negative log-likelihood over transformed parameters (jit-compiled).
 
     Callers must pass Morton-consistent (locs, z) for tiled backends;
@@ -175,6 +208,14 @@ def make_objective(locs, z, cfg: MLEConfig, dists=None):
     backends (tlr_from_tiles / dist_tlr_from_tiles, non-profile) never read
     the dense (n, n) distance matrix, so it is not built for them — at
     production n it would be the largest allocation of the whole fit.
+
+    A broken or non-finite evaluation never leaks NaN: with
+    ``cfg.recovery`` the jitter-escalation ladder retries in-graph, and
+    whatever survives is clamped to a large finite dtype-aware penalty
+    (``sqrt(finfo.max)`` — the old hardcoded ``1e12`` was *below* real
+    |loglik| values at production n in f64, silently inverting the simplex
+    ordering).  With ``with_aux=True`` the objective returns
+    ``(value, ObjectiveAux)`` for fault accounting (clamp/retry counters).
     """
     generator_direct = (cfg.backend == "tlr" and not cfg.profile and
                         (cfg.tlr_from_tiles or cfg.dist_tlr_from_tiles))
@@ -182,32 +223,114 @@ def make_objective(locs, z, cfg: MLEConfig, dists=None):
         dists = pairwise_distances(locs)
     z = jnp.asarray(z)
     locs_j = None if locs is None else jnp.asarray(locs)
+    dtype = z.dtype
 
-    def neg_ll(x):
+    def eval_at(x, jitter):
         params = unpack_params(x, cfg.p, cfg.profile, cfg.nu_max)
         if cfg.profile:
             sigma2 = profile_variances(dists, z, params.a, params.nu, cfg.p,
-                                       nugget=cfg.nugget,
+                                       nugget=cfg.nugget + jitter,
                                        representation=cfg.representation)
             params = params._replace(sigma2=sigma2)
-        ll = _backend_loglik(dists, z, params, cfg, locs=locs_j)
-        return jnp.where(jnp.isfinite(ll), -ll, jnp.asarray(1e12, ll.dtype))
+        res = _backend_loglik(dists, z, params, cfg, locs=locs_j,
+                              extra_nugget=jitter)
+        ll = res.loglik
+        ok = jnp.isfinite(ll)
+        if res.status is not None:
+            ok = ok & res.status.ok
+        return ll, ok
+
+    def neg_ll(x):
+        if cfg.recovery:
+            rec = jitter_escalate(lambda j: eval_at(x, j),
+                                  initial=cfg.recovery_initial_jitter,
+                                  factor=cfg.recovery_factor,
+                                  max_jitter=cfg.recovery_max_jitter,
+                                  max_attempts=cfg.recovery_max_attempts,
+                                  dtype=dtype)
+            ll, ok = rec.loglik, rec.ok
+            retries = rec.attempts - 1
+        else:
+            ll, ok = eval_at(x, jnp.zeros((), dtype))
+            retries = jnp.zeros((), jnp.int32)
+        good = ok & jnp.isfinite(ll)
+        penalty = jnp.asarray(jnp.finfo(dtype).max ** 0.5, dtype)
+        val = jnp.where(good, -ll, penalty)
+        if not with_aux:
+            return val
+        aux = ObjectiveAux(
+            clamped=(~good).astype(jnp.int32),
+            retries=jnp.asarray(retries, jnp.int32),
+            breakdowns=((retries > 0) | ~good).astype(jnp.int32))
+        return val, aux
 
     return jax.jit(neg_ll), dists
 
 
-def fit(locs, z, cfg: MLEConfig, x0=None, dists=None) -> FitResult:
-    """Run the full estimation (the paper's 'MLE operation')."""
+def check_locations(locs, tol=None):
+    """Raise ValueError naming duplicate / near-duplicate location rows.
+
+    Host-side pre-flight guard for the classic singular-Sigma cause; no-op
+    when ``locs`` is a tracer (jit callers validate outside the trace).
+    """
+    if locs is None or isinstance(locs, jax.core.Tracer):
+        return
+    pairs = find_duplicate_locations(np.asarray(locs), tol=tol)
+    if pairs:
+        shown = ", ".join(f"({i}, {j})" for i, j in pairs[:8])
+        more = "" if len(pairs) <= 8 else f" (+{len(pairs) - 8} more)"
+        raise ValueError(
+            f"{len(pairs)} duplicate/near-duplicate location pair(s): "
+            f"{shown}{more} — Sigma is singular at these rows regardless of "
+            "parameters.  De-duplicate the locations, or pass "
+            "MLEConfig(check_duplicates=False) to rely on jitter recovery.")
+
+
+def fit(locs, z, cfg: MLEConfig, x0=None, dists=None, n_starts: int = 1,
+        seed: int = 0, checkpoint_dir=None,
+        checkpoint_every: int = 0) -> FitResult:
+    """Run the full estimation (the paper's 'MLE operation').
+
+    ``n_starts > 1`` runs a multistart (perturbed initial guesses, keep the
+    best); ``checkpoint_dir`` makes the multistart crash-tolerant — the
+    per-start simplex state is checkpointed every ``checkpoint_every``
+    iterations (0 = once per completed start) and a re-run resumes instead
+    of restarting.
+    """
+    if cfg.check_duplicates:
+        check_locations(locs)
     if cfg.morton and dists is None and locs is not None:
         locs, z = apply_morton(locs, z, cfg.p, cfg.representation)
-    neg_ll, dists = make_objective(locs, z, cfg, dists=dists)
+    neg_ll, dists = make_objective(locs, z, cfg, dists=dists, with_aux=True)
     if x0 is None:
         x0 = initial_guess(cfg.p, cfg.profile, dtype=jnp.asarray(z).dtype)
-    res = nelder_mead(neg_ll, x0, max_iters=cfg.max_iters)
+    if n_starts > 1:
+        rng = np.random.default_rng(seed)
+        x0s = [jnp.asarray(x0)] + [
+            jnp.asarray(x0) + jnp.asarray(
+                rng.normal(scale=0.25, size=np.asarray(x0).shape),
+                jnp.asarray(x0).dtype)
+            for _ in range(n_starts - 1)]
+        res = multistart_nelder_mead(neg_ll, x0s, max_iters=cfg.max_iters,
+                                     has_aux=True,
+                                     checkpoint_dir=checkpoint_dir,
+                                     checkpoint_every=checkpoint_every)
+    elif checkpoint_dir is not None:
+        res = multistart_nelder_mead(neg_ll, [x0], max_iters=cfg.max_iters,
+                                     has_aux=True,
+                                     checkpoint_dir=checkpoint_dir,
+                                     checkpoint_every=checkpoint_every)
+    else:
+        res = nelder_mead(neg_ll, x0, max_iters=cfg.max_iters, has_aux=True)
     params = unpack_params(res.x, cfg.p, cfg.profile, cfg.nu_max)
     if cfg.profile:
         sigma2 = profile_variances(dists, jnp.asarray(z), params.a, params.nu,
                                    cfg.p, nugget=cfg.nugget,
                                    representation=cfg.representation)
         params = params._replace(sigma2=sigma2)
-    return FitResult(params, -res.value, res.n_iters, res.n_evals, res.converged)
+    clamped = retries = None
+    if res.aux is not None:
+        clamped = res.aux.clamped
+        retries = res.aux.retries
+    return FitResult(params, -res.value, res.n_iters, res.n_evals,
+                     res.converged, clamped, retries)

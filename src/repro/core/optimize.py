@@ -6,10 +6,28 @@ uses lax.cond so each iteration evaluates only the simplex points it actually
 needs (~2 objective evaluations per iteration on average) — each objective
 evaluation is one Sigma build + Cholesky, exactly the unit the paper
 benchmarks as "one iteration of the MLE optimization".
+
+Fault tolerance (robustness PR):
+
+* Every objective value is sanitized on entry — a non-finite evaluation is
+  stored as ``+inf`` so it can never poison the reflect/expand/contract
+  ordering (``NaN < x`` is False for every x, which silently freezes the
+  textbook simplex update).
+* When any vertex holds a non-finite value the iteration performs a
+  re-centering shrink toward the best (finite) vertex instead of a normal
+  step, pulling the simplex back into the feasible region.
+* ``has_aux`` threads an auxiliary pytree (clamp/retry counters from
+  ``mle.make_objective``) out of every evaluation; the running tree-sum
+  rides the loop carry and is returned on ``NMResult.aux``.
+* ``init_state`` / ``NMResult.state`` make the loop resumable: run a
+  bounded segment, checkpoint the ``NMState``, resume later —
+  ``multistart_nelder_mead`` uses this for crash-tolerant multistart MLE.
 """
 from __future__ import annotations
 
 from typing import Callable, NamedTuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +39,7 @@ class NMState(NamedTuple):
     values: jax.Array    # (m+1,)
     n_evals: jax.Array
     n_iters: jax.Array
+    aux: object = None   # running tree-sum of per-eval aux (scalar 0 if none)
 
 
 class NMResult(NamedTuple):
@@ -29,6 +48,8 @@ class NMResult(NamedTuple):
     n_evals: jax.Array
     n_iters: jax.Array
     converged: jax.Array
+    aux: object = None        # summed aux pytree (only when has_aux=True)
+    state: NMState | None = None  # final loop state (resume/checkpoint handle)
 
 
 def _order(simplex, values):
@@ -36,18 +57,68 @@ def _order(simplex, values):
     return simplex[idx], values[idx]
 
 
+def _wrap_eval(fn: Callable, has_aux: bool):
+    """Sanitizing evaluation: returns (value, aux) with NaN/inf -> +inf."""
+    def ev(x):
+        out = fn(x)
+        if has_aux:
+            val, aux = out
+        else:
+            val, aux = out, jnp.zeros((), jnp.int32)
+        val = jnp.asarray(val)
+        val = jnp.where(jnp.isfinite(val), val,
+                        jnp.asarray(jnp.inf, val.dtype))
+        return val, aux
+    return ev
+
+
+def _tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tree_sum(batched):
+    """Sum a vmapped aux batch over its leading axis (dtype-preserving)."""
+    return jax.tree.map(lambda x: jnp.sum(x, axis=0, dtype=x.dtype), batched)
+
+
+def nm_init_state(fn: Callable, x0, *, initial_radius: float = 0.25,
+                  has_aux: bool = False) -> NMState:
+    """Build (and evaluate) the initial simplex around ``x0``.
+
+    Public so checkpoint-resume callers can construct a template state with
+    the right pytree structure for ``restore_checkpoint``.
+    """
+    ev = _wrap_eval(fn, has_aux)
+    x0 = jnp.asarray(x0)
+    m = x0.shape[0]
+    steps = initial_radius * jnp.where(jnp.abs(x0) > 1e-8, jnp.abs(x0), 1.0)
+    simplex = jnp.concatenate([x0[None], x0[None] + jnp.diag(steps)], axis=0)
+    values, auxs = jax.vmap(ev)(simplex)
+    simplex, values = _order(simplex, values)
+    return NMState(simplex, values, jnp.asarray(m + 1), jnp.asarray(0),
+                   _tree_sum(auxs))
+
+
 def nelder_mead(fn: Callable, x0, *, max_iters: int = 200,
                 initial_radius: float = 0.25, xtol: float = 1e-6,
-                ftol: float = 1e-8) -> NMResult:
-    """Minimize ``fn`` (scalar, jax-traceable) from x0 (shape (m,))."""
+                ftol: float = 1e-8, has_aux: bool = False,
+                init_state: NMState | None = None) -> NMResult:
+    """Minimize ``fn`` (scalar, jax-traceable) from x0 (shape (m,)).
+
+    With ``has_aux=True`` the objective returns ``(value, aux_pytree)`` and
+    the tree-sum of every evaluation's aux is returned on ``result.aux``.
+    ``init_state`` resumes a previous run's ``result.state`` (the loop
+    iteration/eval counters continue, so ``max_iters`` is a *total* cap).
+    """
+    ev = _wrap_eval(fn, has_aux)
     x0 = jnp.asarray(x0)
     m = x0.shape[0]
 
-    steps = initial_radius * jnp.where(jnp.abs(x0) > 1e-8, jnp.abs(x0), 1.0)
-    simplex = jnp.concatenate([x0[None], x0[None] + jnp.diag(steps)], axis=0)
-    values = jax.vmap(fn)(simplex)
-    simplex, values = _order(simplex, values)
-    state = NMState(simplex, values, jnp.asarray(m + 1), jnp.asarray(0))
+    if init_state is None:
+        state = nm_init_state(fn, x0, initial_radius=initial_radius,
+                              has_aux=has_aux)
+    else:
+        state = init_state
 
     alpha, gamma, rho_c, shrink_c = 1.0, 2.0, 0.5, 0.5
 
@@ -59,68 +130,151 @@ def nelder_mead(fn: Callable, x0, *, max_iters: int = 200,
 
     def body(state: NMState):
         simplex, values = state.simplex, state.values
-        centroid = jnp.mean(simplex[:-1], axis=0)
-        worst = simplex[-1]
-        f_best, f_second, f_worst = values[0], values[-2], values[-1]
 
-        xr = centroid + alpha * (centroid - worst)
-        fr = fn(xr)
-
-        def expand(_):
-            xe = centroid + gamma * (xr - centroid)
-            fe = fn(xe)
-            better = fe < fr
-            return (jnp.where(better, xe, xr), jnp.where(better, fe, fr),
-                    jnp.asarray(True), jnp.asarray(2))
-
-        def reflect_or_contract(_):
-            def accept_reflect(_):
-                return xr, fr, jnp.asarray(True), jnp.asarray(1)
-
-            def contract(_):
-                def outside(_):
-                    xc = centroid + rho_c * (xr - centroid)
-                    fc = fn(xc)
-                    return xc, fc, fc <= fr, jnp.asarray(2)
-
-                def inside(_):
-                    xc = centroid - rho_c * (centroid - worst)
-                    fc = fn(xc)
-                    return xc, fc, fc < f_worst, jnp.asarray(2)
-
-                return lax.cond(fr < f_worst, outside, inside, None)
-
-            return lax.cond(fr < f_second, accept_reflect, contract, None)
-
-        new_pt, new_f, accepted, nev = lax.cond(fr < f_best, expand,
-                                                reflect_or_contract, None)
-
-        def apply_accept(_):
-            s = simplex.at[-1].set(new_pt)
-            v = values.at[-1].set(new_f)
-            return s, v, nev
-
-        def apply_shrink(_):
+        def recenter_shrink(_):
+            # A vertex went non-finite (sanitized to +inf): pull the whole
+            # simplex toward the best vertex instead of reflecting through
+            # a poisoned centroid, and re-evaluate everything.
             s = simplex[0:1] + shrink_c * (simplex - simplex[0:1])
-            v = jax.vmap(fn)(s)
-            v = v.at[0].set(values[0])  # best vertex unchanged
-            return s, v, nev + m
+            v, auxs = jax.vmap(ev)(s)
+            s2, v2 = _order(s, v)
+            return NMState(s2, v2, state.n_evals + m + 1, state.n_iters + 1,
+                           _tree_add(state.aux, _tree_sum(auxs)))
 
-        simplex, values, spent = lax.cond(accepted, apply_accept,
-                                          apply_shrink, None)
-        simplex, values = _order(simplex, values)
-        return NMState(simplex, values, state.n_evals + spent + 1,
-                       state.n_iters + 1)
+        def nm_step(_):
+            centroid = jnp.mean(simplex[:-1], axis=0)
+            worst = simplex[-1]
+            f_best, f_second, f_worst = values[0], values[-2], values[-1]
+
+            xr = centroid + alpha * (centroid - worst)
+            fr, aux_r = ev(xr)
+            zero_aux = jax.tree.map(jnp.zeros_like, aux_r)
+
+            def expand(_):
+                xe = centroid + gamma * (xr - centroid)
+                fe, aux_e = ev(xe)
+                better = fe < fr
+                return (jnp.where(better, xe, xr), jnp.where(better, fe, fr),
+                        jnp.asarray(True), jnp.asarray(2), aux_e)
+
+            def reflect_or_contract(_):
+                def accept_reflect(_):
+                    return xr, fr, jnp.asarray(True), jnp.asarray(1), zero_aux
+
+                def contract(_):
+                    def outside(_):
+                        xc = centroid + rho_c * (xr - centroid)
+                        fc, aux_c = ev(xc)
+                        return xc, fc, fc <= fr, jnp.asarray(2), aux_c
+
+                    def inside(_):
+                        xc = centroid - rho_c * (centroid - worst)
+                        fc, aux_c = ev(xc)
+                        return xc, fc, fc < f_worst, jnp.asarray(2), aux_c
+
+                    return lax.cond(fr < f_worst, outside, inside, None)
+
+                return lax.cond(fr < f_second, accept_reflect, contract, None)
+
+            new_pt, new_f, accepted, nev, aux_b = lax.cond(
+                fr < f_best, expand, reflect_or_contract, None)
+
+            def apply_accept(_):
+                s = simplex.at[-1].set(new_pt)
+                v = values.at[-1].set(new_f)
+                return s, v, nev, zero_aux
+
+            def apply_shrink(_):
+                s = simplex[0:1] + shrink_c * (simplex - simplex[0:1])
+                v, auxs = jax.vmap(ev)(s)
+                v = v.at[0].set(values[0])  # best vertex unchanged
+                return s, v, nev + m, _tree_sum(auxs)
+
+            s2, v2, spent, aux_s = lax.cond(accepted, apply_accept,
+                                            apply_shrink, None)
+            s2, v2 = _order(s2, v2)
+            aux_total = _tree_add(_tree_add(state.aux, aux_r),
+                                  _tree_add(aux_b, aux_s))
+            return NMState(s2, v2, state.n_evals + spent + 1,
+                           state.n_iters + 1, aux_total)
+
+        any_bad = ~jnp.all(jnp.isfinite(values))
+        return lax.cond(any_bad, recenter_shrink, nm_step, None)
 
     final = lax.while_loop(cond_fn, body, state)
     converged = final.n_iters < max_iters
     return NMResult(final.simplex[0], final.values[0], final.n_evals,
-                    final.n_iters, converged)
+                    final.n_iters, converged,
+                    final.aux if has_aux else None, final)
 
 
-def multistart_nelder_mead(fn: Callable, x0s, **kwargs) -> NMResult:
-    """Run Nelder–Mead from several starts, keep the best."""
-    results = [nelder_mead(fn, jnp.asarray(x0), **kwargs) for x0 in x0s]
+def multistart_nelder_mead(fn: Callable, x0s, *, checkpoint_dir=None,
+                           checkpoint_every: int = 0, has_aux: bool = False,
+                           max_iters: int = 200, **kwargs) -> NMResult:
+    """Run Nelder–Mead from several starts, keep the best.
+
+    With ``checkpoint_dir`` set, progress is checkpointed so a crashed
+    multistart resumes where it left off: completed starts are replayed
+    from the manifest, and the in-progress start's simplex state is
+    restored and continued.  ``checkpoint_every`` bounds how many
+    iterations run between saves (0 = one save per completed start).
+    """
+    x0s = [jnp.asarray(x0) for x0 in x0s]
+    if checkpoint_dir is None:
+        results = [nelder_mead(fn, x0, max_iters=max_iters, has_aux=has_aux,
+                               **kwargs) for x0 in x0s]
+        values = jnp.stack([r.value for r in results])
+        best = int(jnp.argmin(values))
+        return results[best]
+
+    from ..checkpointing.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(checkpoint_dir)
+    segment = checkpoint_every if checkpoint_every > 0 else max_iters
+    initial_radius = kwargs.get("initial_radius", 0.25)
+
+    start_idx, iters_done, done_results = 0, 0, []
+    state = None
+    latest = mgr.latest_step()
+    if latest is not None:
+        template = nm_init_state(fn, x0s[0], initial_radius=initial_radius,
+                                 has_aux=has_aux)
+        tree, manifest = mgr.restore(
+            {"state": template}, step=latest)
+        extra = manifest["extra"]
+        start_idx = int(extra["start_index"])
+        iters_done = int(extra["iters_done"])
+        done_results = [tuple(r) for r in extra["done_values"]]
+        state = tree["state"] if iters_done > 0 else None
+
+    results = [NMResult(jnp.asarray(x), jnp.asarray(v),
+                        jnp.asarray(ne), jnp.asarray(ni),
+                        jnp.asarray(bool(c)))
+               for x, v, ne, ni, c in done_results]
+    step = latest if latest is not None else -1
+
+    for i in range(start_idx, len(x0s)):
+        while True:
+            cap = min(max_iters, iters_done + segment)
+            res = nelder_mead(fn, x0s[i], max_iters=cap, has_aux=has_aux,
+                              init_state=state, **kwargs)
+            state = res.state
+            iters_done = int(state.n_iters)
+            finished = bool(res.converged) or iters_done >= max_iters
+            if finished:
+                results.append(res)
+                done_results.append((np.asarray(res.x).tolist(),
+                                     float(res.value), int(res.n_evals),
+                                     int(res.n_iters), bool(res.converged)))
+            step += 1
+            mgr.save(step, {"state": state},
+                     extra={"start_index": i + 1 if finished else i,
+                            "iters_done": 0 if finished else iters_done,
+                            "done_values": done_results})
+            if finished:
+                state, iters_done = None, 0
+                break
+
     values = jnp.stack([r.value for r in results])
     best = int(jnp.argmin(values))
     return results[best]

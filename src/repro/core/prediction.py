@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from .covariance import MaternParams, build_c0, build_sigma
+from .recovery import init_status
 
 
 class CokrigingResult(NamedTuple):
@@ -62,20 +63,23 @@ class CokrigeFactor:
     n_shards: int = 1          # static: TLR pair layout shard count
     representation: str = "I"  # static: dense-path Sigma layout
     d_spatial: int = 2         # static
+    z: jax.Array | None = None       # (m,) observed data (degraded refits)
+    status: object = None            # FactorStatus | None: factor health
 
     def tree_flatten(self):
         children = (self.diag_l, self.u, self.v, self.ranks, self.alpha,
-                    self.locs, self.params)
+                    self.locs, self.params, self.z, self.status)
         aux = (self.kind, self.n_shards, self.representation, self.d_spatial)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         kind, n_shards, representation, d_spatial = aux
-        diag_l, u, v, ranks, alpha, locs, params = children
+        diag_l, u, v, ranks, alpha, locs, params, z, status = children
         return cls(diag_l=diag_l, u=u, v=v, ranks=ranks, alpha=alpha,
                    locs=locs, params=params, kind=kind, n_shards=n_shards,
-                   representation=representation, d_spatial=d_spatial)
+                   representation=representation, d_spatial=d_spatial,
+                   z=z, status=status)
 
     @property
     def m(self) -> int:
@@ -96,9 +100,11 @@ def dense_factor(obs_locs, z_obs, params: MaternParams,
                             nugget=nugget)
         chol = jnp.linalg.cholesky(sigma)
     alpha = jax.scipy.linalg.cho_solve((chol, True), z_obs)
+    status = init_status(chol.dtype).update_potrf(chol)
     return CokrigeFactor(diag_l=chol, u=None, v=None, ranks=None, alpha=alpha,
                          locs=jnp.asarray(obs_locs), params=params,
-                         kind="dense", representation=representation)
+                         kind="dense", representation=representation,
+                         z=jnp.asarray(z_obs), status=status)
 
 
 def _chol_shim(obs_locs, z_obs, params, representation, chol):

@@ -52,6 +52,7 @@ from ..distribution.compress_svd import svd_truncate_batch
 from ..distribution.pair_qr import sharded_recompress
 from .covariance import MaternParams, build_sigma, build_sigma_panel
 from .likelihood import LoglikResult
+from .recovery import FactorStatus, init_status, sentinel_loglik
 
 
 class TLRMatrix(NamedTuple):
@@ -316,17 +317,23 @@ def _safe_qr(a):
 def _safe_qr_jvp(primals, tangents):
     (a,), (da,) = primals, tangents
     q, r = _safe_qr(a)
-    k = r.shape[-1]
-    diag = jnp.diagonal(r, axis1=-2, axis2=-1)
+    kk = r.shape[-2]                  # rows of reduced R = min(m, n)
+    r1 = r[..., :, :kk]               # leading square block (== r when m >= n)
+    diag = jnp.diagonal(r1, axis1=-2, axis2=-1)
     lim = 1e-40 + 1e-12 * jnp.max(jnp.abs(diag), axis=-1, keepdims=True)
     bump = jnp.where(jnp.abs(diag) > lim, 0.0, 1.0)
-    r_safe = r + jnp.eye(k, dtype=r.dtype) * bump[..., None, :]
-    da_rinv = lax.linalg.triangular_solve(r_safe, da)       # da @ r^{-1}
+    r_safe = r1 + jnp.eye(kk, dtype=r.dtype) * bump[..., None, :]
+    da_rinv = lax.linalg.triangular_solve(r_safe, da[..., :, :kk])
     qt_da_rinv = jnp.swapaxes(q, -1, -2) @ da_rinv
     low = jnp.tril(qt_da_rinv, -1)
     do = low - jnp.swapaxes(low, -1, -2)                    # skew-symmetric
     dq = q @ (do - qt_da_rinv) + da_rinv
-    dr = (qt_da_rinv - do) @ r
+    if r.shape[-1] == kk:
+        dr = (qt_da_rinv - do) @ r
+    else:
+        # Wide R (2*kmax > nb): only the leading square block is invertible;
+        # dR = Q^T dA - Omega R with Omega = Q^T dQ skew-symmetric.
+        dr = jnp.swapaxes(q, -1, -2) @ da - do @ r
     return (q, r), (dq, dr)
 
 
@@ -367,11 +374,13 @@ def _core_svd_jvp(primals, tangents):
     return (u, s, vt), (du, ds, jnp.swapaxes(dv, -1, -2))
 
 
-def _batched_recompress(u1, v1, u2, v2, tol, scale):
+def _recompress_parts(u1, v1, u2, v2, tol, scale):
     """(B..., nb, k) pairs -> recompressed sum with rank <= kmax, batched.
 
-    QR(U')·QR(V') then SVD of the small core.  Returns (U, V, ranks) where
-    ranks counts the singular values kept (int32, shape B...).
+    QR(U')·QR(V') then SVD of the small core.  Returns (U, V, ranks, cs)
+    where ranks counts the singular values kept (int32, shape B...) and cs
+    is the raw singular-value spectrum (for breakdown accounting — a NaN
+    input tile surfaces here as non-finite singular values).
     """
     kmax = u1.shape[-1]
     ucat = jnp.concatenate([u1, u2], axis=-1)       # (..., nb, 2k)
@@ -387,7 +396,21 @@ def _batched_recompress(u1, v1, u2, v2, tol, scale):
     unew = jnp.einsum("...nk,...k->...nk", qu @ cu[..., :kmax], s_m)
     vnew = qv @ jnp.swapaxes(cvt[..., :kmax, :], -1, -2)
     vnew = jnp.where(mask[..., None, :], vnew, 0.0)
-    return unew, vnew, jnp.sum(mask, axis=-1).astype(jnp.int32)
+    return unew, vnew, jnp.sum(mask, axis=-1).astype(jnp.int32), cs
+
+
+def _batched_recompress(u1, v1, u2, v2, tol, scale):
+    """Compatibility 3-tuple form of ``_recompress_parts`` (no counting)."""
+    return _recompress_parts(u1, v1, u2, v2, tol, scale)[:3]
+
+
+def _batched_recompress_stat(u1, v1, u2, v2, tol, scale):
+    """As ``_batched_recompress`` plus an int32 scalar count of non-finite
+    singular values — the in-graph breakdown signal the panel bodies fold
+    into ``FactorStatus.nonfinite_count``."""
+    un, vn, rn, cs = _recompress_parts(u1, v1, u2, v2, tol, scale)
+    bad = jnp.sum(~jnp.isfinite(cs)).astype(jnp.int32)
+    return un, vn, rn, bad
 
 
 def recompress(u1, v1, u2, v2, tol: float, scale: float):
@@ -411,10 +434,11 @@ class TLRCholesky(NamedTuple):
     u: jax.Array       # (T, T, nb, kmax) factor tiles  L[i,j] = u v^T
     v: jax.Array
     ranks: jax.Array
+    status: FactorStatus | None = None  # breakdown accounting (if tracked)
 
 
-def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
-                   mesh=None, dspec=None, uvspec=None):
+def tlr_panel_body(k, diag, u, v, ranks, status=None, *, tol, scale,
+                   pairs=None, mesh=None, dspec=None, uvspec=None):
     """One right-looking panel step k on rank-padded (kmax) trailing blocks.
 
     The four paper-Fig.-1 task classes, with ``k`` a *traced* loop index so
@@ -436,6 +460,10 @@ def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
         2-D tile layout (the SPMD form: each device recompresses its own
         P(row, "model") shard; a gather over pair indices would re-shard
         every step).
+
+    When a ``FactorStatus`` is threaded in (riding the scan carry), the
+    POTRF pivot minimum and the recompress non-finite counts fold into it
+    and a 5-tuple comes back; ``status=None`` keeps the historical 4-tuple.
     """
     T, nb = diag.shape[0], diag.shape[1]
     kmax = u.shape[-1]
@@ -444,6 +472,8 @@ def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
     dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
     # spmdlint: ignore[R1] one (nb, nb) panel-head POTRF replicated on purpose: every shard needs L_kk immediately and nb^2 is tiny next to the pair batch
     lkk = jnp.linalg.cholesky(dkk)
+    if status is not None:
+        status = status.update_potrf(lkk)
     row_is_k = (rows == k)[:, None, None]
     # ---- TRSM on panel column k (V only; U untouched — §5.3).
     vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)       # (T, nb, kmax)
@@ -470,7 +500,12 @@ def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
         du = jnp.where(act, du, 0.0)
         dv = jnp.where(act, dv, 0.0)
         u0, v0 = u[il, jl], v[il, jl]
-        un, vn, rn = _batched_recompress(u0, v0, du, dv, tol, scale)
+        if status is not None:
+            un, vn, rn, bad = _batched_recompress_stat(u0, v0, du, dv,
+                                                       tol, scale)
+            status = status.add_nonfinite(bad)
+        else:
+            un, vn, rn = _batched_recompress(u0, v0, du, dv, tol, scale)
         u = u.at[il, jl].set(jnp.where(act, un, u0))
         v = v.at[il, jl].set(jnp.where(act, vn, v0))
         ranks = ranks.at[il, jl].set(
@@ -484,13 +519,20 @@ def tlr_panel_body(k, diag, u, v, ranks, *, tol, scale, pairs=None,
         du = jnp.where(act, du, 0.0)
         dv = jnp.where(act, dv, 0.0)
         du = _constrain(du, mesh, uvspec)
-        un, vn, rn = _batched_recompress(u, v, du, dv, tol, scale)
+        if status is not None:
+            un, vn, rn, bad = _batched_recompress_stat(u, v, du, dv,
+                                                       tol, scale)
+            status = status.add_nonfinite(bad)
+        else:
+            un, vn, rn = _batched_recompress(u, v, du, dv, tol, scale)
         u = jnp.where(act, un, u)
         v = jnp.where(act, vn, v)
         ranks = jnp.where(act[..., 0, 0], rn, ranks)
     u = _constrain(u, mesh, uvspec)
     v = _constrain(v, mesh, uvspec)
     diag = _constrain(diag, mesh, dspec)
+    if status is not None:
+        return diag, u, v, ranks, status
     return diag, u, v, ranks
 
 
@@ -514,18 +556,22 @@ def indexed_scan(body, k_hi: int, carry):
 
 
 def panel_loop(diag, u, v, ranks, k_hi: int, *, tol, scale, pairs=None,
-               mesh=None, dspec=None, uvspec=None):
+               mesh=None, dspec=None, uvspec=None, status=None):
     """Run the shared panel body for k in [0, k_hi) under one indexed_scan
-    (static trip count — one traced body, reverse-differentiable)."""
+    (static trip count — one traced body, reverse-differentiable).  Passing
+    a ``FactorStatus`` rides it on the scan carry and returns a 5-tuple."""
     def body(k, carry):
         return tlr_panel_body(k, *carry, tol=tol, scale=scale, pairs=pairs,
                               mesh=mesh, dspec=dspec, uvspec=uvspec)
 
-    return indexed_scan(body, k_hi, (diag, u, v, ranks))
+    carry = (diag, u, v, ranks) if status is None else \
+        (diag, u, v, ranks, status)
+    return indexed_scan(body, k_hi, carry)
 
 
-def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
-                      mesh=None, dspec=None, pspec=None, shard_axes=None):
+def tlr_panel_body_bc(k, diag, up, vp, ranks, status=None, *, layout, tol,
+                      scale, mesh=None, dspec=None, pspec=None,
+                      shard_axes=None):
     """One right-looking panel step k on *pair-major* strict-lower storage
     (distribution.block_cyclic.PairLayout): the static strict-lower pair
     batch of the single-device form, made shardable.
@@ -556,6 +602,8 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
     dkk = lax.dynamic_index_in_dim(diag, k, 0, keepdims=False)
     # spmdlint: ignore[R1] one (nb, nb) panel-head POTRF replicated on purpose: every shard needs L_kk immediately and nb^2 is tiny next to the pair batch
     lkk = jnp.linalg.cholesky(dkk)
+    if status is not None:
+        status = status.update_potrf(lkk)
     row_is_k = (rows == k)[:, None, None]
     below = (rows > k)[:, None, None]
     # ---- gather panel column k from the pair slots (i <= k reads an out-
@@ -581,29 +629,41 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, *, layout, tol, scale,
     du = jnp.where(act, du, 0.0)
     dv = jnp.where(act, dv, 0.0)
     du = _constrain(du, mesh, pspec)
-    un, vn, rn = sharded_recompress(up, vp, du, dv, tol, scale,
-                                    mesh=mesh, axes=shard_axes)
+    if status is not None:
+        un, vn, rn, bad = sharded_recompress(up, vp, du, dv, tol, scale,
+                                             mesh=mesh, axes=shard_axes,
+                                             with_count=True)
+        status = status.add_nonfinite(bad)
+    else:
+        un, vn, rn = sharded_recompress(up, vp, du, dv, tol, scale,
+                                        mesh=mesh, axes=shard_axes)
     up = jnp.where(act, un, up)
     vp = jnp.where(act, vn, vp)
     ranks = jnp.where(act[:, 0, 0], rn, ranks)
     up = _constrain(up, mesh, pspec)
     vp = _constrain(vp, mesh, pspec)
     diag = _constrain(diag, mesh, dspec)
+    if status is not None:
+        return diag, up, vp, ranks, status
     return diag, up, vp, ranks
 
 
 def pair_panel_loop(diag, up, vp, ranks, k_hi: int, *, layout, tol, scale,
-                    mesh=None, dspec=None, pspec=None, shard_axes=None):
+                    mesh=None, dspec=None, pspec=None, shard_axes=None,
+                    status=None):
     """indexed_scan of the block-cyclic pair body for k in [0, k_hi)."""
     def body(k, carry):
         return tlr_panel_body_bc(k, *carry, layout=layout, tol=tol,
                                  scale=scale, mesh=mesh, dspec=dspec,
                                  pspec=pspec, shard_axes=shard_axes)
 
-    return indexed_scan(body, k_hi, (diag, up, vp, ranks))
+    carry = (diag, up, vp, ranks) if status is None else \
+        (diag, up, vp, ranks, status)
+    return indexed_scan(body, k_hi, carry)
 
 
-def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRCholesky:
+def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0,
+                 track_status: bool = False) -> TLRCholesky:
     """Factor A = L L^T keeping off-diagonal tiles compressed.
 
     Scan form: a single traced panel step under lax.fori_loop (trace size
@@ -616,13 +676,21 @@ def tlr_cholesky(t: TLRMatrix, tol: float = 1e-9, scale: float = 1.0) -> TLRChol
     """
     T = t.n_tiles
     diag, u, v, ranks = t.diag, t.u, t.v, t.ranks
+    status = init_status(diag.dtype) if track_status else None
     il, jl = np.tril_indices(T, k=-1)
     if len(il):
         pairs = (jnp.asarray(il), jnp.asarray(jl))
-        diag, u, v, ranks = panel_loop(diag, u, v, ranks, T - 1, tol=tol,
-                                       scale=scale, pairs=pairs)
-    diag = diag.at[T - 1].set(jnp.linalg.cholesky(diag[T - 1]))
-    return TLRCholesky(diag=diag, u=u, v=v, ranks=ranks)
+        out = panel_loop(diag, u, v, ranks, T - 1, tol=tol,
+                         scale=scale, pairs=pairs, status=status)
+        if track_status:
+            diag, u, v, ranks, status = out
+        else:
+            diag, u, v, ranks = out
+    lkk = jnp.linalg.cholesky(diag[T - 1])  # last column: POTRF only
+    if track_status:
+        status = status.update_potrf(lkk)
+    diag = diag.at[T - 1].set(lkk)
+    return TLRCholesky(diag=diag, u=u, v=v, ranks=ranks, status=status)
 
 
 def solve_lower_grid(diag_l, u, v, z) -> jax.Array:
@@ -701,20 +769,29 @@ def tlr_matvec(t: TLRMatrix, x) -> jax.Array:
 
 
 def tlr_loglik_from_matrix(t: TLRMatrix, z, tol: float = 1e-9,
-                           scale: float = 1.0) -> LoglikResult:
-    chol = tlr_cholesky(t, tol=tol, scale=scale)
+                           scale: float = 1.0,
+                           track_status: bool = True) -> LoglikResult:
+    chol = tlr_cholesky(t, tol=tol, scale=scale, track_status=track_status)
     alpha = tlr_solve_lower(chol, z)
     quad = jnp.sum(alpha * alpha)
     logdet = tlr_logdet(chol)
     m = t.shape[0]
     ll = -0.5 * (m * math.log(2.0 * math.pi) + logdet + quad)
-    return LoglikResult(ll, logdet, quad, None)
+    status = chol.status
+    if status is not None:
+        # Breakdown -> a well-defined finite sentinel, never NaN contagion.
+        status = status.add_nonfinite((~jnp.isfinite(ll)).astype(jnp.int32))
+        ok = status.ok
+        ll = jnp.where(ok, ll, sentinel_loglik(ll.dtype))
+        logdet = jnp.where(ok, logdet, jnp.zeros_like(logdet))
+        quad = jnp.where(ok, quad, jnp.zeros_like(quad))
+    return LoglikResult(ll, logdet, quad, None, status)
 
 
 def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
                max_rank: int = 64, tile_size: int = 0,
                nugget: float = 0.0, *, locs=None, from_tiles: bool = False,
-               gen: str = "pallas") -> LoglikResult:
+               gen: str = "pallas", track_status: bool = True) -> LoglikResult:
     """End-to-end TLR likelihood: GEN -> compress -> TLR Cholesky -> solve.
 
     Locations must be Morton-ordered by the caller for good rank decay.
@@ -741,7 +818,8 @@ def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
         t = tlr_compress(sigma, tile_size=tile_size, tol=tol,
                          max_rank=max_rank, scale=scale,
                          multiple_of=params.p)
-    return tlr_loglik_from_matrix(t, z, tol=tol, scale=scale)
+    return tlr_loglik_from_matrix(t, z, tol=tol, scale=scale,
+                                  track_status=track_status)
 
 
 # ---------------------------------------------------------------------------

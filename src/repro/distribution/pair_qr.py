@@ -80,7 +80,7 @@ def warn_fallback_once(key: str, message: str):
 
 
 def sharded_recompress(up, vp, du, dv, tol, scale, *, mesh=None, axes=None,
-                       pad: bool = True):
+                       pad: bool = True, with_count: bool = False):
     """(length, nb, k) pair batches -> recompressed sum, QR/SVD sharded over
     the pair axis.
 
@@ -93,13 +93,18 @@ def sharded_recompress(up, vp, du, dv, tol, scale, *, mesh=None, axes=None,
     indivisible batch length is zero-padded to a multiple of the shard count
     and stripped after (``pad=False`` instead falls back to the replicated
     batch with a one-time warning).  Returns (U, V, ranks) with ranks int32
-    of shape (length,).
+    of shape (length,); with ``with_count=True`` a fourth int32 scalar — the
+    number of non-finite core singular values, reduced over all shards (each
+    device counts its own slots, the per-shard counts come out along the
+    pair axis and sum here) — for ``FactorStatus`` breakdown accounting.
     """
-    from ..core.tlr import _batched_recompress
+    from ..core.tlr import _batched_recompress, _batched_recompress_stat
 
     axes = tuple(axes) if axes else ()
     shards = pair_shard_count(mesh, axes)
     if mesh is None or not axes:
+        if with_count:
+            return _batched_recompress_stat(up, vp, du, dv, tol, scale)
         return _batched_recompress(up, vp, du, dv, tol, scale)
     length = up.shape[0]
     if length % shards:
@@ -110,11 +115,26 @@ def sharded_recompress(up, vp, du, dv, tol, scale, *, mesh=None, axes=None,
                 f"divisible by {shards} shards and pad=False — falling back "
                 "to the fully replicated QR/SVD batch (a per-device memory "
                 "cliff); pad the batch or fix the layout")
+            if with_count:
+                return _batched_recompress_stat(up, vp, du, dv, tol, scale)
             return _batched_recompress(up, vp, du, dv, tol, scale)
         (up, vp, du, dv), _ = pad_leading((up, vp, du, dv), shards)
 
     spec = P(axes, None, None)
     scale = jnp.asarray(scale)
+
+    if with_count:
+        def local(u1, v1, u2, v2, sc):
+            u_l, v_l, r_l, bad = _batched_recompress_stat(u1, v1, u2, v2,
+                                                          tol, sc)
+            return u_l, v_l, r_l, bad[None]   # (1,) per shard -> (S,) global
+
+        fn = shard_map(local, mesh,
+                       in_specs=(spec, spec, spec, spec, P()),
+                       out_specs=(spec, spec, P(axes), P(axes)),
+                       check_rep=False)
+        un, vn, rn, bad = fn(up, vp, du, dv, scale)
+        return un[:length], vn[:length], rn[:length], jnp.sum(bad)
 
     def local(u1, v1, u2, v2, sc):
         return _batched_recompress(u1, v1, u2, v2, tol, sc)

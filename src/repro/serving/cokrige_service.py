@@ -36,6 +36,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core.covariance import (MaternParams, build_c0_panels,
@@ -47,9 +48,32 @@ from ..core.prediction import CokrigeFactor
 from ..core.tlr import _constrain, choose_tile_size
 from ..distribution.block_cyclic import pair_layout, pair_shards
 
-__all__ = ["CokrigeServeConfig", "CokrigePrediction", "fit_factor",
-           "predict_batch", "predict_with_factor", "make_cokrige_serve_fns",
+__all__ = ["CokrigeServeConfig", "CokrigePrediction", "ServeError",
+           "fit_factor", "heal_factor", "predict_batch",
+           "predict_with_factor", "make_cokrige_serve_fns",
            "cokrige_fit_lowerable", "cokrige_predict_lowerable"]
+
+
+class ServeError(ValueError):
+    """Structured refusal: the service will not serve garbage.
+
+    ``code`` is machine-readable (``bad_shape`` | ``bad_dtype`` |
+    ``nonfinite_locs`` | ``broken_factor``); ``status`` carries the
+    factor's ``FactorStatus.as_dict()`` when the refusal is about factor
+    health.  ``to_dict()`` is the wire form.
+    """
+
+    def __init__(self, code: str, message: str, status: dict | None = None,
+                 detail: dict | None = None):
+        super().__init__(f"[{code}] {message}")
+        self.code = code
+        self.message = message
+        self.status = status
+        self.detail = detail or {}
+
+    def to_dict(self) -> dict:
+        return {"code": self.code, "message": self.message,
+                "status": self.status, "detail": self.detail}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +96,18 @@ class CokrigeServeConfig:
     shard_recompress: bool = True
     super_panels: int = 1
     interval: float = 0.95
+    # Request validation in ``predict_batch``: refuse malformed or
+    # non-finite prediction locations and broken factors with a structured
+    # ``ServeError`` instead of serving NaNs.
+    validate: bool = True
+    # Degraded mode: a broken factor is transparently re-fit with the
+    # nugget escalated along the jitter ladder (``heal_factor``) instead of
+    # refused.  Costs one prefill per failed rung, on the request path.
+    degraded: bool = False
+    degraded_initial_jitter: float = 1e-8
+    degraded_factor: float = 10.0
+    degraded_max_jitter: float = 1e-2
+    degraded_max_attempts: int = 5
 
 
 class CokrigePrediction(NamedTuple):
@@ -91,7 +127,7 @@ def _z_crit(interval: float):
 
 
 def fit_factor(locs, z, params: MaternParams, cfg: CokrigeServeConfig,
-               mesh=None) -> CokrigeFactor:
+               mesh=None, nugget=None) -> CokrigeFactor:
     """Prefill: compress + factorize Sigma once, precompute alpha.
 
     Generator-direct: the dense (m, m) Sigma never exists.  The tile
@@ -100,6 +136,12 @@ def fit_factor(locs, z, params: MaternParams, cfg: CokrigeServeConfig,
     contract; ``make_cokrige_serve_fns`` compiles exactly this).  Returns
     the on-device ``CokrigeFactor`` — everything ``predict_batch`` needs,
     nothing it would rebuild.
+
+    The factorization's ``FactorStatus`` rides on ``factor.status`` (an
+    in-graph pytree — no host sync here); ``predict_batch`` checks it
+    before serving.  ``nugget`` (a traced scalar operand, NOT a jit-cache
+    key) is *added* to ``cfg.nugget`` — the jitter ladder of
+    ``heal_factor`` re-executes one compiled prefill at escalating values.
     """
     locs = jnp.asarray(locs)
     z = jnp.asarray(z)
@@ -108,23 +150,26 @@ def fit_factor(locs, z, params: MaternParams, cfg: CokrigeServeConfig,
     nb = choose_tile_size(m, cfg.tile_size, multiple_of=p)
     T = m // nb
     layout = pair_layout(T, pair_shards(mesh, cfg.row_axes))
+    eff_nugget = cfg.nugget if nugget is None else cfg.nugget + nugget
     scale = jnp.max(params.sigma2) + cfg.nugget
     t = dist_compress_tiles(locs, params, tile_size=cfg.tile_size,
                             tol=cfg.tol, max_rank=cfg.max_rank,
-                            nugget=cfg.nugget, gen=cfg.gen,
+                            nugget=eff_nugget, gen=cfg.gen,
                             d_spatial=cfg.d_spatial, scale=scale, mesh=mesh,
                             row_axes=cfg.row_axes, layout=layout,
                             col_block=cfg.col_block, shard_svd=cfg.shard_svd)
-    diag_l, u, v, ranks = dist_tlr_cholesky_pairs(
+    diag_l, u, v, ranks, status = dist_tlr_cholesky_pairs(
         t.diag, t.u, t.v, t.ranks, layout=layout, tol=cfg.tol, scale=scale,
         mesh=mesh, row_axes=cfg.row_axes, super_panels=cfg.super_panels,
-        shard_recompress=cfg.shard_recompress)
+        shard_recompress=cfg.shard_recompress, track_status=True)
     y = dist_tlr_solve_lower_pairs(diag_l, u, v, z, layout=layout)
     alpha = dist_tlr_solve_upper_pairs(diag_l, u, v, y, layout=layout)
+    status = status.add_nonfinite(
+        jnp.sum(~jnp.isfinite(alpha)).astype(jnp.int32))
     return CokrigeFactor(diag_l=diag_l, u=u, v=v, ranks=ranks, alpha=alpha,
                          locs=locs, params=params, kind="tlr",
                          n_shards=layout.n_shards,
-                         d_spatial=cfg.d_spatial)
+                         d_spatial=cfg.d_spatial, z=z, status=status)
 
 
 def _predict_core(factor: CokrigeFactor, pred_locs, *, interval: float,
@@ -219,11 +264,93 @@ def make_cokrige_serve_fns(cfg: CokrigeServeConfig, mesh=None):
     return _serve_fns(cfg, mesh)
 
 
+def _factor_ok(factor: CokrigeFactor) -> bool:
+    """Host-side health check (None status = legacy untracked factor)."""
+    return factor.status is None or bool(factor.status.ok)
+
+
+def _validate_request(factor: CokrigeFactor, pred_locs):
+    """Refuse malformed requests up front (host-side, before the jit)."""
+    pl = np.asarray(pred_locs)
+    if pl.ndim != 2 or pl.shape[-1] != factor.d_spatial:
+        raise ServeError(
+            "bad_shape",
+            f"pred_locs must have shape (B, {factor.d_spatial}), "
+            f"got {pl.shape}")
+    if not np.issubdtype(pl.dtype, np.floating):
+        raise ServeError(
+            "bad_dtype",
+            f"pred_locs must be a floating dtype, got {pl.dtype}")
+    if not np.all(np.isfinite(pl)):
+        bad = np.argwhere(~np.isfinite(pl))
+        raise ServeError(
+            "nonfinite_locs",
+            f"{len(bad)} non-finite coordinate(s) in pred_locs "
+            f"(first at row {int(bad[0][0])})",
+            detail={"n_nonfinite": int(len(bad)),
+                    "first_row": int(bad[0][0])})
+
+
+def heal_factor(factor: CokrigeFactor, cfg: CokrigeServeConfig,
+                mesh=None) -> CokrigeFactor:
+    """Re-fit a broken factor with the nugget escalated along the ladder.
+
+    Returns the first healthy re-fit (or ``factor`` unchanged if it was
+    already healthy).  The re-fits reuse the cached compiled prefill —
+    ``nugget`` enters as a traced operand, so every rung is a re-execution,
+    not a re-compile.  Raises ``ServeError(code="broken_factor")`` when the
+    ladder is exhausted or the factor carries no data to re-fit from.
+    """
+    if _factor_ok(factor):
+        return factor
+    status = factor.status.as_dict() if factor.status is not None else None
+    if factor.z is None:
+        raise ServeError(
+            "broken_factor",
+            "factor failed health check and carries no z to re-fit from",
+            status=status)
+    fit, _ = make_cokrige_serve_fns(cfg, mesh)
+    jitter = cfg.degraded_initial_jitter
+    tried = []
+    cand = factor
+    for _ in range(cfg.degraded_max_attempts):
+        tried.append(jitter)
+        cand = fit(factor.locs, factor.z, factor.params,
+                   nugget=jnp.asarray(jitter, factor.alpha.dtype))
+        if _factor_ok(cand):
+            return cand
+        jitter = min(jitter * cfg.degraded_factor, cfg.degraded_max_jitter)
+    last = cand.status.as_dict() if cand.status is not None else None
+    raise ServeError(
+        "broken_factor",
+        f"jitter ladder exhausted after {len(tried)} re-fit(s) "
+        f"(jitters tried: {tried})", status=last,
+        detail={"jitters_tried": tried})
+
+
 def predict_batch(factor: CokrigeFactor, pred_locs,
                   cfg: CokrigeServeConfig = CokrigeServeConfig(),
                   mesh=None, key=None, n_draws: int = 1) -> CokrigePrediction:
     """Convenience decode entry point (module-level, jit-cached via
-    ``make_cokrige_serve_fns``)."""
+    ``make_cokrige_serve_fns``).
+
+    With ``cfg.validate`` (default) the request is checked up front —
+    malformed/non-finite ``pred_locs`` or a factor whose ``FactorStatus``
+    failed raise a structured ``ServeError`` instead of serving NaNs.
+    ``cfg.degraded`` instead re-fits a broken factor via ``heal_factor``
+    (the healed handle serves this request; callers wanting to keep it
+    should call ``heal_factor`` themselves)."""
+    if cfg.validate:
+        _validate_request(factor, pred_locs)
+        if not _factor_ok(factor):
+            if cfg.degraded:
+                factor = heal_factor(factor, cfg, mesh)
+            else:
+                raise ServeError(
+                    "broken_factor",
+                    "factor failed its factorization health check; re-fit "
+                    "with a larger nugget (heal_factor) or enable degraded "
+                    "mode", status=factor.status.as_dict())
     _, predict = make_cokrige_serve_fns(cfg, mesh)
     return predict(factor, pred_locs, key=key, n_draws=n_draws)
 

@@ -1,0 +1,3 @@
+"""Test-support utilities shipped with the library (fault injection)."""
+from .faultinject import (corrupt_diag_tile, nan_compress_panel,  # noqa: F401
+                          zero_shard)

@@ -1,0 +1,152 @@
+"""Deterministic fault injection for the TLR pipeline (tests/benchmarks).
+
+The robustness machinery (``core.recovery.FactorStatus``, the jitter
+ladder, serving's health checks) needs *reproducible* breakdowns to be
+testable.  This module patches the three compress entry points —
+
+  * ``repro.core.tlr.tlr_compress_tiles``        (single-program path)
+  * ``repro.core.dist_tlr.dist_compress_tiles``  (distributed path)
+  * ``repro.serving.cokrige_service.dist_compress_tiles`` (serving prefill)
+
+— so the tile pytree they return is corrupted in a controlled way before
+the factorization ever sees it.  Faults are injected at the *output* of
+compression rather than inside the nugget/generator plumbing because the
+compress output is the one layout every downstream path (grid, pair-major
+block-cyclic, serving) consumes, and the dist path applies its nugget at
+traced indices where a monkeypatch cannot reach.
+
+jit caveat: patches take effect only on FRESH traces.  A function jitted
+(or an lru_cached serve fn built) before entering the context keeps its
+clean compiled executable; build jit closures inside the ``with`` block,
+and use a distinct ``CokrigeServeConfig`` for serving tests so the
+lru-cached fit/predict pair is re-traced.
+
+Context managers (composable, re-entrant-safe):
+
+  * ``corrupt_diag_tile(tile, magnitude)`` — subtract ``magnitude * I``
+    from one diagonal tile: a clean non-PSD breakdown (POTRF pivot < 0).
+  * ``nan_compress_panel(panel)`` — overwrite one U factor slot with NaN:
+    a poisoned low-rank stream (non-finite recompress singular values).
+  * ``zero_shard(shard, n_shards)`` — zero every diag tile and U/V pair
+    slot a block-cyclic shard would own: the lost-device scenario (POTRF
+    pivot exactly 0 on the zeroed tiles).
+
+Pytest fixtures of the same names (suffix ``_fault``) are exported when
+pytest is importable.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax.numpy as jnp
+
+import repro.core.dist_tlr as _dist_mod
+import repro.core.tlr as _tlr_mod
+import repro.serving.cokrige_service as _serve_mod
+
+__all__ = ["corrupt_diag_tile", "nan_compress_panel", "zero_shard"]
+
+_PATCH_SITES = ((_tlr_mod, "tlr_compress_tiles"),
+                (_dist_mod, "dist_compress_tiles"),
+                (_serve_mod, "dist_compress_tiles"))
+
+
+def _replace_fields(t, **kw):
+    """_replace for NamedTuples (TLRMatrix) and dataclasses (PairTLR)."""
+    if hasattr(t, "_replace"):
+        return t._replace(**kw)
+    return dataclasses.replace(t, **kw)
+
+
+@contextlib.contextmanager
+def _patch_compress(transform):
+    """Route every compress entry point's output through ``transform``."""
+    originals = [(mod, name, getattr(mod, name)) for mod, name in _PATCH_SITES]
+
+    def wrap(fn):
+        def wrapped(*args, **kwargs):
+            return transform(fn(*args, **kwargs))
+        return wrapped
+
+    try:
+        for mod, name, fn in originals:
+            setattr(mod, name, wrap(fn))
+        yield
+    finally:
+        for mod, name, fn in originals:
+            setattr(mod, name, fn)
+
+
+@contextlib.contextmanager
+def corrupt_diag_tile(tile: int = 0, magnitude: float = 10.0):
+    """Make diagonal tile ``tile`` non-PSD: D_tt -= magnitude * I.
+
+    With ``magnitude`` above the tile's smallest eigenvalue the POTRF step
+    at that tile produces a non-positive (or NaN) pivot —
+    ``FactorStatus.breakdown_count > 0`` and ``status.ok == False``.
+    """
+    def transform(t):
+        nb = t.diag.shape[-1]
+        eye = jnp.eye(nb, dtype=t.diag.dtype)
+        return _replace_fields(t, diag=t.diag.at[tile].add(-magnitude * eye))
+
+    with _patch_compress(transform):
+        yield
+
+
+@contextlib.contextmanager
+def nan_compress_panel(panel: int = 0):
+    """Overwrite low-rank factor slot ``panel`` with NaN.
+
+    Models a corrupted compression stream: the NaNs reach the GEMM-phase
+    recompress, whose non-finite singular-value count feeds
+    ``FactorStatus.nonfinite_count``.
+    """
+    def transform(t):
+        return _replace_fields(t, u=t.u.at[panel].set(jnp.nan))
+
+    with _patch_compress(transform):
+        yield
+
+
+@contextlib.contextmanager
+def zero_shard(shard: int = 0, n_shards: int = 8):
+    """Zero every tile a block-cyclic shard would own (lost device).
+
+    Diagonal tiles ``shard::n_shards`` and U/V pair slots ``shard::
+    n_shards`` go to zero; Cholesky of a zero tile yields pivot 0, so the
+    breakdown is flagged (``min_pivot == 0``) without any NaN involved.
+    """
+    def transform(t):
+        return _replace_fields(
+            t,
+            diag=t.diag.at[shard::n_shards].set(0.0),
+            u=t.u.at[shard::n_shards].set(0.0),
+            v=t.v.at[shard::n_shards].set(0.0))
+
+    with _patch_compress(transform):
+        yield
+
+
+try:  # pytest fixtures (only when pytest is importable)
+    import pytest
+
+    @pytest.fixture
+    def corrupt_diag_fault():
+        with corrupt_diag_tile():
+            yield
+
+    @pytest.fixture
+    def nan_panel_fault():
+        with nan_compress_panel():
+            yield
+
+    @pytest.fixture
+    def zero_shard_fault():
+        with zero_shard():
+            yield
+
+    __all__ += ["corrupt_diag_fault", "nan_panel_fault", "zero_shard_fault"]
+except ImportError:  # pragma: no cover
+    pass

@@ -47,6 +47,8 @@ def _artifact(**overrides):
         replicated_temp_bytes=0, undonated_dead_bytes=0,
         fit_factor_time_us=6e5, predict_batch_p50_us=3e4,
         predictions_per_sec=2133.0, loglik_delta_predict=3e-4,
+        status_check_overhead_us=150.0, status_check_overhead_frac=0.002,
+        recovery_retry_overhead_frac=0.05,
     )
     art.update(overrides)
     return art
@@ -165,6 +167,41 @@ def test_serving_gate(check_bench):
     # the serving delta obeys an explicit looser bound like every delta
     assert check_bench.check_artifact(
         _artifact(loglik_delta_predict=5e-3), max_delta=1e-2) == []
+
+
+def test_fault_tolerance_gate(check_bench):
+    """The PR-8 fault-tolerance keys are required; the status-threading
+    overhead fraction is gated at 1% (a zero *_us overhead is legal — the
+    carry can be below timer resolution)."""
+    for key in ("status_check_overhead_us", "status_check_overhead_frac",
+                "recovery_retry_overhead_frac"):
+        art = _artifact()
+        del art[key]
+        errs = check_bench.check_artifact(art)
+        assert any(f"missing key: {key}" in e for e in errs)
+    # below-resolution overhead passes (not a TIMING_KEYS member)
+    assert check_bench.check_artifact(
+        _artifact(status_check_overhead_us=0.0,
+                  status_check_overhead_frac=0.0)) == []
+    errs = check_bench.check_artifact(
+        _artifact(status_check_overhead_frac=0.02))
+    assert any("status_check_overhead_frac" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(recovery_retry_overhead_frac=0.8))
+    assert any("recovery_retry_overhead_frac" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(status_check_overhead_frac=float("nan")))
+    assert any("status_check_overhead_frac" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(recovery_retry_overhead_frac=-0.1))
+    assert any("recovery_retry_overhead_frac" in e for e in errs)
+    # explicit looser bounds admit the same artifact
+    assert check_bench.check_artifact(
+        _artifact(status_check_overhead_frac=0.02),
+        max_status_frac=0.05) == []
+    assert check_bench.check_artifact(
+        _artifact(recovery_retry_overhead_frac=0.8),
+        max_retry_frac=1.0) == []
 
 
 def test_peak_temp_bytes_gate(check_bench):
