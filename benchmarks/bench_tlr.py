@@ -193,15 +193,19 @@ def _phase_temp_bytes(n, p, params, *, tile_size, max_rank, tol, nugget):
     # pipeline_bc_sharded keeps its PR-4 meaning (recompress sharding only:
     # shard_svd=False); pipeline_compress_sharded turns both shardings on —
     # the production form the dry-run compiles on the pod meshes.
-    for name, bc, mesh, ssvd in (("pipeline_masked", False, None, False),
-                                 ("pipeline_bc", True, None, False),
-                                 ("pipeline_bc_sharded", True, mesh1, False),
-                                 ("pipeline_compress_sharded", True, mesh1,
-                                  True)):
+    # pipeline_mixed_f32 is the compress-sharded production form under the
+    # mixed storage policy (core/precision.py): check_bench gates its temps
+    # strictly below the fp64 pipeline entry it narrows.
+    for name, bc, mesh, ssvd, pol in (
+            ("pipeline_masked", False, None, False, None),
+            ("pipeline_bc", True, None, False, None),
+            ("pipeline_bc_sharded", True, mesh1, False, None),
+            ("pipeline_compress_sharded", True, mesh1, True, None),
+            ("pipeline_mixed_f32", True, mesh1, True, "mixed_f32")):
         fn, specs = dist_tlr_pipeline_lowerable(
             n, p, params, tile_size=nb, max_rank=kmax, tol=tol, nugget=nugget,
             gen="xla", mesh=mesh, dtype=jnp.float64, block_cyclic=bc,
-            shard_svd=ssvd)
+            shard_svd=ssvd, dtype_policy=pol)
         out[name] = (fn, specs, ())
     from repro.analysis import LintConfig, lint_lowerable, tlr_dense_frac
     temps = {}
@@ -345,6 +349,44 @@ def collect_artifact(quick=False):
     dist_ll_csh_us, ll_dist_csh = time_fn(dist_ll_csh, locs_j, z, iters=2)
     ll_dist_csh = float(ll_dist_csh)
 
+    # Mixed-precision pipeline (ROADMAP item 1): the same compress-sharded
+    # program under dtype_policy="mixed_f32" — U/V storage and the
+    # truncation SVDs at f32, diagonal/POTRF/logdet at f64.  Its delta is
+    # measured against the fp64 pipeline it narrows (not the exact
+    # likelihood), isolating the narrowing error from the TLR truncation
+    # error; check_bench gates it at the standard 1e-3 loglik bound.
+    dist_ll_mixed = jax.jit(lambda pts, zz: dist_tlr_loglik(
+        None, zz, locs=pts, params=params, from_tiles=True, tile_size=nb,
+        max_rank=kmax, nugget=1e-8, tol=tol, block_cyclic=True,
+        mesh=mesh1, dtype_policy="mixed_f32").loglik)
+    dist_ll_mixed_us, ll_dist_mixed = time_fn(dist_ll_mixed, locs_j, z,
+                                              iters=2)
+    ll_dist_mixed = float(ll_dist_mixed)
+    emit("pipeline_mixed_f32", dist_ll_mixed_us,
+         f"delta_vs_f64={abs(ll_dist_mixed - ll_dist_csh):.2e};"
+         f"f64_us={dist_ll_csh_us:.0f}")
+
+    # Parameter recovery under the mixed policy: two short fits from the
+    # same start (f64 storage vs mixed_f32) must land on the same
+    # parameters — the end-to-end accuracy statement a loglik point delta
+    # cannot make.  Transformed (log/atanh) packed-vector relative error;
+    # check_bench gates it at --max-recovery-err.
+    from repro.core.mle import MLEConfig, fit, pack_params
+    mle_fits = {}
+    for pol in (None, "mixed_f32"):
+        mcfg = MLEConfig(backend="tlr", tlr_tol=tol, tlr_max_rank=kmax,
+                         tlr_from_tiles=True, tile_size=nb, nugget=1e-8,
+                         gen="xla", max_iters=10 if quick else 25,
+                         check_duplicates=False, dtype_policy=pol)
+        mle_fits[pol] = fit(locs, z, mcfg)
+    ref = np.asarray(pack_params(mle_fits[None].params, profile=False))
+    got = np.asarray(pack_params(mle_fits["mixed_f32"].params, profile=False))
+    recovery_err = float(np.linalg.norm(got - ref) / np.linalg.norm(ref))
+    emit("mle_recovery_mixed_f32", 0.0,
+         f"rel_param_err={recovery_err:.2e};"
+         f"loglik_f64={float(mle_fits[None].loglik):.6f};"
+         f"loglik_mixed={float(mle_fits['mixed_f32'].loglik):.6f}")
+
     # Serving (factor-once / predict-millions): time the prefill (compress +
     # pair Cholesky + alpha) and the decode (one B-point batch against the
     # cached factor).  The warmup + timed iters all reuse ONE factor handle —
@@ -405,6 +447,12 @@ def collect_artifact(quick=False):
         loglik_dist_compress_sharded=ll_dist_csh,
         loglik_delta_compress_sharded=abs(ll_dist_csh - ll_exact),
         loglik_delta_compress_sharded_vs_bc=abs(ll_dist_csh - ll_dist_bc),
+        # mixed-precision pipeline (ROADMAP item 1): narrowing error vs the
+        # fp64 pipeline, and parameter recovery across a short fit
+        dist_loglik_mixed_f32_time_us=dist_ll_mixed_us,
+        loglik_dist_mixed_f32=ll_dist_mixed,
+        loglik_delta_mixed_f32=abs(ll_dist_mixed - ll_dist_csh),
+        mle_param_recovery_err_mixed_f32=recovery_err,
         # cokriging-as-a-service (PR 7): prefill/decode split
         fit_factor_time_us=fit_us,
         predict_batch_p50_us=pred_us,

@@ -38,12 +38,21 @@ deltas versus the exact likelihood.  This script fails (exit 1) when
     ``status_check_overhead_frac`` (FactorStatus threading on the hot path)
     must stay under ``--max-status-frac`` (default 1%), and
     ``recovery_retry_overhead_frac`` (the jitter-escalation while_loop
-    wrapper on a clean evaluation) under ``--max-retry-frac`` (default 50%).
+    wrapper on a clean evaluation) under ``--max-retry-frac`` (default 50%), or
+  * the mixed-precision pipeline (PR 9, ``dtype_policy="mixed_f32"``)
+    regresses: ``loglik_delta_mixed_f32`` (narrowing error vs the fp64
+    pipeline) past the same loglik_delta* bound,
+    ``mle_param_recovery_err_mixed_f32`` (relative packed-parameter error
+    of a short mixed fit vs the f64 fit) past ``--max-recovery-err``
+    (default 5%), or ``peak_temp_bytes["pipeline_mixed_f32"]`` not
+    strictly below the fp64 ``pipeline_compress_sharded`` entry it
+    narrows — the policy must actually shrink the compiled footprint.
 
 Usage:  python -m benchmarks.check_bench [BENCH_tlr.json] [--max-delta 1e-3]
                                          [--max-bc-ratio 1.0]
                                          [--max-status-frac 0.01]
                                          [--max-retry-frac 0.5]
+                                         [--max-recovery-err 0.05]
 """
 from __future__ import annotations
 
@@ -86,6 +95,11 @@ REQUIRED_KEYS = (
     # (below timer resolution), so it is NOT in TIMING_KEYS.
     "status_check_overhead_us", "status_check_overhead_frac",
     "recovery_retry_overhead_frac",
+    # mixed-precision TLR pipeline (PR 9): narrowing error vs the fp64
+    # pipeline and short-fit parameter recovery, plus the
+    # pipeline_mixed_f32 temp phase (strictly below the fp64 entry).
+    "dist_loglik_mixed_f32_time_us", "loglik_delta_mixed_f32",
+    "mle_param_recovery_err_mixed_f32",
 )
 LINT_GATE_KEYS = ("replicated_temp_bytes", "undonated_dead_bytes")
 TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
@@ -95,17 +109,19 @@ TIMING_KEYS = ("gen_time_us", "compress_time_us", "cholesky_time_us",
                "dist_loglik_bc_sharded_time_us", "compress_sharded_time_us",
                "dist_loglik_compress_sharded_time_us",
                "fit_factor_time_us", "predict_batch_p50_us",
-               "predictions_per_sec")
+               "predictions_per_sec", "dist_loglik_mixed_f32_time_us")
 TEMP_PHASE_KEYS = ("gen_compress", "factorize_masked", "factorize_bc",
                    "pipeline_masked", "pipeline_bc",
                    "factorize_bc_sharded", "pipeline_bc_sharded",
-                   "compress_sharded", "pipeline_compress_sharded")
+                   "compress_sharded", "pipeline_compress_sharded",
+                   "pipeline_mixed_f32")
 
 
 def check_artifact(artifact: dict, max_delta: float = 1e-3,
                    max_bc_ratio: float = 1.0,
                    max_status_frac: float = 0.01,
-                   max_retry_frac: float = 0.5) -> list[str]:
+                   max_retry_frac: float = 0.5,
+                   max_recovery_err: float = 0.05) -> list[str]:
     """Return a list of failure messages (empty == gate passes)."""
     errors = []
     for key in REQUIRED_KEYS:
@@ -141,6 +157,15 @@ def check_artifact(artifact: dict, max_delta: float = 1e-3,
                 if not isinstance(val, (int, float)) or val <= 0:
                     errors.append(
                         f"peak_temp_bytes[{key!r}] is not positive: {val!r}")
+            mixed = temps.get("pipeline_mixed_f32")
+            f64 = temps.get("pipeline_compress_sharded")
+            if isinstance(mixed, (int, float)) and \
+                    isinstance(f64, (int, float)) and f64 > 0 and \
+                    mixed >= f64:
+                errors.append(
+                    f"peak_temp_bytes['pipeline_mixed_f32']={mixed} is not "
+                    f"strictly below the fp64 pipeline entry ({f64}) — the "
+                    f"mixed policy must shrink the compiled footprint")
     for key, bound, what in (
             ("status_check_overhead_frac", max_status_frac,
              "FactorStatus threading on the factorization hot path"),
@@ -155,6 +180,17 @@ def check_artifact(artifact: dict, max_delta: float = 1e-3,
         elif val > bound:
             errors.append(f"{key}={val:.4f} exceeds {bound:g} — "
                           f"{what} got measurably slower")
+    rec = artifact.get("mle_param_recovery_err_mixed_f32")
+    if rec is not None:
+        if not isinstance(rec, (int, float)) or not math.isfinite(rec) \
+                or rec < 0.0:
+            errors.append("mle_param_recovery_err_mixed_f32 is not a finite "
+                          f"non-negative error: {rec!r}")
+        elif rec > max_recovery_err:
+            errors.append(
+                f"mle_param_recovery_err_mixed_f32={rec:.3e} exceeds "
+                f"max-recovery-err={max_recovery_err:g} — the mixed_f32 fit "
+                f"no longer recovers the f64 parameters")
     for key in LINT_GATE_KEYS:
         val = artifact.get(key)
         if val is None:
@@ -180,6 +216,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-retry-frac", type=float, default=0.5,
                     help="fail when recovery_retry_overhead_frac exceeds "
                          "this (clean-path cost of the jitter ladder)")
+    ap.add_argument("--max-recovery-err", type=float, default=0.05,
+                    help="fail when mle_param_recovery_err_mixed_f32 "
+                         "exceeds this (mixed fit vs f64 fit)")
     args = ap.parse_args(argv)
 
     try:
@@ -190,7 +229,8 @@ def main(argv=None) -> int:
         return 1
 
     errors = check_artifact(artifact, args.max_delta, args.max_bc_ratio,
-                            args.max_status_frac, args.max_retry_frac)
+                            args.max_status_frac, args.max_retry_frac,
+                            args.max_recovery_err)
     if errors:
         for err in errors:
             print(f"FAIL: {err}", file=sys.stderr)
@@ -205,6 +245,8 @@ def main(argv=None) -> int:
           f"predictions_per_sec={artifact['predictions_per_sec']:.0f}, "
           f"status_frac={artifact['status_check_overhead_frac']:.4f}, "
           f"retry_frac={artifact['recovery_retry_overhead_frac']:.4f}, "
+          f"mixed_f32={artifact['loglik_delta_mixed_f32']:.3e}, "
+          f"recovery_err={artifact['mle_param_recovery_err_mixed_f32']:.3e}, "
           f"max-delta={args.max_delta:g})")
     return 0
 

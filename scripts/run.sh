@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Launcher for repro entry points: sets the allocator and the persistent
+# XLA compilation cache, then execs python with the given arguments.
+#
+#   scripts/run.sh -m benchmarks.run --quick --only tlr
+#   scripts/run.sh -m repro.analysis --target all --mesh cpu8 --shape mle_4k
+#
+# Why a wrapper instead of docs:
+#  - tcmalloc: glibc malloc serializes the large-page churn of tile
+#    generation across threads; tcmalloc's per-thread caches remove that
+#    contention.  We probe the usual install paths and LD_PRELOAD the
+#    first hit — silently skipped when absent (e.g. slim CI images), so
+#    the script never becomes the reason a run fails.
+#  - JAX_COMPILATION_CACHE_DIR: the quick bench and the lint CLI are
+#    compile-dominated; a persistent cache turns repeat invocations from
+#    minutes into seconds.  Respects a caller-set value.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+if [[ -z "${LD_PRELOAD:-}" ]]; then
+  for lib in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+             /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+             /usr/lib/libtcmalloc.so.4 \
+             /usr/lib/libtcmalloc_minimal.so.4; do
+    if [[ -e "$lib" ]]; then
+      export LD_PRELOAD="$lib"
+      break
+    fi
+  done
+fi
+
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$repo_root/.jax_cache}"
+mkdir -p "$JAX_COMPILATION_CACHE_DIR"
+
+export PYTHONPATH="$repo_root/src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python "$@"

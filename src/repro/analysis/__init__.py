@@ -1,32 +1,60 @@
 """SPMD-lint: static analysis for the distributed geostatistics stack.
 
-Two layers over one Finding/suppression model:
+Three layers over one Finding/suppression model:
 
-* ``spmdlint``  — jaxpr/HLO rules (R1-R5) over a lowerable: replicated
+* ``spmdlint``      — jaxpr/HLO rules (R1-R5) over a lowerable: replicated
   decomposition batches, missing/failed donation, densification, f32<->f64
   churn, dynamic-trip-count while loops.
-* ``astlint``   — AST rules (A1-A5) over src/repro/: tracer truthiness and
-  host casts, traced fori_loop bounds, host linalg, dense generators in
-  never-densify modules, raw warnings.warn fallbacks.
+* ``precisionlint`` — dtype-dataflow rules (P1-P5) that prove a declared
+  :class:`~repro.core.precision.PrecisionPolicy` holds over the jaxpr
+  (narrow value at a wide sink, wide value in a may-narrow region,
+  per-path convert churn, narrow logdet accumulation, undeclared dtypes).
+* ``astlint``       — AST rules (A1-A5) over src/repro/: tracer truthiness
+  and host casts, traced fori_loop bounds, host linalg, dense generators
+  in never-densify modules, raw warnings.warn fallbacks.
 
 CLI: ``python -m repro.analysis --target dist_tlr_pipeline_lowerable
---mesh pod256`` (jaxpr/HLO layer) or ``python -m repro.analysis --ast``
-(AST layer).  Waive a finding in source with
-``# spmdlint: ignore[R1] reason``.
-"""
-from .astlint import lint_source, lint_tree
-from .findings import (Finding, SuppressionIndex, count_by_severity,
-                       format_findings, max_severity, scan_suppressions,
-                       severity_at_least)
-from .spmdlint import (DEFAULT_CONFIG, LintConfig, LintReport,
-                       dtype_conversion_table, lint_compiled, lint_hlo_text,
-                       lint_jaxpr, lint_lowerable, summarize, tlr_dense_frac)
+--mesh pod256 --policy mixed_f32`` (jaxpr/HLO + precision layers),
+``python -m repro.analysis --ast`` (AST layer), or
+``python -m repro.analysis --diff`` (AST rules on changed files only —
+no jax import, the pre-commit fast path).  Waive a finding in source with
+``# spmdlint: ignore[R1] reason`` (same syntax for P and A rules).
 
-__all__ = [
-    "Finding", "SuppressionIndex", "count_by_severity", "format_findings",
-    "max_severity", "scan_suppressions", "severity_at_least",
-    "LintConfig", "LintReport", "DEFAULT_CONFIG", "dtype_conversion_table",
-    "lint_compiled", "lint_hlo_text", "lint_jaxpr", "lint_lowerable",
-    "tlr_dense_frac",
-    "summarize", "lint_source", "lint_tree",
-]
+Submodules are imported lazily (PEP 562) so the jax-free layers
+(``findings``, ``astlint``) stay importable without initializing jax.
+"""
+_EXPORTS = {
+    # findings (jax-free)
+    "Finding": "findings", "SuppressionIndex": "findings",
+    "count_by_severity": "findings", "format_findings": "findings",
+    "max_severity": "findings", "scan_suppressions": "findings",
+    "severity_at_least": "findings",
+    # astlint (jax-free)
+    "lint_source": "astlint", "lint_tree": "astlint",
+    # spmdlint (imports jax)
+    "DEFAULT_CONFIG": "spmdlint", "LintConfig": "spmdlint",
+    "LintReport": "spmdlint", "dtype_conversion_table": "spmdlint",
+    "lint_compiled": "spmdlint", "lint_hlo_text": "spmdlint",
+    "lint_jaxpr": "spmdlint", "lint_lowerable": "spmdlint",
+    "summarize": "spmdlint", "tlr_dense_frac": "spmdlint",
+    # precisionlint (imports jax via spmdlint)
+    "PrecisionPolicy": "precisionlint", "POLICIES": "precisionlint",
+    "resolve_policy": "precisionlint", "lint_precision": "precisionlint",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        modname = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(f".{modname}", __name__), name)
+
+
+def __dir__():
+    return __all__

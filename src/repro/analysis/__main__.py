@@ -1,15 +1,23 @@
 """SPMD-lint CLI.
 
   python -m repro.analysis --ast                     # AST layer over src/repro/
+  python -m repro.analysis --diff                    # AST rules, changed files only
   python -m repro.analysis --target dist_tlr_pipeline_lowerable --mesh pod256
+  python -m repro.analysis --target dist_tlr_pipeline_lowerable \
+      --mesh pod256 --policy mixed_f32               # + precision rules P1-P5
   python -m repro.analysis --target all --mesh cpu8 --shape mle_16k --json
 
 Exit status is nonzero when any unsuppressed finding reaches --fail-on
 (default: error), so the command doubles as the CI gate.
 
+``--diff`` is the pre-commit fast path: it lints only the AST rules on
+``src/repro/**/*.py`` files changed versus the merge-base (plus untracked
+ones) and never imports jax, so it finishes in well under a second.
+
 The mesh is pre-parsed from argv and XLA_FLAGS set BEFORE jax is imported:
 fake CPU device counts only take effect at backend init (same pattern as
-launch/dryrun.py).
+launch/dryrun.py).  Heavy imports (jax, the lowerable registry) happen
+inside main() so the --ast/--diff paths stay jax-free.
 """
 import os
 import sys
@@ -45,8 +53,6 @@ import argparse  # noqa: E402
 import json  # noqa: E402
 
 from .findings import format_findings, severity_at_least  # noqa: E402
-from .spmdlint import LintConfig, lint_lowerable  # noqa: E402
-from ..lowerables import build as build_lowerables, names as target_names  # noqa: E402
 
 
 def _make_mesh(name: str):
@@ -69,20 +75,98 @@ def _shapes() -> dict:
     return shapes
 
 
+def _repo_root() -> str:
+    # src/repro/analysis/__main__.py -> repo root is three levels above src/
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def _changed_files(root: str) -> list[str] | None:
+    """Paths (relative to repo root) changed vs the merge-base, plus
+    untracked files; None when no base can be resolved (caller falls back
+    to the whole tree — e.g. a CI checkout with no history)."""
+    import subprocess
+
+    def git(*a):
+        out = subprocess.run(["git", *a], cwd=root, capture_output=True,
+                             text=True, timeout=30)
+        if out.returncode != 0:
+            return None
+        return out.stdout.strip()
+
+    base = None
+    for ref in ("origin/main", "main", "HEAD~1"):
+        base = git("merge-base", "HEAD", ref)
+        if base:
+            break
+    if not base:
+        return None
+    changed = git("diff", "--name-only", "--diff-filter=d", base)
+    if changed is None:
+        return None
+    files = [ln for ln in changed.splitlines() if ln]
+    untracked = git("ls-files", "--others", "--exclude-standard")
+    if untracked:
+        files += [ln for ln in untracked.splitlines() if ln]
+    return sorted(set(files))
+
+
+def _run_diff(args) -> list:
+    """AST rules on changed src/repro/**/*.py files only (no jax import)."""
+    from .astlint import lint_source
+
+    root = args.ast_root or _repo_root()
+    src_repro = os.path.join(root, "src", "repro")
+    changed = _changed_files(root)
+    if changed is None:
+        print("diff: no merge-base (origin/main, main, HEAD~1) — "
+              "linting the whole tree", file=sys.stderr)
+        from .astlint import lint_tree
+        return lint_tree()
+    findings = []
+    n = 0
+    for rel in changed:
+        abs_path = os.path.join(root, rel)
+        if not rel.endswith(".py") or not abs_path.startswith(src_repro):
+            continue
+        if not os.path.isfile(abs_path):
+            continue
+        n += 1
+        with open(abs_path) as f:
+            source = f.read()
+        rel_repro = os.path.relpath(abs_path, src_repro)
+        findings += lint_source(source, rel_repro, abs_path=abs_path)
+    print(f"diff: linted {n} changed file(s) under src/repro/",
+          file=sys.stderr)
+    return findings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="SPMD-lint: jaxpr/HLO + AST static analysis")
+        description="SPMD-lint: jaxpr/HLO + precision + AST static analysis")
     ap.add_argument("--target", default=None,
-                    help="registered lowerable to lint (repro.lowerables: "
-                         f"{', '.join(target_names())}) or 'all'")
+                    help="registered lowerable to lint (see repro.lowerables)"
+                         " or 'all'")
     ap.add_argument("--mesh", default="cpu8",
                     help="pod256 | pod512 | host | cpuN (default cpu8)")
     ap.add_argument("--shape", default="mle_65k",
                     help="geostat shape name (default mle_65k; dev shapes "
                          "mle_4k/mle_16k lint in seconds)")
+    ap.add_argument("--policy", default=None,
+                    help="precision policy to certify (f64 | mixed_f32 | "
+                         "mixed_bf16): builds the target under it and arms "
+                         "the P1-P5 precision-flow rules")
+    ap.add_argument("--built-with", default=None, dest="built_with",
+                    help="build the target under this policy instead of "
+                         "--policy (lint policy unchanged) — e.g. "
+                         "--policy mixed_f32 --built-with f64 audits the "
+                         "unpoliced fp64 path for P2 narrowing candidates")
     ap.add_argument("--ast", action="store_true",
                     help="run the AST layer over src/repro/")
+    ap.add_argument("--diff", action="store_true",
+                    help="AST rules on files changed vs the merge-base only "
+                         "(pre-commit fast path; never imports jax)")
     ap.add_argument("--ast-root", default=None,
                     help="lint this tree instead of src/repro/ (paths are "
                          "interpreted relative to it for the traced/never-"
@@ -95,11 +179,23 @@ def main(argv=None) -> int:
                     choices=("info", "warning", "error"))
     args = ap.parse_args(argv)
 
-    if not args.ast and args.target is None:
-        ap.error("pass --target <lowerable> and/or --ast")
+    if not args.ast and not args.diff and args.target is None:
+        ap.error("pass --target <lowerable>, --ast, and/or --diff")
+    if args.policy is not None or args.built_with is not None:
+        from ..core.precision import POLICIES
+        for flag, val in (("--policy", args.policy),
+                          ("--built-with", args.built_with)):
+            if val is not None and val not in POLICIES:
+                ap.error(f"unknown {flag} {val!r} "
+                         f"(choose from {', '.join(sorted(POLICIES))})")
 
     findings = []
     reports = {}
+
+    if args.diff:
+        diff_findings = _run_diff(args)
+        findings += diff_findings
+        reports["diff"] = diff_findings
 
     if args.ast:
         from .astlint import lint_tree
@@ -108,6 +204,22 @@ def main(argv=None) -> int:
         reports["ast"] = ast_findings
 
     if args.target is not None:
+        from .spmdlint import LintConfig, lint_lowerable
+        from ..lowerables import build as build_lowerables, \
+            names as target_names
+        build_policy = args.built_with or args.policy
+        if args.policy is not None or build_policy is not None:
+            # f64 specs silently canonicalize to f32 without x64 — the
+            # lint would then certify a program that never runs wide.
+            import numpy as np
+
+            import jax
+            from ..core.precision import resolve_policy
+            for pname in {args.policy, build_policy} - {None}:
+                wide = np.dtype(resolve_policy(pname).wide_dtype)
+                if wide.itemsize > 4:
+                    jax.config.update("jax_enable_x64", True)
+                    break
         mesh = _make_mesh(args.mesh)
         shapes = _shapes()
         if args.shape not in shapes:
@@ -117,7 +229,8 @@ def main(argv=None) -> int:
         names = target_names() if args.target == "all" else (args.target,)
         for name in names:
             try:
-                cells = build_lowerables(name, shape, mesh)
+                cells = build_lowerables(name, shape, mesh,
+                                         dtype_policy=build_policy)
             except KeyError as e:
                 ap.error(str(e))
             for cell, low in cells.items():
@@ -127,6 +240,7 @@ def main(argv=None) -> int:
                     in_shardings=low.in_shardings,
                     donate_argnums=low.donate_argnums,
                     matrix_dim=low.matrix_dim,
+                    policy=args.policy,
                     config=low.config if low.config is not None
                     else LintConfig())
                 findings += report.findings
@@ -158,4 +272,4 @@ def main(argv=None) -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,223 @@
+"""Precision-lint: dtype-dataflow rules P1-P5 over a jaxpr (ROADMAP item 1).
+
+Given a :class:`~repro.core.precision.PrecisionPolicy` (wide dtype for the
+diagonal/POTRF/logdet spine, narrow dtype for off-diagonal U/V storage and
+the batched GEMM/QR/SVD work), walk the closed jaxpr and prove the policy
+holds:
+
+  P1  narrow value at a must-be-wide sink: the operand of a ``cholesky``
+      (POTRF) or the triangular matrix of a ``triangular_solve`` (TRSM)
+      is narrower than the policy's wide dtype.  The diagonal spine is
+      where TLR Cholesky loses accuracy first — error.
+  P2  wide value feeding a may-be-narrow region without a sanctioned
+      downcast: a ``qr``/``svd`` decomposition running on wide operands,
+      or a large batched ``dot_general`` whose operands are wide *without
+      originating from an up-cast of narrow storage* (the documented TRSM
+      / SYRK widening boundaries are up-casts and do not trip this).
+      Wasted bandwidth/MXU — warning.
+  P3  convert churn on one dataflow path: a ``convert_element_type`` whose
+      operand was itself just produced by a convert.  A -> B -> A round
+      trips are warnings (pure waste: the value moved through memory twice
+      for nothing); A -> B -> C chains are info.  Supersedes R4's flat
+      site table with per-path attribution — R4 still tabulates volume.
+  P4  accumulation narrower than operand policy: a ``reduce_sum`` over the
+      output of ``log`` (the logdet sum-of-logs pattern) in a dtype
+      narrower than wide — error (the classic silent fp32 logdet).
+  P5  policy-undeclared dtype: any float array at an equation output whose
+      dtype is neither the policy's wide nor narrow dtype — error (a
+      stray f16/bf16 creeping into an f64/f32 policy, or any narrow
+      value under the uniform ``f64`` policy).
+
+Findings carry the same source locations as the R rules, so
+``# spmdlint: ignore[P..] reason`` comments suppress them in place.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.precision import (PrecisionPolicy, POLICIES,  # noqa: F401
+                              resolve_policy)
+from .findings import Finding
+from .spmdlint import (DEFAULT_CONFIG, LintConfig, _aval_bytes, _eqn_source,
+                       _walk_eqns)
+
+# ops that pass a value through unchanged in dtype — the taint-lite
+# backward walk for P2 follows these to find the producing convert
+_PASSTHROUGH = ("transpose", "reshape", "broadcast_in_dim", "squeeze",
+                "expand_dims", "slice", "dynamic_slice", "rev", "copy",
+                "gather")
+
+_WIDE_SINKS = ("cholesky", "triangular_solve")   # P1: POTRF / TRSM
+_NARROW_DECOMPS = ("qr", "svd")                  # P2: recompress QR/core-SVD
+
+
+def _is_float(dtype) -> bool:
+    try:
+        return np.issubdtype(np.dtype(dtype), np.floating)
+    except Exception:
+        return False
+
+
+def _width(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+def _build_producers(jaxpr) -> dict:
+    """var -> producing eqn over the whole nested jaxpr tree (jaxpr vars
+    are unique objects, so one flat dict is safe across nesting)."""
+    producers = {}
+    for eqn, _ in _walk_eqns(jaxpr):
+        for out in eqn.outvars:
+            producers[out] = eqn
+    return producers
+
+
+def _producer(producers: dict, var):
+    """Producing eqn of ``var``, or None for Literals (unhashable — they
+    have no producer) and jaxpr inputs."""
+    try:
+        return producers.get(var)
+    except TypeError:
+        return None
+
+
+def _from_narrow_upcast(var, producers, wide_width: int, hops: int = 6) -> bool:
+    """True when ``var`` traces back (through dtype-preserving ops) to a
+    ``convert_element_type`` up-cast from a narrower float — i.e. the wide
+    value is a sanctioned widening of narrow storage, not native-wide."""
+    for _ in range(hops):
+        eqn = _producer(producers, var)
+        if eqn is None:
+            return False
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            src = eqn.invars[0].aval
+            return _is_float(src.dtype) and _width(src.dtype) < wide_width
+        if name not in _PASSTHROUGH:
+            return False
+        var = eqn.invars[0]
+    return False
+
+
+def lint_precision(closed_jaxpr, *, policy,
+                   config: LintConfig = DEFAULT_CONFIG) -> list[Finding]:
+    """Rules P1-P5 over one closed jaxpr under the given policy."""
+    policy = resolve_policy(policy)
+    if policy is None:
+        return []
+    wide, narrow = policy.wide_dtype, policy.narrow_dtype
+    wide_w = wide.itemsize
+    findings: list[Finding] = []
+    jaxpr = closed_jaxpr.jaxpr
+    producers = _build_producers(jaxpr)
+    seen: set[tuple] = set()
+
+    def emit(rule, severity, op, message, eqn, nbytes=0):
+        src_f, src_l = _eqn_source(eqn)
+        key = (rule, src_f, src_l, op, severity)
+        if key in seen:
+            return
+        seen.add(key)
+        findings.append(Finding(
+            rule=rule, severity=severity, op=op, bytes=nbytes,
+            source_file=src_f, source_line=src_l, message=message))
+
+    for eqn, depth in _walk_eqns(jaxpr):
+        name = eqn.primitive.name
+
+        # ---- P1: narrow operand at a must-be-wide sink --------------------
+        if name in _WIDE_SINKS:
+            aval = eqn.invars[0].aval       # matrix operand (POTRF A / TRSM L)
+            if _is_float(aval.dtype) and _width(aval.dtype) < wide_w:
+                emit("P1", "error", name,
+                     f"{name} runs on {aval.dtype}{list(aval.shape)} but "
+                     f"policy {policy.name!r} requires the diagonal "
+                     f"POTRF/TRSM spine in {policy.wide} — narrow value at "
+                     f"a must-be-wide sink", eqn, _aval_bytes(aval))
+
+        # ---- P2a: decomposition on wide operands in a may-narrow class ----
+        if name in _NARROW_DECOMPS and not policy.uniform:
+            aval = eqn.invars[0].aval
+            if _is_float(aval.dtype) and np.dtype(aval.dtype) == wide:
+                emit("P2", "warning", name,
+                     f"{name} runs on {aval.dtype}{list(aval.shape)} — "
+                     f"policy {policy.name!r} allows the recompress "
+                     f"QR/core-SVD in {policy.narrow}; downcast the stack "
+                     f"before decomposing (wasted bandwidth/MXU)", eqn,
+                     _aval_bytes(aval))
+
+        # ---- P2b: big wide pair-GEMM batch with no narrow origin ----------
+        if name == "dot_general" and not policy.uniform:
+            a, b = eqn.invars[0], eqn.invars[1]
+            nbytes = _aval_bytes(a.aval) + _aval_bytes(b.aval)
+            if (_is_float(a.aval.dtype) and _is_float(b.aval.dtype)
+                    and np.dtype(a.aval.dtype) == wide
+                    and np.dtype(b.aval.dtype) == wide
+                    and len(a.aval.shape) >= 3 and len(b.aval.shape) >= 3
+                    and nbytes >= config.convert_warn_bytes
+                    and not _from_narrow_upcast(a, producers, wide_w)
+                    and not _from_narrow_upcast(b, producers, wide_w)):
+                emit("P2", "warning", "dot_general",
+                     f"batched GEMM on native-{policy.wide} operands "
+                     f"({nbytes / 1e6:.6g} MB) — policy {policy.name!r} "
+                     f"allows the pair-GEMM batch in {policy.narrow}; "
+                     f"store U/V narrow so this runs at narrow width", eqn,
+                     nbytes)
+
+        # ---- P3: convert-of-convert (per-path churn) ----------------------
+        if name == "convert_element_type":
+            invar = eqn.invars[0]
+            prev = _producer(producers, invar)
+            if prev is not None and \
+                    prev.primitive.name == "convert_element_type":
+                a = prev.invars[0].aval.dtype
+                b = invar.aval.dtype
+                c = eqn.params.get("new_dtype")
+                if _is_float(a) and _is_float(b) and _is_float(c):
+                    nbytes = _aval_bytes(invar.aval)
+                    if np.dtype(a) == np.dtype(c):
+                        sev = ("warning"
+                               if nbytes >= config.convert_warn_bytes
+                               else "info")
+                        emit("P3", sev, f"convert {a}->{b}->{c}",
+                             f"round-trip convert {a}->{b}->{c} on one "
+                             f"dataflow path ({nbytes / 1e6:.6g} MB moved "
+                             f"twice for nothing) — keep the value in "
+                             f"{a} or fuse the consumer at {b}", eqn,
+                             nbytes)
+                    elif np.dtype(a) != np.dtype(b) != np.dtype(c):
+                        emit("P3", "info", f"convert {a}->{b}->{c}",
+                             f"convert chain {a}->{b}->{c} on one dataflow "
+                             f"path — convert once, directly to {c}", eqn,
+                             nbytes)
+
+        # ---- P4: narrow accumulation of a log reduction (logdet) ----------
+        if name == "reduce_sum":
+            operand = eqn.invars[0]
+            prev = _producer(producers, operand)
+            if prev is not None and prev.primitive.name == "log" and \
+                    _is_float(operand.aval.dtype) and \
+                    _width(operand.aval.dtype) < wide_w:
+                emit("P4", "error", "reduce_sum(log)",
+                     f"logdet accumulation (sum of logs) runs in "
+                     f"{operand.aval.dtype} but policy {policy.name!r} "
+                     f"requires accumulations in {policy.wide} — widen "
+                     f"the diagonal before the log-sum", eqn,
+                     _aval_bytes(operand.aval))
+
+        # ---- P5: policy-undeclared float dtype ----------------------------
+        for out in eqn.outvars:
+            aval = getattr(out, "aval", None)
+            if aval is None or len(getattr(aval, "shape", ())) < 1:
+                continue
+            if not _is_float(aval.dtype):
+                continue
+            dt = np.dtype(aval.dtype)
+            if dt != wide and dt != narrow:
+                emit("P5", "error", f"{name}:{dt}",
+                     f"{name} produces a {dt}{list(aval.shape)} value but "
+                     f"policy {policy.name!r} declares only "
+                     f"{policy.wide}/{policy.narrow} — undeclared dtype "
+                     f"at a traced site", eqn, _aval_bytes(aval))
+
+    return findings

@@ -417,6 +417,7 @@ def lint_lowerable(fn, specs, *, mesh=None, in_shardings=None,
                    donate_argnums=(), matrix_dim: int | None = None,
                    compiled=None, compile: bool = True,
                    config: LintConfig = DEFAULT_CONFIG,
+                   policy=None,
                    suppressions: SuppressionIndex | None = None
                    ) -> LintReport:
     """Run every rule over one lowerable; returns findings + gate metrics.
@@ -425,10 +426,15 @@ def lint_lowerable(fn, specs, *, mesh=None, in_shardings=None,
     cells); otherwise the lowerable is jitted with the given shardings and
     donations and compiled here.  ``matrix_dim`` arms the R3 densification
     rule (TLR lowerings only — the exact backend is dense by contract).
+    ``policy`` (a PrecisionPolicy or its name) arms the precision-flow
+    rules P1-P5 (precisionlint) over the same jaxpr.
     """
     closed = jax.make_jaxpr(fn)(*specs)
     findings = lint_jaxpr(closed, specs=specs, donate_argnums=donate_argnums,
                           matrix_dim=matrix_dim, config=config)
+    if policy is not None:
+        from .precisionlint import lint_precision
+        findings += lint_precision(closed, policy=policy, config=config)
     n_devices = int(mesh.devices.size) if mesh is not None else 1
     declared = sum(
         _aval_bytes(leaf)

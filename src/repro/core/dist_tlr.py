@@ -77,6 +77,7 @@ from ..distribution.compress_svd import (sharded_truncate_svd,
 from ..distribution.pair_qr import warn_fallback_once
 from .covariance import build_sigma_column, build_sigma_panel
 from .likelihood import LoglikResult
+from .precision import resolve_policy
 from .recovery import FactorStatus, init_status, sentinel_loglik
 from .tlr import (TLRMatrix, _constrain, apply_nugget, choose_tile_size,
                   indexed_scan, pair_panel_loop, panel_loop,
@@ -166,7 +167,8 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
                         max_rank: int = 0, nugget: float = 0.0,
                         gen: str = "pallas", d_spatial: int = 2, scale=None,
                         mesh=None, row_axes=("data",), layout=None,
-                        col_block: int = 1, shard_svd: bool = True):
+                        col_block: int = 1, shard_svd: bool = True,
+                        dtype_policy=None):
     """Build the fixed-kmax D/U/V layout straight from Morton-ordered
     locations, ``col_block`` column panels at a time (the distributed
     production path).
@@ -213,6 +215,11 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
         scale = jnp.max(params.sigma2) + nugget
     row = _row(row_axes)
     dtype = jnp.result_type(locs.dtype, params.sigma2.dtype, jnp.float32)
+    # Mixed precision (core.precision): diagonal tiles keep the wide
+    # generated dtype; off-diagonal U/V storage (and its truncation SVD)
+    # runs at the policy's narrow dtype.  No policy: one uniform dtype.
+    policy = resolve_policy(dtype_policy)
+    uv_dtype = dtype if policy is None else jnp.dtype(policy.narrow_dtype)
     rows_idx = jnp.arange(T)
     svd_axes = pair_axis(mesh, row_axes)
     svd_mesh = mesh if (shard_svd and mesh is not None and svd_axes) else None
@@ -226,7 +233,7 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
                     locs, params, layout=layout, nb=nb, nbl=nbl, T=T, cb=cb,
                     tol=tol, kmax=kmax, nugget=nugget, gen=gen,
                     d_spatial=d_spatial, scale=scale, mesh=mesh,
-                    row_axes=row_axes, dtype=dtype)
+                    row_axes=row_axes, dtype=dtype, uv_dtype=uv_dtype)
             warn_fallback_once(
                 "compress-layout-shards",
                 f"dist_compress_tiles: layout was built for n_shards="
@@ -236,15 +243,15 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
                 "cliff); build the layout with pair_shards(mesh, row_axes)")
             svd_mesh = None
         dspec, pspec, rspec = _pair_specs(mesh, row_axes)
-        u = jnp.zeros((layout.length, nb, kmax), dtype)
-        v = jnp.zeros((layout.length, nb, kmax), dtype)
+        u = jnp.zeros((layout.length, nb, kmax), uv_dtype)
+        v = jnp.zeros((layout.length, nb, kmax), uv_dtype)
         ranks = jnp.zeros((layout.length,), jnp.int32)
         pos = jnp.asarray(layout.pos)
     else:
         dspec = P(row, None, None)
         uvspec = P(row, "model", None, None)
-        u = jnp.zeros((T, T, nb, kmax), dtype)
-        v = jnp.zeros((T, T, nb, kmax), dtype)
+        u = jnp.zeros((T, T, nb, kmax), uv_dtype)
+        v = jnp.zeros((T, T, nb, kmax), uv_dtype)
         ranks = jnp.zeros((T, T), jnp.int32)
     diag = jnp.zeros((T, nb, nb), dtype)
 
@@ -255,9 +262,11 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
                                    block=nb)                  # (m, cb*nb)
         panel = _constrain(panel, mesh, P(row, "model"))
         tiles = panel.reshape(T, nb, cb, nb).transpose(2, 0, 1, 3)
-        U, V, R = sharded_truncate_svd(tiles.reshape(cb * T, nb, nb), tol,
-                                       kmax, scale, mesh=svd_mesh,
-                                       axes=svd_axes)
+        # SVD input down-cast to U/V storage dtype; diagonal tiles below
+        # read the un-cast (wide) panel.
+        U, V, R = sharded_truncate_svd(
+            tiles.reshape(cb * T, nb, nb).astype(u.dtype), tol,
+            kmax, scale, mesh=svd_mesh, axes=svd_axes)
         U = U.reshape(cb, T, nb, kmax)
         V = V.reshape(cb, T, nb, kmax)
         R = R.reshape(cb, T)
@@ -298,7 +307,7 @@ def dist_compress_tiles(locs, params, *, tile_size: int = 0, tol: float = 1e-7,
 
 def _compress_tiles_pair_sharded(locs, params, *, layout: PairLayout, nb, nbl,
                                  T, cb, tol, kmax, nugget, gen, d_spatial,
-                                 scale, mesh, row_axes, dtype):
+                                 scale, mesh, row_axes, dtype, uv_dtype=None):
     """Owned-slot generator-direct compression: every device generates and
     SVD-truncates only the strict-lower tiles whose block-cyclic pair slots
     it owns, straight into its local shard — *slot-major*.
@@ -380,8 +389,10 @@ def _compress_tiles_pair_sharded(locs, params, *, layout: PairLayout, nb, nbl,
                       out_specs=(pspec, pspec, rspec),
                       check_rep=False)
 
-    u = jnp.zeros((layout.length, nb, kmax), dtype)
-    v = jnp.zeros((layout.length, nb, kmax), dtype)
+    if uv_dtype is None:
+        uv_dtype = dtype
+    u = jnp.zeros((layout.length, nb, kmax), uv_dtype)
+    v = jnp.zeros((layout.length, nb, kmax), uv_dtype)
     ranks = jnp.zeros((layout.length,), jnp.int32)
     diag = jnp.zeros((T, nb, nb), dtype)
 
@@ -760,7 +771,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                     block_cyclic: bool = False, layout: PairLayout = None,
                     col_block: int = 1, shard_recompress: bool = True,
                     shard_svd: bool = True,
-                    track_status: bool = True) -> LoglikResult:
+                    track_status: bool = True,
+                    dtype_policy=None) -> LoglikResult:
     """Distributed TLR likelihood (Eq. 1 through the sharded TLR factor).
 
     Two entry modes:
@@ -789,6 +801,10 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
     ``LoglikResult.status.ok`` is a traced scalar; on breakdown the loglik
     is the finite sentinel, never NaN.  ``track_status=False`` restores
     the bare 4-field result (the A/B overhead baseline in bench_tlr).
+    ``dtype_policy`` (name or :class:`~repro.core.precision.PrecisionPolicy`)
+    stores off-diagonal U/V at the policy's narrow dtype during the
+    from-tiles compression; the factorization widens at the TRSM/SYRK
+    boundaries (see core.tlr) and the logdet stays wide.
     """
     if isinstance(t, PairTLR):
         block_cyclic = True
@@ -811,7 +827,8 @@ def dist_tlr_loglik(t=None, z=None, *, locs=None, params=None,
                                 max_rank=max_rank, nugget=nugget, gen=gen,
                                 d_spatial=d_spatial, scale=scale, mesh=mesh,
                                 row_axes=row_axes, layout=layout,
-                                col_block=col_block, shard_svd=shard_svd)
+                                col_block=col_block, shard_svd=shard_svd,
+                                dtype_policy=dtype_policy)
     elif t is None:
         raise ValueError("pass a TLRMatrix/PairTLR, or locs/params with "
                          "from_tiles=True")
@@ -866,7 +883,8 @@ def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
                        mesh, dtype=jnp.float32, row_axes=("data",),
                        super_panels: int = 1, block_cyclic: bool = False,
                        return_factor: bool = False,
-                       shard_recompress: bool = True):
+                       shard_recompress: bool = True,
+                       dtype_policy=None):
     """(fn, input specs) for the factorize + solve stage from pre-compressed
     tiles.  Real per-tile ranks are threaded as an input — consumers must not
     fabricate them (rank-0 strict-lower tiles would misread as empty; see the
@@ -884,9 +902,19 @@ def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
     ``shard_recompress`` (block_cyclic only) shards the recompress QR/SVD
     over the pair axis via shard_map — the production setting; False
     compiles the PR-3 replicated-batch form so the dry-run can report the
-    per-device recompress temp drop."""
+    per-device recompress temp drop.
+
+    ``dtype_policy`` splits the input spec dtypes the way the mixed
+    pipeline stores them: diag/z at the policy's wide dtype, U/V at its
+    narrow dtype (``dtype`` is ignored when a policy is given)."""
     row = _row(row_axes)
     T, nb = n_tiles, tile_size
+    policy = resolve_policy(dtype_policy)
+    if policy is None:
+        wide_dtype = uv_dtype = dtype
+    else:
+        wide_dtype = jnp.dtype(policy.wide_dtype)
+        uv_dtype = jnp.dtype(policy.narrow_dtype)
 
     if block_cyclic:
         layout = pair_layout(T, pair_shards(mesh, row_axes))
@@ -906,11 +934,11 @@ def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
                 return res, (diag_l, u, v, ranks)
             return res
 
-        specs = (jax.ShapeDtypeStruct((T, nb, nb), dtype),
-                 jax.ShapeDtypeStruct((layout.length, nb, kmax), dtype),
-                 jax.ShapeDtypeStruct((layout.length, nb, kmax), dtype),
+        specs = (jax.ShapeDtypeStruct((T, nb, nb), wide_dtype),
+                 jax.ShapeDtypeStruct((layout.length, nb, kmax), uv_dtype),
+                 jax.ShapeDtypeStruct((layout.length, nb, kmax), uv_dtype),
                  jax.ShapeDtypeStruct((layout.length,), jnp.int32),
-                 jax.ShapeDtypeStruct((T * nb,), dtype))
+                 jax.ShapeDtypeStruct((T * nb,), wide_dtype))
         return fn, specs
 
     def fn(diag, u, v, ranks, z):
@@ -926,11 +954,11 @@ def dist_tlr_lowerable(n_tiles: int, tile_size: int, kmax: int, *, tol: float,
             return res, (diag_l, u, v, ranks)
         return res
 
-    specs = (jax.ShapeDtypeStruct((T, nb, nb), dtype),
-             jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
-             jax.ShapeDtypeStruct((T, T, nb, kmax), dtype),
+    specs = (jax.ShapeDtypeStruct((T, nb, nb), wide_dtype),
+             jax.ShapeDtypeStruct((T, T, nb, kmax), uv_dtype),
+             jax.ShapeDtypeStruct((T, T, nb, kmax), uv_dtype),
              jax.ShapeDtypeStruct((T, T), jnp.int32),
-             jax.ShapeDtypeStruct((T * nb,), dtype))
+             jax.ShapeDtypeStruct((T * nb,), wide_dtype))
     return fn, specs
 
 
@@ -978,22 +1006,28 @@ def dist_tlr_compress_lowerable(n: int, p: int, params, *, tile_size: int,
                                 max_rank: int, tol: float, nugget: float = 0.0,
                                 gen: str = "xla", mesh, dtype=jnp.float32,
                                 row_axes=("data",), block_cyclic: bool = False,
-                                col_block: int = 1, shard_svd: bool = True):
+                                col_block: int = 1, shard_svd: bool = True,
+                                dtype_policy=None):
     """GEN + compress: locations -> sharded fixed-kmax D/U/V/ranks (grid or
     block-cyclic pair-major).  ``shard_svd=False`` compiles the PR-4
     replicated truncation batch so the dry-run can report the per-device
-    compress temp drop the sharding buys."""
+    compress temp drop the sharding buys.  ``dtype_policy``: generate wide,
+    store U/V narrow (locations enter at the policy's wide dtype)."""
     layout = None
     if block_cyclic:
         m = n * p
         nb = choose_tile_size(m, tile_size, multiple_of=p)
         layout = pair_layout(m // nb, pair_shards(mesh, row_axes))
+    policy = resolve_policy(dtype_policy)
+    if policy is not None:
+        dtype = jnp.dtype(policy.wide_dtype)
 
     def fn(locs):
         t = dist_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
                                 max_rank=max_rank, nugget=nugget, gen=gen,
                                 mesh=mesh, row_axes=row_axes, layout=layout,
-                                col_block=col_block, shard_svd=shard_svd)
+                                col_block=col_block, shard_svd=shard_svd,
+                                dtype_policy=dtype_policy)
         return t.diag, t.u, t.v, t.ranks
 
     return fn, (jax.ShapeDtypeStruct((n, 2), dtype),)
@@ -1006,9 +1040,15 @@ def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                 block_cyclic: bool = False,
                                 col_block: int = 1,
                                 shard_recompress: bool = True,
-                                shard_svd: bool = True):
+                                shard_svd: bool = True,
+                                dtype_policy=None):
     """End-to-end generator-direct pipeline: (locs, z) -> GEN -> compress ->
-    factorize -> loglik, with real Matérn tiles (no random-spec stand-ins)."""
+    factorize -> loglik, with real Matérn tiles (no random-spec stand-ins).
+    ``dtype_policy``: locations/observations enter at the policy's wide
+    dtype; U/V storage and the truncation SVDs run narrow."""
+    policy = resolve_policy(dtype_policy)
+    if policy is not None:
+        dtype = jnp.dtype(policy.wide_dtype)
 
     def fn(locs, z):
         return dist_tlr_loglik(None, z, locs=locs, params=params,
@@ -1019,7 +1059,8 @@ def dist_tlr_pipeline_lowerable(n: int, p: int, params, *, tile_size: int,
                                block_cyclic=block_cyclic,
                                col_block=col_block,
                                shard_recompress=shard_recompress,
-                               shard_svd=shard_svd)
+                               shard_svd=shard_svd,
+                               dtype_policy=dtype_policy)
 
     specs = (jax.ShapeDtypeStruct((n, 2), dtype),
              jax.ShapeDtypeStruct((n * p,), dtype))

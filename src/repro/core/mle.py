@@ -56,6 +56,13 @@ class MLEConfig:
     # (distribution/compress_svd.py).  Only read by the dist_tlr path; on a
     # single device (mesh=None) the replicated batch runs either way.
     shard_svd: bool = True
+    # Mixed-precision storage policy for the TLR backends
+    # (core/precision.py): None keeps one uniform dtype; "mixed_f32" /
+    # "mixed_bf16" store off-diagonal U/V (and run their truncation SVDs)
+    # at the narrow dtype while diagonal tiles, POTRF/TRSM and the logdet
+    # stay wide.  Certify a policy with
+    # ``python -m repro.analysis --target ... --policy <name>``.
+    dtype_policy: str | None = None
     gen: str = "pallas"             # tile generator: pallas half-integer fast
                                     # path (per-pair XLA fallback) | xla
     tile_size: int = 0              # 0 -> auto (~sqrt(pn))
@@ -172,12 +179,14 @@ def _backend_loglik(dists, z, params: MaternParams, cfg: MLEConfig, locs=None,
                                    tol=cfg.tlr_tol,
                                    super_panels=cfg.super_panels,
                                    block_cyclic=cfg.block_cyclic,
-                                   shard_svd=cfg.shard_svd)
+                                   shard_svd=cfg.shard_svd,
+                                   dtype_policy=cfg.dtype_policy)
         from .tlr import tlr_loglik
         return tlr_loglik(dists, z, params, tol=cfg.tlr_tol,
                           max_rank=cfg.tlr_max_rank, tile_size=cfg.tile_size,
                           nugget=nugget, locs=locs,
-                          from_tiles=cfg.tlr_from_tiles, gen=cfg.gen)
+                          from_tiles=cfg.tlr_from_tiles, gen=cfg.gen,
+                          dtype_policy=cfg.dtype_policy)
     if cfg.backend == "dst":
         from .dst import dst_loglik
         return dst_loglik(dists, z, params, keep_fraction=cfg.dst_keep_fraction,

@@ -1,0 +1,79 @@
+"""Dtype policies for the mixed-precision TLR path (ROADMAP item 1).
+
+A :class:`PrecisionPolicy` names the two dtypes of the mixed pipeline and
+is the single contract shared by the numerics (``tlr_compress_tiles`` /
+``dist_tlr_loglik`` thread it into tile storage) and the analyzer
+(``repro.analysis.precisionlint`` proves it holds over the jaxpr):
+
+* **wide** sites must keep the policy's wide dtype: diagonal tiles, the
+  POTRF/TRSM panel solves on diagonal blocks, the logdet accumulation,
+  and the final log-likelihood reduction.
+* **narrow** sites may store/compute in the narrow dtype: off-diagonal
+  U/V factors, the pair-GEMM batch, and the recompress QR / core-SVD.
+
+Widening happens at exactly two documented boundaries — the TRSM panel
+solve (V up-cast in, result down-cast back to storage) and the SYRK/GEMM
+diagonal update (jnp promotion against the wide diagonal) — so a uniform
+policy (``wide == narrow``) makes every cast a no-op and reproduces the
+fp64 path bit-for-bit.
+
+This module is numpy-only on purpose: the analyzer's fast paths and the
+CLI import it without pulling jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        import ml_dtypes  # ships with jax; registers the extension dtype
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """What must stay wide and what may narrow, as two dtype names."""
+
+    name: str
+    wide: str = "float64"      # diag tiles, POTRF/TRSM, logdet, loglik
+    narrow: str = "float64"    # U/V storage, pair-GEMM batch, recompress
+
+    @property
+    def wide_dtype(self) -> np.dtype:
+        return _np_dtype(self.wide)
+
+    @property
+    def narrow_dtype(self) -> np.dtype:
+        return _np_dtype(self.narrow)
+
+    @property
+    def uniform(self) -> bool:
+        """True when narrowing is disabled (every cast is a no-op)."""
+        return self.wide_dtype == self.narrow_dtype
+
+
+POLICIES: dict[str, PrecisionPolicy] = {
+    # the paper's precision: everything fp64 (the certified baseline)
+    "f64": PrecisionPolicy("f64", "float64", "float64"),
+    # fp32 off-diagonal storage + batched GEMM/QR/SVD, fp64 spine
+    "mixed_f32": PrecisionPolicy("mixed_f32", "float64", "float32"),
+    # bf16 off-diagonal tier for TPU MXU; same fp64 spine
+    "mixed_bf16": PrecisionPolicy("mixed_bf16", "float64", "bfloat16"),
+}
+
+
+def resolve_policy(policy) -> PrecisionPolicy | None:
+    """None | name | PrecisionPolicy -> PrecisionPolicy (None passes through)."""
+    if policy is None or isinstance(policy, PrecisionPolicy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise KeyError(
+            f"unknown dtype policy {policy!r} "
+            f"(choose from {', '.join(sorted(POLICIES))})") from None

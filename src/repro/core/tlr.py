@@ -52,6 +52,7 @@ from ..distribution.compress_svd import svd_truncate_batch
 from ..distribution.pair_qr import sharded_recompress
 from .covariance import MaternParams, build_sigma, build_sigma_panel
 from .likelihood import LoglikResult
+from .precision import resolve_policy
 from .recovery import FactorStatus, init_status, sentinel_loglik
 
 
@@ -133,7 +134,9 @@ def choose_tile_size(m: int, target: int = 0, multiple_of: int = 1) -> int:
 def _truncate_svd(u, s, vt, tol: float, kmax: int, scale: float):
     """Zero-pad a truncated SVD to kmax columns; returns (U, V, rank)."""
     k = s.shape[0]
-    keep = s > (tol * scale)
+    # threshold in s's dtype: under a mixed policy s is narrow and a wide
+    # traced scale would otherwise promote the comparison (convert churn)
+    keep = s > jnp.asarray(tol * scale, dtype=s.dtype)
     rank = jnp.minimum(jnp.sum(keep), kmax)
     idx = jnp.arange(min(k, kmax))
     mask = (idx < rank)[None, :]
@@ -148,7 +151,7 @@ def _truncate_svd(u, s, vt, tol: float, kmax: int, scale: float):
 
 def tlr_compress(sigma, tile_size: int = 0, tol: float = 1e-7,
                  max_rank: int = 0, scale=None,
-                 multiple_of: int = 1) -> TLRMatrix:
+                 multiple_of: int = 1, dtype_policy=None) -> TLRMatrix:
     """Compress a dense SPD matrix to TLR (validation path).
 
     The production path compresses tiles straight from the generator without
@@ -157,6 +160,9 @@ def tlr_compress(sigma, tile_size: int = 0, tol: float = 1e-7,
     the matrix's diagonal scale, matching HiCMA's fixed-accuracy mode.
     ``multiple_of`` constrains the auto tile size the same way the tiles
     path does (pass p so both paths land on the same tile grid).
+    ``dtype_policy`` stores the off-diagonal U/V factors (and runs their
+    truncation SVD) in the policy's narrow dtype; diagonal tiles keep the
+    generated (wide) dtype — see core.precision.
     """
     sigma = jnp.asarray(sigma)
     m = sigma.shape[0]
@@ -171,12 +177,14 @@ def tlr_compress(sigma, tile_size: int = 0, tol: float = 1e-7,
     tiles = sigma.reshape(T, nb, T, nb).transpose(0, 2, 1, 3)  # (T,T,nb,nb)
     diag = jnp.stack([tiles[t, t] for t in range(T)])
 
-    u = jnp.zeros((T, T, nb, kmax), sigma.dtype)
-    v = jnp.zeros((T, T, nb, kmax), sigma.dtype)
+    policy = resolve_policy(dtype_policy)
+    uv_dtype = sigma.dtype if policy is None else policy.narrow_dtype
+    u = jnp.zeros((T, T, nb, kmax), uv_dtype)
+    v = jnp.zeros((T, T, nb, kmax), uv_dtype)
     ranks = jnp.zeros((T, T), jnp.int32)
     il, jl = np.tril_indices(T, k=-1)
     if len(il):
-        low = tiles[il, jl]                                  # (L, nb, nb)
+        low = tiles[il, jl].astype(uv_dtype)                 # (L, nb, nb)
         U, V, R = svd_truncate_batch(low, tol, kmax, scale)
         u = u.at[il, jl].set(U)
         v = v.at[il, jl].set(V)
@@ -239,7 +247,8 @@ def generate_tiles(locs, params: MaternParams, tile_size: int = 0,
 def tlr_compress_tiles(locs, params: MaternParams, tile_size: int = 0,
                        tol: float = 1e-7, max_rank: int = 0,
                        nugget: float = 0.0, gen: str = "pallas",
-                       d_spatial: int = 2, scale=None) -> TLRMatrix:
+                       d_spatial: int = 2, scale=None,
+                       dtype_policy=None) -> TLRMatrix:
     """Generator-direct TLR compression (the production path, §5.3).
 
     Equivalent to ``tlr_compress(build_sigma(locs, params, "I", nugget))`` to
@@ -250,6 +259,13 @@ def tlr_compress_tiles(locs, params: MaternParams, tile_size: int = 0,
     nugget lands on diagonal tiles only — exactly where ``build_sigma`` puts
     it.  ``scale`` (threshold reference) defaults to max(sigma2) + nugget,
     which equals the dense path's max |diag(Sigma)|.
+
+    ``dtype_policy`` (a core.precision policy or name) is the mixed-
+    precision entry point: off-diagonal panels are down-cast to the
+    policy's narrow dtype *before* their truncation SVD and U/V are stored
+    narrow, while diagonal tiles keep the generated (wide) dtype — the
+    downstream factorization adapts to the storage dtypes, widening only
+    at the documented TRSM/SYRK boundaries.
     """
     diag, lower, nb, T = generate_tiles(locs, params, tile_size=tile_size,
                                         nugget=nugget, gen=gen,
@@ -260,11 +276,13 @@ def tlr_compress_tiles(locs, params: MaternParams, tile_size: int = 0,
     if scale is None:
         scale = jnp.max(params.sigma2) + nugget
 
-    u = jnp.zeros((T, T, nb, kmax), diag.dtype)
-    v = jnp.zeros((T, T, nb, kmax), diag.dtype)
+    policy = resolve_policy(dtype_policy)
+    uv_dtype = diag.dtype if policy is None else policy.narrow_dtype
+    u = jnp.zeros((T, T, nb, kmax), uv_dtype)
+    v = jnp.zeros((T, T, nb, kmax), uv_dtype)
     ranks = jnp.zeros((T, T), jnp.int32)
     for j, tiles in enumerate(lower):
-        U, V, R = svd_truncate_batch(tiles, tol, kmax, scale)
+        U, V, R = svd_truncate_batch(tiles.astype(uv_dtype), tol, kmax, scale)
         u = u.at[j + 1:, j].set(U)
         v = v.at[j + 1:, j].set(V)
         ranks = ranks.at[j + 1:, j].set(R)
@@ -278,7 +296,7 @@ def tlr_to_dense(t: TLRMatrix, symmetric: bool = True) -> jax.Array:
     for i in range(T):
         out = out.at[i * nb:(i + 1) * nb, i * nb:(i + 1) * nb].set(t.diag[i])
         for j in range(i):
-            block = t.u[i, j] @ t.v[i, j].T
+            block = (t.u[i, j] @ t.v[i, j].T).astype(out.dtype)
             out = out.at[i * nb:(i + 1) * nb, j * nb:(j + 1) * nb].set(block)
             if symmetric:
                 out = out.at[j * nb:(j + 1) * nb, i * nb:(i + 1) * nb].set(block.T)
@@ -391,7 +409,9 @@ def _recompress_parts(u1, v1, u2, v2, tol, scale):
     cu, cs, cvt = _core_svd(core)
     # cs is sorted descending, so thresholding the first kmax values gives
     # min(#kept, kmax) — the same rank the unbatched form reports.
-    mask = (cs[..., :kmax] > tol * scale)
+    # Threshold in cs's dtype: a wide traced scale must not promote the
+    # narrow recompress spectrum (convert churn inside the panel loop).
+    mask = (cs[..., :kmax] > jnp.asarray(tol * scale, dtype=cs.dtype))
     s_m = jnp.where(mask, cs[..., :kmax], 0.0)
     unew = jnp.einsum("...nk,...k->...nk", qu @ cu[..., :kmax], s_m)
     vnew = qv @ jnp.swapaxes(cvt[..., :kmax, :], -1, -2)
@@ -477,8 +497,12 @@ def tlr_panel_body(k, diag, u, v, ranks, status=None, *, tol, scale,
     row_is_k = (rows == k)[:, None, None]
     # ---- TRSM on panel column k (V only; U untouched — §5.3).
     vk = lax.dynamic_index_in_dim(v, k, 1, keepdims=False)       # (T, nb, kmax)
+    # TRSM widening boundary: the solve runs against the wide diagonal
+    # factor and the result is stored back at the (possibly narrow) U/V
+    # storage dtype.  Uniform-dtype policies make both casts no-ops.
     vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
-        lkk, b, left_side=True, lower=True))(vk)
+        lkk, b, left_side=True, lower=True))(
+        vk.astype(lkk.dtype)).astype(vk.dtype)
     below = (rows > k)[:, None, None]
     vk = jnp.where(below, vk_solved, vk)
     v = lax.dynamic_update_index_in_dim(v, vk, k, 1)
@@ -612,8 +636,10 @@ def tlr_panel_body_bc(k, diag, up, vp, ranks, status=None, *, layout, tol,
     vk = vp.at[pcol].get(mode="fill", fill_value=0.0)        # (T, nb, kmax)
     uk = up.at[pcol].get(mode="fill", fill_value=0.0)
     # ---- TRSM on panel column k (V only; U untouched — §5.3).
+    # TRSM widening boundary: solve wide against L_kk, store back narrow.
     vk_solved = jax.vmap(lambda b: lax.linalg.triangular_solve(
-        lkk, b, left_side=True, lower=True))(vk)
+        lkk, b, left_side=True, lower=True))(
+        vk.astype(lkk.dtype)).astype(vk.dtype)
     vk = jnp.where(below, vk_solved, vk)
     vp = vp.at[pcol].set(vk, mode="drop")  # OOB slots (i <= k) are dropped
     # ---- SYRK onto trailing diagonal tiles i > k: D_i -= U (V^T V) U^T.
@@ -791,7 +817,8 @@ def tlr_loglik_from_matrix(t: TLRMatrix, z, tol: float = 1e-9,
 def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
                max_rank: int = 64, tile_size: int = 0,
                nugget: float = 0.0, *, locs=None, from_tiles: bool = False,
-               gen: str = "pallas", track_status: bool = True) -> LoglikResult:
+               gen: str = "pallas", track_status: bool = True,
+               dtype_policy=None) -> LoglikResult:
     """End-to-end TLR likelihood: GEN -> compress -> TLR Cholesky -> solve.
 
     Locations must be Morton-ordered by the caller for good rank decay.
@@ -808,7 +835,7 @@ def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
         scale = jnp.max(params.sigma2) + nugget
         t = tlr_compress_tiles(locs, params, tile_size=tile_size, tol=tol,
                                max_rank=max_rank, nugget=nugget, gen=gen,
-                               scale=scale)
+                               scale=scale, dtype_policy=dtype_policy)
     else:
         # spmdlint: ignore[A4] from_tiles=False is the dense validation path (small n, tests only)
         sigma = build_sigma(None, params, representation="I", nugget=nugget,
@@ -817,7 +844,7 @@ def tlr_loglik(dists, z, params: MaternParams, tol: float = 1e-7,
         # multiple_of=p keeps the auto tile grid identical to the tiles path.
         t = tlr_compress(sigma, tile_size=tile_size, tol=tol,
                          max_rank=max_rank, scale=scale,
-                         multiple_of=params.p)
+                         multiple_of=params.p, dtype_policy=dtype_policy)
     return tlr_loglik_from_matrix(t, z, tol=tol, scale=scale,
                                   track_status=track_status)
 

@@ -324,6 +324,13 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
         tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
         block_cyclic=cfg.block_cyclic, shard_svd=True)
+    # The mixed-precision production candidate (README "Precision policy"):
+    # same sharded compress with U/V + truncation SVD narrow under mixed_f32.
+    comp_mx_fn, comp_mx_specs = dist_tlr_compress_lowerable(
+        shape.n_locations, shape.p, params, tile_size=nb, max_rank=kmax,
+        tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
+        block_cyclic=cfg.block_cyclic, shard_svd=True,
+        dtype_policy="mixed_f32")
 
     locs_sh = (NamedSharding(mesh, P(row, None)),)
     cells = dict(
@@ -331,6 +338,8 @@ def tlr_phase_reports(cfg: GeoStatConfig, shape, mesh) -> dict:
         gen_compress=(comp_fn, comp_specs, locs_sh, t_tiles, ()),
         gen_compress_sharded=(comp_sh_fn, comp_sh_specs, locs_sh, t_tiles,
                               ()),
+        gen_compress_mixed_f32=(comp_mx_fn, comp_mx_specs, locs_sh, t_tiles,
+                                ()),
     )
     for name, bc, shard_qr in (("factorize_masked", False, True),
                                ("factorize_bc", True, True),
@@ -481,6 +490,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
     if phases is not None:
         rec["tlr_phases"] = phases
         for name in ("gen", "gen_compress", "gen_compress_sharded",
+                     "gen_compress_mixed_f32",
                      "compress_only", "factorize_masked", "factorize_bc",
                      "factorize_bc_repl", "serve_fit", "serve_predict"):
             ph = phases[name]
@@ -516,6 +526,14 @@ def run_cell(arch_name: str, shape_name: str, mesh_name: str,
               f"{ct['gen_tiles_owned']} vs per-column candidate="
               f"{ct['gen_tiles_candidate']} "
               f"(x{ct['gen_shrink']:.2f} fewer, slot-major sweep)")
+        mx = phases["gen_compress_mixed_f32"]
+        mdrop = (phases["gen_compress_sharded"]["temp_bytes"] /
+                 max(mx["temp_bytes"], 1))
+        # Phase-local ratio only: the compress cell pays the GEN-wide
+        # down-cast copy, the pipeline-level win shows up in BENCH_tlr.json
+        # (peak_temp_bytes.pipeline_mixed_f32 < pipeline_compress_sharded).
+        print(f"tlr_mixed_precision compress temp={mx['temp_bytes']:.4g}"
+              f"/device (fp64/mixed ratio {mdrop:.2f}x; policy=mixed_f32)")
         sf, sp = phases["serve_fit"], phases["serve_predict"]
         print(f"tlr_serving fit temp={sf['temp_bytes']:.4g}/device "
               f"decode temp={sp['temp_bytes']:.4g}/device "

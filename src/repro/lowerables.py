@@ -49,13 +49,24 @@ def names() -> tuple:
     return tuple(_BUILDERS)
 
 
-def build(name: str, shape, mesh) -> dict:
+def build(name: str, shape, mesh, dtype_policy=None) -> dict:
     """Build one registered target: ``{cell_name: Lowerable}`` (single-cell
-    targets key on their own name)."""
+    targets key on their own name).  ``dtype_policy`` (a
+    :mod:`repro.core.precision` policy name) builds the target under that
+    mixed-precision storage contract; targets whose builder does not take
+    the kwarg reject a non-None policy with KeyError."""
     if name not in _BUILDERS:
         raise KeyError(f"unknown lowerable target {name!r} "
                        f"(registered: {', '.join(sorted(_BUILDERS))})")
-    out = _BUILDERS[name](shape, mesh)
+    builder = _BUILDERS[name]
+    if dtype_policy is not None:
+        import inspect
+        if "dtype_policy" not in inspect.signature(builder).parameters:
+            raise KeyError(f"target {name!r} does not support a dtype "
+                           "policy (--policy / --built-with)")
+        out = builder(shape, mesh, dtype_policy=dtype_policy)
+    else:
+        out = builder(shape, mesh)
     if isinstance(out, Lowerable):
         return {name: out}
     return dict(out)
@@ -70,12 +81,23 @@ def _row_axes(mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
-def _params():
+def _params(dtype=None):
     import jax.numpy as jnp
 
     from .core.covariance import MaternParams
     return MaternParams.bivariate(a=0.09, nu11=0.5, nu22=2.5, beta=0.5,
-                                  dtype=jnp.float32)
+                                  dtype=jnp.float32 if dtype is None
+                                  else dtype)
+
+
+def _policy_wide(dtype_policy):
+    """Policy's wide dtype as a jnp dtype, or None without a policy."""
+    if dtype_policy is None:
+        return None
+    import jax.numpy as jnp
+
+    from .core.precision import resolve_policy
+    return jnp.dtype(resolve_policy(dtype_policy).wide_dtype)
 
 
 def _tlr_geometry(m: int):
@@ -103,50 +125,58 @@ def _ns(mesh, *spec):
 
 
 @register("dist_tlr_pipeline_lowerable")
-def _tlr_pipeline(shape, mesh):
+def _tlr_pipeline(shape, mesh, dtype_policy=None):
     from .configs.geostat import GEOSTAT_TLR as cfg
     from .core.dist_tlr import dist_tlr_pipeline_lowerable
     row = _row_axes(mesh)
     m = shape.matrix_dim
     nb, kmax = _tlr_geometry(m)
     fn, specs = dist_tlr_pipeline_lowerable(
-        shape.n_locations, shape.p, _params(), tile_size=nb, max_rank=kmax,
+        shape.n_locations, shape.p, _params(_policy_wide(dtype_policy)),
+        tile_size=nb, max_rank=kmax,
         tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
-        super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic)
+        super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic,
+        dtype_policy=dtype_policy)
     return Lowerable(fn, specs, (_ns(mesh, row, None), _ns(mesh, row)),
                      matrix_dim=m, config=_tlr_lint_config(nb, kmax))
 
 
 @register("dist_tlr_gen_lowerable")
-def _tlr_gen(shape, mesh):
+def _tlr_gen(shape, mesh, dtype_policy=None):
+    import jax.numpy as jnp
+
     from .core.dist_tlr import dist_tlr_gen_lowerable
     row = _row_axes(mesh)
     m = shape.matrix_dim
     nb, kmax = _tlr_geometry(m)
+    wide = _policy_wide(dtype_policy)
     fn, specs = dist_tlr_gen_lowerable(
-        shape.n_locations, shape.p, _params(), tile_size=nb, gen="xla",
-        mesh=mesh, row_axes=row)
+        shape.n_locations, shape.p, _params(wide), tile_size=nb, gen="xla",
+        mesh=mesh, row_axes=row,
+        dtype=jnp.float32 if wide is None else wide)
     return Lowerable(fn, specs, (_ns(mesh, row, None),), matrix_dim=m,
                      config=_tlr_lint_config(nb, kmax))
 
 
 @register("dist_tlr_compress_lowerable")
-def _tlr_compress(shape, mesh):
+def _tlr_compress(shape, mesh, dtype_policy=None):
     from .configs.geostat import GEOSTAT_TLR as cfg
     from .core.dist_tlr import dist_tlr_compress_lowerable
     row = _row_axes(mesh)
     m = shape.matrix_dim
     nb, kmax = _tlr_geometry(m)
     fn, specs = dist_tlr_compress_lowerable(
-        shape.n_locations, shape.p, _params(), tile_size=nb, max_rank=kmax,
+        shape.n_locations, shape.p, _params(_policy_wide(dtype_policy)),
+        tile_size=nb, max_rank=kmax,
         tol=cfg.tol, nugget=1e-8, gen="xla", mesh=mesh, row_axes=row,
-        block_cyclic=cfg.block_cyclic, shard_svd=True)
+        block_cyclic=cfg.block_cyclic, shard_svd=True,
+        dtype_policy=dtype_policy)
     return Lowerable(fn, specs, (_ns(mesh, row, None),), matrix_dim=m,
                      config=_tlr_lint_config(nb, kmax))
 
 
 @register("dist_tlr_lowerable")
-def _tlr_factorize(shape, mesh):
+def _tlr_factorize(shape, mesh, dtype_policy=None):
     from .configs.geostat import GEOSTAT_TLR as cfg
     from .core.dist_tlr import dist_tlr_in_shardings, dist_tlr_lowerable
     row = _row_axes(mesh)
@@ -155,7 +185,7 @@ def _tlr_factorize(shape, mesh):
     fn, specs = dist_tlr_lowerable(
         m // nb, nb, kmax, tol=cfg.tol, mesh=mesh, row_axes=row,
         super_panels=cfg.super_panels, block_cyclic=cfg.block_cyclic,
-        return_factor=True)
+        return_factor=True, dtype_policy=dtype_policy)
     sh = dist_tlr_in_shardings(mesh=mesh, row_axes=row,
                                block_cyclic=cfg.block_cyclic)
     return Lowerable(fn, specs, sh, donate_argnums=(0, 1, 2, 3),

@@ -1,0 +1,26 @@
+"""P1 pair: the POTRF/TRSM spine running narrower than the policy's wide
+dtype — the diagonal is where TLR Cholesky loses accuracy first, so a
+narrow value at these sinks is an error (widen the diagonal stack)."""
+import jax
+import jax.numpy as jnp
+
+SHAPE = (8, 64, 64)
+
+
+def _fn(a, b):
+    l = jnp.linalg.cholesky(a)
+    x = jax.vmap(lambda lk, bk: jax.lax.linalg.triangular_solve(
+        lk, bk, left_side=True, lower=True))(l, b)
+    return jnp.sum(x)
+
+
+def make_bad():
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float32),
+             jax.ShapeDtypeStruct(SHAPE, jnp.float32))
+    return _fn, specs, dict()
+
+
+def make_good():
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float64),
+             jax.ShapeDtypeStruct(SHAPE, jnp.float64))
+    return _fn, specs, dict()

@@ -1,0 +1,49 @@
+"""P2 pair: recompress QR and the pair-GEMM batch running on native-wide
+operands when the policy allows them narrow — wasted bandwidth/MXU.  The
+good form downcasts the stack before decomposing; its wide GEMM is exempt
+because one operand is a sanctioned up-cast of narrow storage (the
+TRSM/SYRK widening-boundary pattern)."""
+import jax
+import jax.numpy as jnp
+
+SHAPE = (16, 128, 128)           # f64: 2 MB per operand, above warn bytes
+
+
+def make_bad():
+    def fn(x, y):
+        q, r = jnp.linalg.qr(x)                  # wide decomposition (P2a)
+        z = q @ y                                # native-wide pair GEMM (P2b)
+        return jnp.sum(z) + jnp.sum(r)
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float64),
+             jax.ShapeDtypeStruct(SHAPE, jnp.float64))
+    return fn, specs, dict()
+
+
+def make_bad_suppressed():
+    # Distinct shape on purpose: jax caches inner-jit traces (qr) by aval,
+    # and a cache hit would reuse the *first* call site's source lines —
+    # the suppression comments here would then miss.
+    shape = (24, 96, 96)
+
+    def fn(x, y):
+        # spmdlint: ignore[P2] wide QR kept on purpose for this audit
+        q, r = jnp.linalg.qr(x)
+        # spmdlint: ignore[P2] native-wide GEMM kept on purpose
+        z = q @ y
+        return jnp.sum(z) + jnp.sum(r)
+
+    specs = (jax.ShapeDtypeStruct(shape, jnp.float64),
+             jax.ShapeDtypeStruct(shape, jnp.float64))
+    return fn, specs, dict()
+
+
+def make_good():
+    def fn(x, y):
+        q, r = jnp.linalg.qr(x.astype(jnp.float32))   # narrow decomposition
+        z = q.astype(jnp.float64) @ y            # up-cast of narrow: exempt
+        return jnp.sum(z) + jnp.sum(r)
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float64),
+             jax.ShapeDtypeStruct(SHAPE, jnp.float64))
+    return fn, specs, dict()

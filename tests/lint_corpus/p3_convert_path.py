@@ -1,0 +1,23 @@
+"""P3 pair: convert-of-convert on one dataflow path.  The wide->narrow->
+wide round trip moves the value through memory twice for nothing (warning
+above the byte threshold); converting once — or not at all — is free."""
+import jax
+import jax.numpy as jnp
+
+SHAPE = (1024, 512)              # f64: 4 MB, above convert_warn_bytes
+
+
+def make_bad():
+    def fn(x):
+        return jnp.tanh(x.astype(jnp.float32).astype(jnp.float64))
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float64),)
+    return fn, specs, dict()
+
+
+def make_good():
+    def fn(x):
+        return jnp.tanh(x)
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float64),)
+    return fn, specs, dict()

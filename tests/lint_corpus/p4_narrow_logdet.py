@@ -1,0 +1,23 @@
+"""P4 pair: the logdet sum-of-logs accumulating narrower than the policy's
+wide dtype — the classic silent fp32 logdet.  Widen the diagonal before
+the log-sum (the summands span many magnitudes; the sum must not)."""
+import jax
+import jax.numpy as jnp
+
+SHAPE = (4096,)
+
+
+def make_bad():
+    def fn(d):
+        return 2.0 * jnp.sum(jnp.log(d))
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float32),)
+    return fn, specs, dict()
+
+
+def make_good():
+    def fn(d):
+        return 2.0 * jnp.sum(jnp.log(d.astype(jnp.float64)))
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float32),)
+    return fn, specs, dict()

@@ -1,0 +1,24 @@
+"""P5 pair: a float dtype the policy never declared (f16 creeping into an
+f64/f32 policy) at a traced site — error; every float array in the program
+must be the policy's wide or narrow dtype."""
+import jax
+import jax.numpy as jnp
+
+SHAPE = (256, 256)
+
+
+def make_bad():
+    def fn(x):
+        h = (x.astype(jnp.float16) * 2).astype(jnp.float32)
+        return jnp.sum(h)
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float32),)
+    return fn, specs, dict()
+
+
+def make_good():
+    def fn(x):
+        return jnp.sum(x * 2.0)
+
+    specs = (jax.ShapeDtypeStruct(SHAPE, jnp.float32),)
+    return fn, specs, dict()

@@ -38,12 +38,16 @@ def _artifact(**overrides):
         dist_loglik_compress_sharded_time_us=7.5e4,
         loglik_delta_compress_sharded=2e-5,
         loglik_delta_compress_sharded_vs_bc=1e-12,
+        dist_loglik_mixed_f32_time_us=7.8e4,
+        loglik_delta_mixed_f32=1.9e-4,
+        mle_param_recovery_err_mixed_f32=0.0,
         peak_temp_bytes=dict(gen_compress=1051040, factorize_masked=5543992,
                              factorize_bc=2513208, pipeline_masked=5557528,
                              pipeline_bc=2526808, factorize_bc_sharded=2513208,
                              pipeline_bc_sharded=2526808,
                              compress_sharded=812000,
-                             pipeline_compress_sharded=2430000),
+                             pipeline_compress_sharded=2430000,
+                             pipeline_mixed_f32=1300000),
         replicated_temp_bytes=0, undonated_dead_bytes=0,
         fit_factor_time_us=6e5, predict_batch_p50_us=3e4,
         predictions_per_sec=2133.0, loglik_delta_predict=3e-4,
@@ -202,6 +206,46 @@ def test_fault_tolerance_gate(check_bench):
     assert check_bench.check_artifact(
         _artifact(recovery_retry_overhead_frac=0.8),
         max_retry_frac=1.0) == []
+
+
+def test_mixed_precision_gate(check_bench):
+    """The PR-9 mixed-precision keys are required: the mixed loglik delta
+    obeys the loglik_delta* gate, the MLE parameter recovery error is
+    bounded, and the mixed pipeline must compile to a strictly smaller
+    temp footprint than the fp64 one (else the policy bought nothing)."""
+    for key in ("dist_loglik_mixed_f32_time_us", "loglik_delta_mixed_f32",
+                "mle_param_recovery_err_mixed_f32"):
+        art = _artifact()
+        del art[key]
+        errs = check_bench.check_artifact(art)
+        assert any(f"missing key: {key}" in e for e in errs)
+    art = _artifact()
+    del art["peak_temp_bytes"]["pipeline_mixed_f32"]
+    errs = check_bench.check_artifact(art)
+    assert any("peak_temp_bytes['pipeline_mixed_f32']" in e for e in errs)
+    # the mixed delta rides the loglik_delta* gate
+    errs = check_bench.check_artifact(_artifact(loglik_delta_mixed_f32=5e-3))
+    assert any("loglik_delta_mixed_f32" in e for e in errs)
+    # parameter recovery drift past the default 5% fails …
+    errs = check_bench.check_artifact(
+        _artifact(mle_param_recovery_err_mixed_f32=0.2))
+    assert any("mle_param_recovery_err_mixed_f32" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(mle_param_recovery_err_mixed_f32=float("nan")))
+    assert any("mle_param_recovery_err_mixed_f32" in e for e in errs)
+    errs = check_bench.check_artifact(
+        _artifact(mle_param_recovery_err_mixed_f32=-0.1))
+    assert any("mle_param_recovery_err_mixed_f32" in e for e in errs)
+    # … but an explicit looser bound admits the same artifact
+    assert check_bench.check_artifact(
+        _artifact(mle_param_recovery_err_mixed_f32=0.2),
+        max_recovery_err=0.5) == []
+    # mixed temps must be strictly below the fp64 pipeline's
+    art = _artifact()
+    art["peak_temp_bytes"]["pipeline_mixed_f32"] = \
+        art["peak_temp_bytes"]["pipeline_compress_sharded"]
+    errs = check_bench.check_artifact(art)
+    assert any("pipeline_mixed_f32" in e and "shrink" in e for e in errs)
 
 
 def test_peak_temp_bytes_gate(check_bench):

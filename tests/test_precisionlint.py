@@ -1,0 +1,206 @@
+"""Precision-lint (rules P1-P5) against tests/lint_corpus/ and the CLI."""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint_lowerable
+from repro.core.precision import POLICIES, PrecisionPolicy, resolve_policy
+
+CORPUS = os.path.join(os.path.dirname(__file__), "lint_corpus")
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+POLICY = "mixed_f32"
+
+
+def _corpus(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(CORPUS, name + ".py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _lint(case, policy=POLICY, **extra):
+    fn, specs, kw = case()
+    kw.update(extra)
+    return lint_lowerable(fn, specs, policy=policy, **kw)
+
+
+def _live(report, rule, min_severity="warning"):
+    order = {"info": 0, "warning": 1, "error": 2}
+    return [f for f in report.findings
+            if f.rule == rule and not f.suppressed
+            and order[f.severity] >= order[min_severity]]
+
+
+# ---------------------------------------------------------------------------
+# PrecisionPolicy model
+# ---------------------------------------------------------------------------
+
+
+def test_policy_registry_round_trip():
+    for name, policy in POLICIES.items():
+        assert policy.name == name
+        assert resolve_policy(name) is policy
+        assert resolve_policy(policy) is policy
+    assert resolve_policy(None) is None
+    with pytest.raises(KeyError) as e:
+        resolve_policy("nope")
+    assert "mixed_f32" in str(e.value)       # choices listed in the error
+
+
+def test_policy_dtypes_and_uniform():
+    f64 = POLICIES["f64"]
+    assert f64.uniform
+    assert f64.wide_dtype == f64.narrow_dtype
+    mixed = POLICIES["mixed_f32"]
+    assert not mixed.uniform
+    assert mixed.wide_dtype.itemsize == 8
+    assert mixed.narrow_dtype.itemsize == 4
+    bf16 = POLICIES["mixed_bf16"]
+    assert not bf16.uniform
+    assert bf16.narrow_dtype.itemsize == 2
+    custom = PrecisionPolicy("w", "float32", "float32")
+    assert custom.uniform
+
+
+# ---------------------------------------------------------------------------
+# Rule-by-rule corpus pairs (all linted under mixed_f32)
+# ---------------------------------------------------------------------------
+
+
+def test_p1_narrow_sink_pair():
+    mod = _corpus("p1_narrow_sink")
+    bad = _lint(mod.make_bad)
+    hits = _live(bad, "P1", "error")
+    assert hits, bad.findings
+    ops = {f.op for f in hits}
+    assert "cholesky" in ops and "triangular_solve" in ops
+    assert all("must-be-wide sink" in f.message for f in hits)
+    good = _lint(mod.make_good)
+    assert not _live(good, "P1", "info"), good.findings
+
+
+def test_p2_wide_batch_pair():
+    mod = _corpus("p2_wide_batch")
+    bad = _lint(mod.make_bad)
+    hits = _live(bad, "P2")
+    assert hits, bad.findings
+    ops = {f.op for f in hits}
+    assert "qr" in ops, bad.findings         # P2a: wide decomposition
+    assert "dot_general" in ops, bad.findings  # P2b: native-wide GEMM
+    good = _lint(mod.make_good)
+    assert not _live(good, "P2", "info"), good.findings
+
+
+def test_p2_suppression_comment_reaches():
+    mod = _corpus("p2_wide_batch")
+    rep = _lint(mod.make_bad_suppressed)
+    p2 = [f for f in rep.findings if f.rule == "P2"]
+    assert p2, rep.findings
+    assert all(f.suppressed for f in p2), rep.findings
+    assert any("on purpose" in f.suppress_reason for f in p2)
+    assert not _live(rep, "P2", "info")
+
+
+def test_p3_convert_path_pair():
+    mod = _corpus("p3_convert_path")
+    bad = _lint(mod.make_bad)
+    hits = _live(bad, "P3")
+    assert hits, bad.findings
+    assert any("round-trip" in f.message for f in hits)
+    assert hits[0].bytes >= 1 << 20          # the f32 leg actually moved
+    good = _lint(mod.make_good)
+    assert not _live(good, "P3", "info"), good.findings
+
+
+def test_p4_narrow_logdet_pair():
+    mod = _corpus("p4_narrow_logdet")
+    bad = _lint(mod.make_bad)
+    hits = _live(bad, "P4", "error")
+    assert hits, bad.findings
+    assert "logdet" in hits[0].message
+    good = _lint(mod.make_good)
+    assert not _live(good, "P4", "info"), good.findings
+
+
+def test_p5_undeclared_dtype_pair():
+    mod = _corpus("p5_undeclared_dtype")
+    bad = _lint(mod.make_bad)
+    hits = _live(bad, "P5", "error")
+    assert hits, bad.findings
+    assert any("float16" in f.message for f in hits)
+    good = _lint(mod.make_good)
+    assert not _live(good, "P5", "info"), good.findings
+
+
+# ---------------------------------------------------------------------------
+# Policy arming semantics
+# ---------------------------------------------------------------------------
+
+
+def test_no_policy_disarms_p_rules():
+    mod = _corpus("p1_narrow_sink")
+    rep = _lint(mod.make_bad, policy=None)
+    assert not [f for f in rep.findings if f.rule.startswith("P")], \
+        rep.findings
+
+
+def test_uniform_policy_disarms_p2():
+    # under the uniform f64 policy wide work is the contract, not waste
+    mod = _corpus("p2_wide_batch")
+    rep = _lint(mod.make_bad, policy="f64")
+    assert not _live(rep, "P2", "info"), rep.findings
+
+
+def test_uniform_policy_still_catches_p1():
+    # f64-uniform: a narrow cholesky is still a policy violation
+    mod = _corpus("p1_narrow_sink")
+    rep = _lint(mod.make_bad, policy="f64")
+    assert _live(rep, "P1", "error"), rep.findings
+
+
+# ---------------------------------------------------------------------------
+# CLI: --policy / --built-with exit codes and the shipped-pipeline gate
+# ---------------------------------------------------------------------------
+
+
+def _cli(*argv, timeout=600):
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+def test_cli_unknown_policy_is_usage_error():
+    out = _cli("--target", "dist_tlr_pipeline_lowerable",
+               "--policy", "nope", timeout=120)
+    assert out.returncode == 2, out.stderr
+    assert "unknown --policy" in out.stderr
+
+
+def test_cli_pipeline_mixed_f32_lints_clean():
+    """The tentpole acceptance gate as a test: the shipped TLR pipeline
+    certifies 0-error under mixed_f32 (the CLI exits 0)."""
+    out = _cli("--target", "dist_tlr_pipeline_lowerable",
+               "--mesh", "cpu8", "--shape", "mle_4k",
+               "--policy", "mixed_f32")
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "'errors': 0" in out.stdout, out.stdout
+
+
+def test_cli_built_with_f64_reports_p2():
+    """--built-with f64 audits the unpoliced fp64 path: P2 narrowing
+    candidates appear, and --fail-on warning turns them into the gate."""
+    out = _cli("--target", "dist_tlr_pipeline_lowerable",
+               "--mesh", "cpu8", "--shape", "mle_4k",
+               "--policy", "mixed_f32", "--built-with", "f64",
+               "--fail-on", "warning")
+    assert out.returncode == 1, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "P2" in out.stdout, out.stdout
