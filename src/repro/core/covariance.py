@@ -311,7 +311,8 @@ def morton_order(locs) -> np.ndarray:
     hi = locs.max(axis=0)
     span = np.where(hi > lo, hi - lo, 1.0)
     q = np.clip(((locs - lo) / span * 65535.0).astype(np.uint64), 0, 65535)
-    code = _interleave_bits_u32(q[:, 0]) | (_interleave_bits_u32(q[:, 1]) << np.uint64(1))
+    code = _interleave_bits_u32(q[:, 0]) | (
+        _interleave_bits_u32(q[:, 1]) << np.uint64(1))
     return np.argsort(code, kind="stable")
 
 

@@ -47,7 +47,8 @@ def loglik_from_chol(chol, z, keep_chol: bool = False,
 
 
 def exact_loglik(locs, z, params: MaternParams, representation: str = "I",
-                 nugget: float = 0.0, dists=None, keep_chol: bool = False) -> LoglikResult:
+                 nugget: float = 0.0, dists=None,
+                 keep_chol: bool = False) -> LoglikResult:
     """Dense-Cholesky evaluation of Eq. (1)."""
     sigma = build_sigma(locs, params, representation=representation,
                         nugget=nugget, dists=dists)

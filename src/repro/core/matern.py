@@ -81,7 +81,8 @@ def _kv_temme_series(mu, x, max_iter=200):
     fact = jnp.where(jnp.abs(pimu) < 1e-12, 1.0, pimu / jnp.sin(pimu))
     d = -jnp.log(x2)
     e = mu * d
-    fact2 = jnp.where(jnp.abs(e) < 1e-12, 1.0, jnp.sinh(e) / jnp.where(jnp.abs(e) < 1e-12, 1.0, e))
+    fact2 = jnp.where(jnp.abs(e) < 1e-12, 1.0,
+                      jnp.sinh(e) / jnp.where(jnp.abs(e) < 1e-12, 1.0, e))
     gam1, gam2, gampl, gammi = _chepolish(mu, dtype)
     ff0 = fact * (gam1 * jnp.cosh(e) + gam2 * fact2 * d)
     ee = jnp.exp(e)
@@ -255,7 +256,8 @@ def matern_correlation(u, nu):
     nu = jnp.asarray(nu, dtype)
     zero = u <= 0.0
     us = jnp.where(zero, 1.0, u)
-    lognorm = (nu - 1.0) * jnp.log(jnp.asarray(2.0, dtype)) + jax.scipy.special.gammaln(nu)
+    lognorm = ((nu - 1.0) * jnp.log(jnp.asarray(2.0, dtype))
+               + jax.scipy.special.gammaln(nu))
     val = jnp.exp(nu * jnp.log(us) - lognorm) * kv(nu, us)
     return jnp.where(zero, jnp.ones_like(val), val)
 

@@ -133,8 +133,9 @@ def initial_guess(p: int, profile: bool, a0=0.1, nu0=1.0, dtype=jnp.float64):
     params = MaternParams(sigma2=jnp.ones((p,), dtype),
                           a=jnp.asarray(a0, dtype),
                           nu=jnp.full((p,), nu0, dtype),
-                          beta=jnp.eye(p, dtype=dtype) * 1.0 +
-                               (jnp.ones((p, p), dtype) - jnp.eye(p, dtype=dtype)) * 0.1)
+                          beta=jnp.eye(p, dtype=dtype) * 1.0
+                          + (jnp.ones((p, p), dtype)
+                             - jnp.eye(p, dtype=dtype)) * 0.1)
     return pack_params(params, profile)
 
 
